@@ -1,0 +1,184 @@
+"""Paper Table 5: early-termination methods on a SIFT1M-like dataset.
+
+APS (no offline tuning) vs:
+  Fixed  — one global nprobe, binary-searched offline per recall target
+  SPANN  — centroid-distance pruning threshold, binary-searched offline
+  LAET   — learned per-query nprobe predictor (ridge on centroid-distance
+           features) + calibration multiplier
+  Oracle — per-query minimal nprobe (ground-truth-driven lower bound)
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.data import datasets
+
+from .common import Rows, build_index, recall_at, sift_like
+
+
+def _scan_at_nprobe(idx, q, k, nprobe):
+    return idx.search(q, k, nprobe=int(max(1, nprobe)), record_stats=False)
+
+
+def _recall_run(idx, qs, gt, k, nprobe_fn):
+    recs, nps, t0 = [], [], time.perf_counter()
+    for i, q in enumerate(qs):
+        r = _scan_at_nprobe(idx, q, k, nprobe_fn(i))
+        recs.append(recall_at(r.ids, gt[i]))
+        nps.append(r.nprobe[0])
+    dt = (time.perf_counter() - t0) / len(qs)
+    return float(np.mean(recs)), float(np.mean(nps)), dt * 1e6
+
+
+def _oracle_nprobes(idx, qs, gt, k):
+    """Minimal per-query nprobe reaching full per-query recall target."""
+    out = []
+    for i, q in enumerate(qs):
+        lo, hi = 1, idx.num_partitions
+        # exponential then binary search on per-query recall
+        def rec_at(np_):
+            r = _scan_at_nprobe(idx, q, k, np_)
+            return recall_at(r.ids, gt[i])
+        n = 1
+        while rec_at(n) < 1.0 and n < idx.num_partitions:
+            n *= 2
+        lo, hi = n // 2 + 1, min(n, idx.num_partitions)
+        while lo < hi:
+            mid = (lo + hi) // 2
+            if rec_at(mid) >= 1.0:
+                hi = mid
+            else:
+                lo = mid + 1
+        out.append(lo)
+    return np.asarray(out)
+
+
+def run(n=20_000, dim=32, n_queries=100, k=10, targets=(0.8, 0.9, 0.99),
+        seed=0):
+    ds = sift_like(n, dim, seed)
+    idx = build_index(ds)
+    rows = Rows()
+    rng = np.random.default_rng(2)
+    q_tune = datasets.queries_near(ds, 64, seed=3)
+    gt_tune = ds.ground_truth(q_tune, k)
+    qs = datasets.queries_near(ds, n_queries, seed=4)
+    gt = ds.ground_truth(qs, k)
+
+    # per-query oracle nprobes on the tune set (shared by LAET + Oracle)
+    t0 = time.perf_counter()
+    oracle_tune = _oracle_nprobes(idx, q_tune, gt_tune, k)
+    oracle_tune_time = time.perf_counter() - t0
+
+    cents = idx.levels[0].centroids
+
+    def feats(qbatch):
+        d = (np.sum(qbatch ** 2, 1)[:, None]
+             + np.sum(cents ** 2, 1)[None, :] - 2.0 * qbatch @ cents.T)
+        ds_ = np.sort(d, axis=1)[:, :16]
+        return np.concatenate([ds_[:, :1], ds_ / np.maximum(
+            ds_[:, :1], 1e-9)], axis=1)
+
+    for target in targets:
+        # ---- APS: zero tuning ----
+        recs, nps = [], []
+        t0 = time.perf_counter()
+        for i in range(n_queries):
+            r = idx.search(qs[i], k, recall_target=target,
+                           record_stats=False)
+            recs.append(recall_at(r.ids, gt[i]))
+            nps.append(r.nprobe[0])
+        dt = (time.perf_counter() - t0) / n_queries * 1e6
+        rows.add(method="APS", target=target, recall=float(np.mean(recs)),
+                 nprobe=float(np.mean(nps)), latency_us=dt, tuning_s=0.0)
+
+        # ---- Fixed: binary search global nprobe on the tune set ----
+        t0 = time.perf_counter()
+        lo, hi = 1, idx.num_partitions
+        while lo < hi:
+            mid = (lo + hi) // 2
+            r_, _, _ = _recall_run(idx, q_tune, gt_tune, k, lambda i: mid)
+            if r_ >= target:
+                hi = mid
+            else:
+                lo = mid + 1
+        fixed_np = lo
+        tune_t = time.perf_counter() - t0
+        r_, np_, dt = _recall_run(idx, qs, gt, k, lambda i: fixed_np)
+        rows.add(method="Fixed", target=target, recall=r_, nprobe=np_,
+                 latency_us=dt, tuning_s=tune_t)
+
+        # ---- SPANN: prune by centroid-distance ratio eps ----
+        t0 = time.perf_counter()
+        d_tune = feats(q_tune)
+
+        def spann_nprobes(qbatch, eps):
+            d = (np.sum(qbatch ** 2, 1)[:, None]
+                 + np.sum(cents ** 2, 1)[None, :] - 2.0 * qbatch @ cents.T)
+            dsort = np.sort(d, axis=1)
+            keep = dsort <= (1.0 + eps) * dsort[:, :1]
+            return keep.sum(1)
+
+        lo_e, hi_e = 0.0, 4.0
+        for _ in range(12):
+            mid = (lo_e + hi_e) / 2
+            nps_t = spann_nprobes(q_tune, mid)
+            r_, _, _ = _recall_run(idx, q_tune, gt_tune, k,
+                                   lambda i: nps_t[i])
+            if r_ >= target:
+                hi_e = mid
+            else:
+                lo_e = mid
+        eps = hi_e
+        tune_t = time.perf_counter() - t0
+        nps_q = spann_nprobes(qs, eps)
+        r_, np_, dt = _recall_run(idx, qs, gt, k, lambda i: nps_q[i])
+        rows.add(method="SPANN", target=target, recall=r_, nprobe=np_,
+                 latency_us=dt, tuning_s=tune_t)
+
+        # ---- LAET: ridge regression on oracle nprobes + calibration ----
+        t0 = time.perf_counter()
+        X = feats(q_tune)
+        y = oracle_tune.astype(np.float64)
+        w, *_ = np.linalg.lstsq(
+            np.concatenate([X, np.ones((len(X), 1))], 1), y, rcond=None)
+        mult = 1.0
+        for _ in range(8):
+            pred = np.concatenate([X, np.ones((len(X), 1))], 1) @ w * mult
+            r_, _, _ = _recall_run(idx, q_tune, gt_tune, k,
+                                   lambda i: pred[i])
+            if r_ >= target:
+                break
+            mult *= 1.3
+        tune_t = time.perf_counter() - t0 + oracle_tune_time
+        Xq = np.concatenate([feats(qs), np.ones((len(qs), 1))], 1)
+        pred_q = Xq @ w * mult
+        r_, np_, dt = _recall_run(idx, qs, gt, k, lambda i: pred_q[i])
+        rows.add(method="LAET", target=target, recall=r_, nprobe=np_,
+                 latency_us=dt, tuning_s=tune_t)
+
+        # ---- Oracle: per-query minimal nprobe for the *target* ----
+        t0 = time.perf_counter()
+        per_q = []
+        for i in range(n_queries):
+            lo2, hi2 = 1, idx.num_partitions
+            while lo2 < hi2:
+                mid = (lo2 + hi2) // 2
+                r = _scan_at_nprobe(idx, qs[i], k, mid)
+                if recall_at(r.ids, gt[i]) >= target:
+                    hi2 = mid
+                else:
+                    lo2 = mid + 1
+            per_q.append(lo2)
+        tune_t = time.perf_counter() - t0
+        r_, np_, dt = _recall_run(idx, qs, gt, k, lambda i: per_q[i])
+        rows.add(method="Oracle", target=target, recall=r_, nprobe=np_,
+                 latency_us=dt, tuning_s=tune_t)
+
+    rows.print_table("Table 5 analogue: early-termination methods")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

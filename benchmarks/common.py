@@ -1,0 +1,77 @@
+"""Shared helpers for the paper-table benchmarks."""
+from __future__ import annotations
+
+import os
+import time
+from contextlib import contextmanager
+from dataclasses import dataclass, field
+from typing import Dict, List
+
+import numpy as np
+
+from repro.core import QuakeConfig, QuakeIndex
+from repro.data import datasets
+
+RESULTS_DIR = os.environ.get("BENCH_RESULTS", "results")
+
+
+def sift_like(n=20_000, dim=32, seed=0):
+    """Clustered dataset standing in for SIFT1M at container scale."""
+    return datasets.clustered(n, dim, n_clusters=max(n // 500, 16),
+                              seed=seed)
+
+
+def build_index(ds, num_partitions=None, **cfg):
+    c = QuakeConfig(metric=ds.metric, **cfg)
+    return QuakeIndex.build(ds.vectors, config=c,
+                            num_partitions=num_partitions, kmeans_iters=6)
+
+
+def recall_at(ids: np.ndarray, gt: np.ndarray) -> float:
+    k = gt.shape[-1]
+    return len(set(ids.tolist()) & set(gt.tolist())) / k
+
+
+@dataclass
+class Rows:
+    rows: List[Dict] = field(default_factory=list)
+
+    def add(self, **kw):
+        self.rows.append(kw)
+
+    def print_table(self, title: str):
+        print(f"\n== {title} ==")
+        if not self.rows:
+            return
+        keys = list(self.rows[0])
+        widths = {k: max(len(k), *(len(_fmt(r.get(k))) for r in self.rows))
+                  for k in keys}
+        print("  ".join(k.ljust(widths[k]) for k in keys))
+        for r in self.rows:
+            print("  ".join(_fmt(r.get(k)).ljust(widths[k]) for k in keys))
+
+    def csv_lines(self, prefix: str):
+        out = []
+        for r in self.rows:
+            name = f"{prefix}/" + "/".join(
+                str(r[k]) for k in r if k in ("method", "config", "target",
+                                              "batch", "variant"))
+            us = r.get("latency_us", r.get("us_per_call", 0))
+            derived = {k: v for k, v in r.items()
+                       if k not in ("latency_us", "us_per_call")}
+            out.append(f"{name},{us},{derived}")
+        return out
+
+
+def _fmt(v):
+    if isinstance(v, float):
+        return f"{v:.3g}"
+    return str(v)
+
+
+@contextmanager
+def timer():
+    box = {}
+    t0 = time.perf_counter()
+    yield box
+    box["s"] = time.perf_counter() - t0

@@ -1,0 +1,117 @@
+"""§Perf hillclimb driver for the paper's own cells (quake-ann serve).
+
+Lowers ``serve_fixed_1k`` / ``serve_adaptive_1k`` on the single-pod
+production mesh under each scan implementation and reports the three
+roofline terms.  Must run in a fresh process (device-count flag):
+
+    PYTHONPATH=src python -m benchmarks.perf_quake [--shape serve_fixed_1k]
+
+Ladder:
+  gather        paper-faithful XLA baseline (per-query gather + einsum)
+  union_jnp     + batch dedupe (paper §7.4 multi-query policy per shard)
+  union_pallas  + scalar-prefetch Pallas kernel (beyond-paper; each block
+                streams HBM->VMEM once).  The CPU dry-run lowers the
+                interpret-mode kernel (slice-loop HLO); the TPU-native
+                traffic model (U*S*d*bytes, exact) is printed alongside.
+  union_skew4   union_pallas with union_cap = B*n/4 — the paper's read-skew
+                regime (Fig. 1a: hot partitions shared across the batch).
+"""
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+import argparse
+import json
+import time
+
+
+def run(shape: str, variants=None, out_path="results/perf_quake.json"):
+    import jax
+    from repro.configs.quake_arch import build_quake, FULL, QUAKE_SHAPES
+    from repro.launch.mesh import make_production_mesh
+    from repro.roofline.analysis import analyze_compiled
+
+    mesh = make_production_mesh()
+    sh = QUAKE_SHAPES[shape]
+    b = sh.get("batch", 1024)
+    n_shards = 16
+    b_loc = b // 16                      # model-axis query shards
+    n_loc = max(1, -(-sh.get("nprobe", 16) // n_shards))
+    full_union = b_loc * (n_loc if shape == "serve_fixed_1k" else 2)
+
+    all_variants = {
+        "gather": {},
+        "union_jnp": {"scan_impl": "union_jnp"},
+        "union_pallas": {"scan_impl": "union_pallas"},
+        "union_skew4": {"scan_impl": "union_pallas",
+                        "union_cap": max(full_union // 4, 1)},
+        "union_bf16": {"scan_impl": "union_pallas",
+                       "storage_dtype": "bf16"},
+        "bf16_skew4": {"scan_impl": "union_pallas",
+                       "storage_dtype": "bf16",
+                       "union_cap": max(full_union // 4, 1)},
+        "union_int8": {"scan_impl": "union_pallas",
+                       "storage_dtype": "int8"},
+        "int8_skew4": {"scan_impl": "union_pallas",
+                       "storage_dtype": "int8",
+                       "union_cap": max(full_union // 4, 1)},
+    }
+    chosen = {k: v for k, v in all_variants.items()
+              if variants is None or k in variants}
+
+    results = {}
+    for name, ov in chosen.items():
+        lw = build_quake(shape, mesh, engine_overrides=ov)
+        t0 = time.perf_counter()
+        lowered = lw.lower()
+        t1 = time.perf_counter()
+        compiled = lowered.compile()
+        t2 = time.perf_counter()
+        r = analyze_compiled(compiled, mesh, arch="quake-ann", shape=shape)
+        r["lower_s"] = round(t1 - t0, 1)
+        r["compile_s"] = round(t2 - t1, 1)
+        r["variant"] = name
+        # TPU-native analytic traffic for the pallas kernel cell: the
+        # interpret-mode HLO loops slice blocks through XLA buffers; on
+        # TPU/Mosaic each selected block streams HBM->VMEM exactly once.
+        if "pallas" in ov.get("scan_impl", ""):
+            u = ov.get("union_cap", full_union)
+            s_cap, d = FULL["s_cap"], FULL["d"]
+            sd = ov.get("storage_dtype", "f32")
+            vb = {"f32": 4, "bf16": 2, "int8": 1}[sd]
+            per_slot_meta = 8 if sd == "int8" else 4   # scales + aux | aux
+            native = (u * s_cap * d * vb           # selected blocks, once
+                      + u * s_cap * per_slot_meta  # aux (+ dequant scales)
+                      + b_loc * (d + 2 * u) * 4    # queries + qmask + qc
+                      + 2 * b_loc * 128 * 8)       # top-k out
+            r["tpu_native_bytes_gb"] = round(native / 1e9, 4)
+            r["tpu_native_t_memory_ms"] = round(native / 819e9 * 1e3, 4)
+        results[name] = r
+        print(f"{name:>13}: t_comp {r['t_compute_ms']:.3f}ms  "
+              f"t_mem {r['t_memory_ms']:.3f}ms  "
+              f"t_coll {r['t_collective_ms']:.3f}ms  "
+              f"dom={r['dominant']}"
+              + (f"  [TPU-native mem {r['tpu_native_t_memory_ms']:.3f}ms]"
+                 if "tpu_native_t_memory_ms" in r else ""))
+
+    os.makedirs(os.path.dirname(out_path), exist_ok=True)
+    existing = {}
+    if os.path.exists(out_path):
+        with open(out_path) as f:
+            existing = json.load(f)
+    existing[shape] = results
+    with open(out_path, "w") as f:
+        json.dump(existing, f, indent=1)
+    print(f"-> {out_path}")
+    return results
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--shape", default="serve_fixed_1k",
+                    choices=["serve_fixed_1k", "serve_adaptive_1k"])
+    ap.add_argument("--variants", default=None,
+                    help="comma list (default: all)")
+    args = ap.parse_args()
+    run(args.shape,
+        args.variants.split(",") if args.variants else None)

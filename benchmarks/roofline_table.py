@@ -1,0 +1,47 @@
+"""Render the roofline table (EXPERIMENTS.md §Roofline) from dryrun.json."""
+from __future__ import annotations
+
+import argparse
+import json
+
+
+def render(path="results/dryrun.json", mesh="single_pod",
+           markdown=True) -> str:
+    with open(path) as f:
+        results = json.load(f)
+    rows = []
+    for key, r in sorted(results.items()):
+        m, arch, shape = key.split("/")
+        if m != mesh or "error" in r:
+            continue
+        rows.append(r)
+    hdr = ["arch", "shape", "GB/dev", "t_comp(ms)", "t_mem(ms)",
+           "t_coll(ms)", "dominant", "useful", "roofline%"]
+    lines = []
+    if markdown:
+        lines.append("| " + " | ".join(hdr) + " |")
+        lines.append("|" + "---|" * len(hdr))
+    for r in rows:
+        useful = r.get("useful_flops_ratio")
+        frac = r.get("roofline_fraction")
+        vals = [r["arch"], r["shape"],
+                f"{r['bytes_per_device_gb']:.2f}",
+                f"{r['t_compute_ms']:.2f}", f"{r['t_memory_ms']:.2f}",
+                f"{r['t_collective_ms']:.2f}", r["dominant"],
+                f"{useful:.2f}" if useful else "-",
+                f"{100*frac:.0f}%" if frac else "-"]
+        lines.append("| " + " | ".join(vals) + " |" if markdown
+                     else "  ".join(v.ljust(14) for v in vals))
+    return "\n".join(lines)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--path", default="results/dryrun.json")
+    ap.add_argument("--mesh", default="single_pod")
+    args = ap.parse_args()
+    print(render(args.path, args.mesh))
+
+
+if __name__ == "__main__":
+    main()

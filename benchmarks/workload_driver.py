@@ -1,0 +1,166 @@
+"""Workload replay driver + baseline maintenance policies (paper §7.2).
+
+Baselines are expressed as policy variants over the same index substrate
+(the paper likewise implements DeDrift/LIRE inside Quake):
+
+  quake      — APS + cost-model maintenance (the full system)
+  faiss-ivf  — fixed nprobe, no maintenance
+  lire       — size-threshold split/merge + reassignment, fixed nprobe
+  dedrift    — periodic recluster of the largest+smallest partitions
+               together (count constant), fixed nprobe
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.core import (LatencyModel, Maintainer, MaintenancePolicy,
+                        QuakeConfig, QuakeIndex)
+from repro.core import kmeans
+from repro.data.workload import Workload
+
+
+@dataclass
+class Trace:
+    method: str
+    query_lat_us: List[float] = field(default_factory=list)
+    recall: List[float] = field(default_factory=list)
+    partitions: List[int] = field(default_factory=list)
+    nprobe: List[float] = field(default_factory=list)
+    search_s: float = 0.0
+    update_s: float = 0.0
+    maint_s: float = 0.0
+
+    def summary(self) -> Dict:
+        return {"method": self.method,
+                "search_s": round(self.search_s, 2),
+                "update_s": round(self.update_s, 3),
+                "maint_s": round(self.maint_s, 3),
+                "total_s": round(self.search_s + self.update_s
+                                 + self.maint_s, 2),
+                "mean_recall": round(float(np.mean(self.recall)), 3)
+                if self.recall else None,
+                "recall_std": round(float(np.std(self.recall)), 3)
+                if self.recall else None,
+                "final_partitions": self.partitions[-1]
+                if self.partitions else None}
+
+
+def _dedrift_round(index: QuakeIndex, n_pairs: int = 4) -> None:
+    """DeDrift-style: recluster the biggest partitions together with the
+    smallest ones (partition count unchanged)."""
+    lvl = index.levels[0]
+    sizes = lvl.sizes()
+    if lvl.num_partitions < 2 * n_pairs:
+        return
+    big = np.argsort(sizes)[-n_pairs:]
+    small = np.argsort(sizes)[:n_pairs]
+    group = np.unique(np.concatenate([big, small]))
+    parts = [(lvl.vectors[j], lvl.ids[j]) for j in group]
+    cents, new_parts = kmeans.refine(parts, lvl.centroids[group], iters=2)
+    lvl.centroids[group] = cents
+    for g, (xg, ig) in zip(group, new_parts):
+        g = int(g)
+        lvl.vectors[g] = np.ascontiguousarray(xg)
+        lvl.ids[g] = ig
+        lvl.sqnorms[g] = np.sum(xg.astype(np.float64) ** 2,
+                                axis=1).astype(np.float32)
+        for ext in ig:
+            index.id_map[int(ext)] = g
+    index._aug_extra = [None] * len(index.levels)
+
+
+def tune_fixed_nprobe(index: QuakeIndex, wl: Workload, k: int,
+                      target: float, sample: int = 32) -> int:
+    """Initial-state binary search for the static baselines."""
+    rng = np.random.default_rng(0)
+    ds = wl.dataset
+    res = wl.initial_ids
+    qs = ds.vectors[rng.choice(res, size=sample)]
+    x_res = ds.vectors[res]
+    if ds.metric == "l2":
+        d = np.sum((x_res[None] - qs[:, None]) ** 2, -1)
+    else:
+        d = -(qs @ x_res.T)
+    gt = res[np.argsort(d, axis=1)[:, :k]]
+    lo, hi = 1, index.num_partitions
+    while lo < hi:
+        mid = (lo + hi) // 2
+        recs = []
+        for i in range(sample):
+            r = index.search(qs[i], k, nprobe=mid, record_stats=False)
+            recs.append(len(set(r.ids) & set(gt[i])) / k)
+        if np.mean(recs) >= target:
+            hi = mid
+        else:
+            lo = mid + 1
+    return lo
+
+
+def replay(wl: Workload, method: str, k: int = 10, target: float = 0.9,
+           maint_every: int = 1, seed: int = 0) -> Trace:
+    ds = wl.dataset
+    cfg = QuakeConfig(metric=ds.metric,
+                      enable_aps=(method == "quake"),
+                      recall_target=target)
+    index = QuakeIndex.build(wl.initial_vectors, wl.initial_ids, config=cfg,
+                             kmeans_iters=5)
+    if method != "quake":
+        cfg.fixed_nprobe = tune_fixed_nprobe(index, wl, k, target)
+
+    maintainer: Optional[Maintainer] = None
+    if method == "quake":
+        maintainer = Maintainer(index, LatencyModel(dim=ds.dim))
+    elif method == "lire":
+        maintainer = Maintainer(index, LatencyModel(dim=ds.dim),
+                                policy=MaintenancePolicy(
+                                    use_cost_model=False,
+                                    use_rejection=False))
+
+    trace = Trace(method=method)
+    resident = {int(i) for i in wl.initial_ids}
+    x_all = ds.vectors
+
+    for t, op in enumerate(wl.operations):
+        if op.kind == "insert":
+            t0 = time.perf_counter()
+            index.insert(op.vectors, op.ids)
+            trace.update_s += time.perf_counter() - t0
+            resident.update(int(i) for i in op.ids)
+        elif op.kind == "delete":
+            t0 = time.perf_counter()
+            index.delete(op.ids)
+            trace.update_s += time.perf_counter() - t0
+            resident.difference_update(int(i) for i in op.ids)
+        else:
+            res = np.asarray(sorted(resident))
+            x_res = x_all[res]
+            qs = op.queries
+            if ds.metric == "l2":
+                d = (np.sum(x_res ** 2, 1)[None, :]
+                     - 2.0 * qs @ x_res.T)
+            else:
+                d = -(qs @ x_res.T)
+            gt = res[np.argpartition(d, k - 1, axis=1)[:, :k]]
+            t0 = time.perf_counter()
+            for i in range(len(qs)):
+                r = index.search(qs[i], k, recall_target=target)
+                trace.recall.append(
+                    len(set(r.ids.tolist()) & set(gt[i].tolist())) / k)
+                trace.nprobe.append(r.nprobe[0])
+            dt = time.perf_counter() - t0
+            trace.search_s += dt
+            trace.query_lat_us.append(dt / len(qs) * 1e6)
+        # maintenance after each operation (paper §7.2)
+        if t % maint_every == 0:
+            t0 = time.perf_counter()
+            if maintainer is not None:
+                maintainer.run()
+            elif method == "dedrift":
+                _dedrift_round(index)
+            trace.maint_s += time.perf_counter() - t0
+        trace.partitions.append(index.num_partitions)
+    return trace

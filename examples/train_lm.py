@@ -1,0 +1,22 @@
+"""End-to-end LM training driver (deliverable b: the train-N-steps example).
+
+    PYTHONPATH=src python examples/train_lm.py                 # quick (CPU)
+    PYTHONPATH=src python examples/train_lm.py --preset lm-100m --steps 300
+
+Drives ``repro.launch.train`` — the production training stack: sharded
+params, microbatch accumulation, AdamW + cosine schedule, async atomic
+checkpointing, fault-tolerant supervision (auto restore + data-cursor
+replay).  ``lm-100m`` is the ~100M-parameter configuration; the default
+``lm-tiny`` steps quickly on the CPU container.  On a TPU pod the same
+driver runs under ``make_production_mesh()`` — nothing else changes.
+"""
+import sys
+
+from repro.launch.train import main
+
+if __name__ == "__main__":
+    argv = sys.argv[1:]
+    if not argv:
+        argv = ["--preset", "lm-tiny", "--steps", "60", "--batch", "8",
+                "--seq", "128", "--ckpt-every", "25"]
+    main(argv)

@@ -1,0 +1,8 @@
+"""Architecture registry: the 10 assigned architectures + quake-ann.
+
+``get_arch(name).build(shape, mesh, smoke=...)`` returns a Lowering for any
+(arch x shape x mesh) cell; ``all_cells()`` enumerates the full table.
+"""
+from .base import (ArchSpec, Lowering, REGISTRY, all_cells,  # noqa: F401
+                   get_arch)
+from . import gnn_archs, lm_archs, quake_arch, recsys_archs  # noqa: F401

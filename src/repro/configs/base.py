@@ -1,0 +1,95 @@
+"""Architecture registry protocol.
+
+Every assigned architecture provides an ``ArchSpec``:
+
+  * ``model_config()`` — the exact published configuration,
+  * ``smoke_config()`` — a reduced same-family config for CPU smoke tests,
+  * ``shapes``          — its assigned input-shape cells,
+  * ``build(shape, mesh, smoke)`` — a ``Lowering``: the jittable step
+    function, abstract (ShapeDtypeStruct) arguments, and in/out shardings
+    for the production mesh.  ``dryrun.py`` calls
+    ``jit(fn, in_shardings=...).lower(*args).compile()`` on it.
+
+Nothing here allocates device memory for full-size configs — parameters and
+optimizer state are ``jax.eval_shape`` results.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Pytree = Any
+SDS = jax.ShapeDtypeStruct
+
+
+@dataclass
+class Lowering:
+    """Everything needed to lower+compile one (arch x shape x mesh) cell."""
+    fn: Callable
+    args: Tuple[Pytree, ...]            # ShapeDtypeStruct pytrees
+    in_shardings: Tuple[Pytree, ...]    # NamedSharding pytrees
+    mesh: Optional[Any] = None          # context mesh: makes the model's
+    # internal with_sharding_constraint(PartitionSpec) calls effective
+    donate_argnums: Tuple[int, ...] = ()
+    static_argnums: Tuple[int, ...] = ()
+    description: str = ""
+
+    def lower(self):
+        jitted = jax.jit(self.fn, in_shardings=self.in_shardings,
+                         donate_argnums=self.donate_argnums)
+        if self.mesh is not None:
+            with jax.set_mesh(self.mesh):
+                return jitted.lower(*self.args)
+        return jitted.lower(*self.args)
+
+
+@dataclass
+class ArchSpec:
+    name: str
+    family: str                          # "lm" | "gnn" | "recsys" | "ann"
+    source: str                          # citation tag from the assignment
+    shapes: Tuple[str, ...]
+    model_config: Callable[[], Any]
+    smoke_config: Callable[[], Any]
+    build: Callable[..., Lowering]       # (shape, mesh, smoke=False)
+    notes: str = ""
+
+
+REGISTRY: Dict[str, ArchSpec] = {}
+
+
+def register(spec: ArchSpec) -> ArchSpec:
+    REGISTRY[spec.name] = spec
+    return spec
+
+
+def get_arch(name: str) -> ArchSpec:
+    if name not in REGISTRY:
+        raise KeyError(f"unknown arch {name!r}; have {sorted(REGISTRY)}")
+    return REGISTRY[name]
+
+
+def all_cells():
+    for name, spec in REGISTRY.items():
+        for shape in spec.shapes:
+            yield name, shape
+
+
+def named_sharding_tree(mesh: Mesh, spec_tree: Pytree) -> Pytree:
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def eval_params(init_fn: Callable, *args) -> Pytree:
+    """Abstract parameter tree — no allocation."""
+    return jax.eval_shape(functools.partial(init_fn, *args))
+
+
+def dp_axes_for(mesh: Mesh) -> Tuple[str, ...]:
+    """Data-parallel axes present in this mesh (pod is dp when present)."""
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)

@@ -1,0 +1,27 @@
+"""gat-cora [arXiv:1710.10903]: 2L, d_hidden=8, 8 heads, attn aggregator."""
+from __future__ import annotations
+
+from ..models import gnn
+from .base import ArchSpec, register
+from .families import GNN_SHAPES, build_gnn
+
+
+def gat_cora() -> gnn.GATConfig:
+    # d_in is per-shape (each cell fixes its own d_feat); 1433 is Cora's.
+    return gnn.GATConfig(d_in=1433, d_hidden=8, n_heads=8, n_layers=2,
+                         n_classes=7)
+
+
+def gat_cora_smoke() -> gnn.GATConfig:
+    return gnn.GATConfig(d_in=64, d_hidden=8, n_heads=4, n_layers=2,
+                         n_classes=7)
+
+
+register(ArchSpec(
+    name="gat-cora", family="gnn", source="arXiv:1710.10903",
+    shapes=tuple(GNN_SHAPES),
+    model_config=gat_cora, smoke_config=gat_cora_smoke,
+    build=lambda shape, mesh, smoke=False: build_gnn(
+        (gat_cora_smoke if smoke else gat_cora)(), shape, mesh, smoke=smoke),
+    notes="SDDMM->edge-softmax->SpMM regime via segment ops; edge-parallel "
+          "sharding; minibatch_lg uses the fanout-15/10 neighbor sampler"))

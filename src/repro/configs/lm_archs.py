@@ -1,0 +1,127 @@
+"""The five assigned LM architectures (exact published configs)."""
+from __future__ import annotations
+
+import functools
+
+import jax.numpy as jnp
+
+from ..models import transformer as tr
+from .base import ArchSpec, register
+from .families import LM_SHAPES, build_lm
+
+LM_SHAPE_NAMES = tuple(LM_SHAPES)
+
+
+def _lm_spec(name, source, full_cfg_fn, smoke_cfg_fn, notes="",
+             microbatches=2):
+    return register(ArchSpec(
+        name=name, family="lm", source=source, shapes=LM_SHAPE_NAMES,
+        model_config=full_cfg_fn, smoke_config=smoke_cfg_fn,
+        build=lambda shape, mesh, smoke=False, **kw: build_lm(
+            (smoke_cfg_fn if smoke else full_cfg_fn)(), shape, mesh,
+            smoke=smoke, **({"microbatches": microbatches} | kw)),
+        notes=notes))
+
+
+# -- mistral-large-123b [hf:mistralai/Mistral-Large-Instruct-2407] ----------
+
+def mistral_large_123b() -> tr.TransformerConfig:
+    return tr.TransformerConfig(
+        n_layers=88, d_model=12288, n_heads=96, n_kv_heads=8, d_head=128,
+        d_ff=28672, vocab_size=32768)
+
+
+def mistral_large_smoke() -> tr.TransformerConfig:
+    return tr.TransformerConfig(
+        n_layers=2, d_model=128, n_heads=8, n_kv_heads=2, d_head=16,
+        d_ff=256, vocab_size=512, remat=False,
+        compute_dtype=jnp.float32)
+
+
+_lm_spec("mistral-large-123b", "hf:mistralai/Mistral-Large-Instruct-2407",
+         mistral_large_123b, mistral_large_smoke,
+         notes="dense 88L GQA kv=8", microbatches=4)
+
+
+# -- granite-34b [arXiv:2405.04324] — llama-arch code model, MQA ------------
+
+def granite_34b() -> tr.TransformerConfig:
+    return tr.TransformerConfig(
+        n_layers=88, d_model=6144, n_heads=48, n_kv_heads=1, d_head=128,
+        d_ff=24576, vocab_size=49152)
+
+
+def granite_smoke() -> tr.TransformerConfig:
+    return tr.TransformerConfig(
+        n_layers=2, d_model=96, n_heads=6, n_kv_heads=1, d_head=16,
+        d_ff=192, vocab_size=512, remat=False,
+        compute_dtype=jnp.float32)
+
+
+_lm_spec("granite-34b", "arXiv:2405.04324", granite_34b, granite_smoke,
+         notes="dense 88L MQA (kv=1), code model")
+
+
+# -- qwen2.5-14b [hf:Qwen/Qwen2.5-14B] — GQA + QKV bias ---------------------
+
+def qwen25_14b() -> tr.TransformerConfig:
+    return tr.TransformerConfig(
+        n_layers=48, d_model=5120, n_heads=40, n_kv_heads=8, d_head=128,
+        d_ff=13824, vocab_size=152064, qkv_bias=True)
+
+
+def qwen25_smoke() -> tr.TransformerConfig:
+    return tr.TransformerConfig(
+        n_layers=2, d_model=80, n_heads=5, n_kv_heads=1, d_head=16,
+        d_ff=160, vocab_size=512, qkv_bias=True, remat=False,
+        compute_dtype=jnp.float32)
+
+
+_lm_spec("qwen2.5-14b", "hf:Qwen/Qwen2.5-14B", qwen25_14b, qwen25_smoke,
+         notes="dense 48L GQA kv=8, QKV bias, 152k vocab")
+
+
+# -- qwen3-moe-235b-a22b [hf:Qwen/Qwen3-235B-A22B] — 128e top-8 -------------
+
+def qwen3_moe_235b() -> tr.TransformerConfig:
+    return tr.TransformerConfig(
+        n_layers=94, d_model=4096, n_heads=64, n_kv_heads=4, d_head=128,
+        d_ff=0, vocab_size=151936,
+        moe=tr.MoEConfig(n_experts=128, top_k=8, d_ff=1536))
+
+
+def qwen3_moe_smoke() -> tr.TransformerConfig:
+    return tr.TransformerConfig(
+        n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, d_head=16,
+        d_ff=0, vocab_size=512, remat=False,
+        compute_dtype=jnp.float32,
+        moe=tr.MoEConfig(n_experts=8, top_k=2, d_ff=32, group_size=64))
+
+
+_lm_spec("qwen3-moe-235b-a22b", "hf:Qwen/Qwen3-235B-A22B",
+         qwen3_moe_235b, qwen3_moe_smoke, notes="MoE 128e top-8, 94L")
+
+
+# -- llama4-scout-17b-16e [hf:meta-llama/Llama-4-Scout-17B-16E] -------------
+# MoE 16 routed experts top-1 + 1 shared expert; multimodal early fusion —
+# the vision frontend is a STUB per the assignment (text backbone only).
+
+def llama4_scout() -> tr.TransformerConfig:
+    return tr.TransformerConfig(
+        n_layers=48, d_model=5120, n_heads=40, n_kv_heads=8, d_head=128,
+        d_ff=0, vocab_size=202048,
+        moe=tr.MoEConfig(n_experts=16, top_k=1, d_ff=8192, n_shared=1))
+
+
+def llama4_scout_smoke() -> tr.TransformerConfig:
+    return tr.TransformerConfig(
+        n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, d_head=16,
+        d_ff=0, vocab_size=512, remat=False,
+        compute_dtype=jnp.float32,
+        moe=tr.MoEConfig(n_experts=4, top_k=1, d_ff=64, n_shared=1,
+                         group_size=64))
+
+
+_lm_spec("llama4-scout-17b-a16e", "hf:meta-llama/Llama-4-Scout-17B-16E",
+         llama4_scout, llama4_scout_smoke,
+         notes="MoE 16e top-1 + shared expert; modality frontend stubbed")

@@ -1,0 +1,88 @@
+"""The four assigned recsys architectures (exact published configs)."""
+from __future__ import annotations
+
+from ..models import recsys
+from .base import ArchSpec, register
+from .families import RECSYS_SHAPES, build_recsys
+
+SHAPES = tuple(RECSYS_SHAPES)
+
+
+def _recsys_spec(name, source, full_fn, smoke_fn, notes=""):
+    return register(ArchSpec(
+        name=name, family="recsys", source=source, shapes=SHAPES,
+        model_config=full_fn, smoke_config=smoke_fn,
+        build=lambda shape, mesh, smoke=False: build_recsys(
+            name, (smoke_fn if smoke else full_fn)(), shape, mesh,
+            smoke=smoke),
+        notes=notes))
+
+
+# -- DIN [arXiv:1706.06978] --------------------------------------------------
+
+def din() -> recsys.DINConfig:
+    return recsys.DINConfig(vocab=10_000_000, embed_dim=18, seq_len=100,
+                            attn_mlp=(80, 40), mlp=(200, 80))
+
+
+def din_smoke() -> recsys.DINConfig:
+    return recsys.DINConfig(vocab=1000, embed_dim=18, seq_len=50,
+                            attn_mlp=(80, 40), mlp=(200, 80))
+
+
+_recsys_spec("din", "arXiv:1706.06978", din, din_smoke,
+             notes="target-attention over user history; 10M-row table")
+
+
+# -- SASRec [arXiv:1808.09781] ------------------------------------------------
+
+def sasrec() -> recsys.SASRecConfig:
+    return recsys.SASRecConfig(vocab=1_000_000, embed_dim=50, n_blocks=2,
+                               n_heads=1, seq_len=50)
+
+
+def sasrec_smoke() -> recsys.SASRecConfig:
+    return recsys.SASRecConfig(vocab=1000, embed_dim=50, n_blocks=2,
+                               n_heads=1, seq_len=50)
+
+
+_recsys_spec("sasrec", "arXiv:1808.09781", sasrec, sasrec_smoke,
+             notes="self-attentive sequential; in-batch softmax loss")
+
+
+# -- Two-tower retrieval [RecSys'19 YouTube] ----------------------------------
+
+def two_tower() -> recsys.TwoTowerConfig:
+    return recsys.TwoTowerConfig(user_vocab=10_000_000,
+                                 item_vocab=10_000_000, embed_dim=256,
+                                 tower_mlp=(1024, 512, 256))
+
+
+def two_tower_smoke() -> recsys.TwoTowerConfig:
+    return recsys.TwoTowerConfig(user_vocab=1000, item_vocab=1000,
+                                 embed_dim=256, tower_mlp=(1024, 512, 256))
+
+
+_recsys_spec("two-tower-retrieval", "RecSys'19 (YouTube)", two_tower,
+             two_tower_smoke,
+             notes="sampled-softmax retrieval with logQ correction; "
+                   "retrieval_cand is Quake's direct use case "
+                   "(DESIGN.md §5)")
+
+
+# -- DLRM RM-2 [arXiv:1906.00091] ----------------------------------------------
+
+def dlrm_rm2() -> recsys.DLRMConfig:
+    return recsys.DLRMConfig(n_dense=13, n_sparse=26, vocab=5_000_000,
+                             embed_dim=64, bot_mlp=(512, 256, 64),
+                             top_mlp=(512, 512, 256, 1))
+
+
+def dlrm_smoke() -> recsys.DLRMConfig:
+    return recsys.DLRMConfig(n_dense=13, n_sparse=26, vocab=1000,
+                             embed_dim=64, bot_mlp=(512, 256, 64),
+                             top_mlp=(512, 512, 256, 1))
+
+
+_recsys_spec("dlrm-rm2", "arXiv:1906.00091", dlrm_rm2, dlrm_smoke,
+             notes="26 row-sharded 5M-row tables; dot interaction")

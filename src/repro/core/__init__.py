@@ -1,0 +1,14 @@
+# The paper's primary contribution: Quake's adaptive partitioned index.
+#   geometry     — hyperspherical-cap recall math (paper §5)
+#   cost_model   — lambda(s) latency model + cost deltas (paper §4.1/§4.2.2)
+#   kmeans       — jit-compiled clustering (build/split/refine substrate)
+#   aps          — Adaptive Partition Scanning (paper §5, Algorithm 1)
+#   index        — dynamic multi-level partitioned index (paper §3)
+#   maintenance  — estimate/verify/commit maintenance loop (paper §4.2)
+#   distributed  — mesh-sharded serving engine (paper §6, TPU adaptation)
+#   multiquery   — batched scan-once-per-partition policy (paper §7.4)
+from .index import QuakeConfig, QuakeIndex, SearchResult  # noqa: F401
+from .maintenance import Maintainer, MaintenancePolicy  # noqa: F401
+from .cost_model import LatencyModel  # noqa: F401
+from .distributed import (EngineConfig, IndexSnapshot,  # noqa: F401
+                          ShardedQuakeEngine)

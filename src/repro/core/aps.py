@@ -1,0 +1,226 @@
+"""Adaptive Partition Scanning (paper §5, Algorithm 1).
+
+APS decides, per query, how many partitions to scan to hit a recall target:
+
+1. consider the ``f_M * N`` nearest candidate partitions,
+2. scan the nearest partition, initializing the query radius ``rho`` (distance
+   to the current k-th nearest neighbor),
+3. estimate each unscanned candidate's probability of holding a true neighbor
+   from hyperspherical-cap intersection volumes (geometry.py),
+4. scan candidates in descending probability until the accumulated recall
+   estimate ``r = sum_{scanned} p_i`` exceeds the target, recomputing
+   probabilities only when ``rho`` shrank by more than ``tau_rho``
+   (paper opt. #2) using the precomputed beta table (paper opt. #1).
+
+Two implementations share the estimator math:
+  * ``aps_scan`` — the host-driven sequential loop used by the dynamic index
+    (faithful Algorithm 1; partition contents are ragged).
+  * ``estimate_probs`` / ``recall_estimate`` — jnp functions reused by the
+    mesh-sharded engine (distributed.py) inside ``lax.while_loop`` rounds.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, List, Sequence, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from . import geometry
+
+Array = jnp.ndarray
+
+
+# ---------------------------------------------------------------------------
+# Estimator math (jnp; usable inside jit and from the host loop)
+# ---------------------------------------------------------------------------
+
+def estimate_probs(d0_sq: Array, di_sq: Array, cc_dist: Array, rho_sq: Array,
+                   table: Array, valid: Array) -> Tuple[Array, Array]:
+    """p0 and per-candidate probabilities (Eqs. 7-9).
+
+    d0_sq: ||q-c0||^2 scalar; di_sq (M,): ||q-ci||^2; cc_dist (M,):
+    ||ci-c0||; rho_sq: current radius^2; valid (M,): candidate mask with the
+    nearest centroid excluded.  All squared quantities — APS never needs the
+    unsquared query-centroid distances.
+    """
+    rho = jnp.sqrt(jnp.maximum(rho_sq, 1e-30))
+    h = geometry.bisector_margins(d0_sq, di_sq, cc_dist)
+    v = geometry.cap_fraction(h / rho, table)
+    v = jnp.where(valid, v, 0.0)
+    return geometry.partition_probabilities(v, valid)
+
+
+def estimate_probs_np(d0_sq: float, di_sq: np.ndarray, cc_dist: np.ndarray,
+                      rho_sq: float, table, valid: np.ndarray
+                      ) -> Tuple[float, np.ndarray]:
+    """Numpy mirror of ``estimate_probs`` for the host scan loop (no jax
+    dispatch overhead per radius recompute).  Tested for equivalence.
+
+    ``table`` is either the precomputed 1024-point beta grid (paper opt. #1,
+    interpolated) or a callable ``beta_fn(x) -> I_x(a, 1/2)`` evaluating the
+    regularized incomplete beta exactly — the APS-RP ablation variant that
+    skips precomputation (paper Table 2)."""
+    rho = np.sqrt(max(rho_sq, 1e-30))
+    h = (di_sq - d0_sq) / (2.0 * np.maximum(cc_dist, 1e-20))
+    t = np.clip(h / rho, -1.0, 1.0)
+    x = np.clip(1.0 - t * t, 0.0, 1.0)
+    if callable(table):
+        half = 0.5 * np.asarray(table(x), dtype=np.float64)
+    else:
+        n = len(table)
+        pos = x * (n - 1)
+        lo = np.clip(np.floor(pos).astype(np.int64), 0, n - 2)
+        frac = pos - lo
+        half = 0.5 * (table[lo] * (1.0 - frac) + table[lo + 1] * frac)
+    v = np.where(t >= 0, half, 1.0 - half)
+    v = np.where(valid, v, 0.0)
+    total = float(v.sum())
+    if total <= 0:
+        return 1.0, np.zeros_like(v)
+    vn = v / total
+    p0 = float(np.exp(np.sum(np.log1p(-np.clip(vn[valid], 0.0, 1 - 1e-7)))))
+    p = (1.0 - p0) * vn
+    return p0, p
+
+
+# ---------------------------------------------------------------------------
+# Host-driven Algorithm 1 (dynamic index path)
+# ---------------------------------------------------------------------------
+
+@dataclass
+class APSResult:
+    ids: np.ndarray            # (k,) item ids (vector ids or child partition ids)
+    dists: np.ndarray          # (k,) minimization-convention distances
+    scanned: np.ndarray        # partition indices scanned, in scan order
+    nprobe: int = 0
+    recall_estimate: float = 0.0
+    recompute_count: int = 0
+    trace: List[float] = field(default_factory=list)
+
+
+class TopK:
+    """Simple numpy top-k accumulator (minimization convention)."""
+
+    def __init__(self, k: int):
+        self.k = k
+        self.dists = np.full(k, np.inf, dtype=np.float64)
+        self.ids = np.full(k, -1, dtype=np.int64)
+
+    def update(self, dists: np.ndarray, ids: np.ndarray) -> None:
+        if len(dists) == 0:
+            return
+        d = np.concatenate([self.dists, dists.astype(np.float64)])
+        i = np.concatenate([self.ids, ids.astype(np.int64)])
+        if len(d) > self.k:
+            sel = np.argpartition(d, self.k - 1)[:self.k]
+            sel = sel[np.argsort(d[sel], kind="stable")]
+        else:
+            sel = np.argsort(d, kind="stable")
+        self.dists, self.ids = d[sel], i[sel]
+
+    @property
+    def full(self) -> bool:
+        return np.isfinite(self.dists[self.k - 1])
+
+    @property
+    def kth(self) -> float:
+        return float(self.dists[self.k - 1])
+
+
+def aps_scan(
+    *,
+    cand_centroid_dists_sq: np.ndarray,   # (M,) ||q - c_i||^2 (geometry space)
+    cand_cc_dists: np.ndarray,            # (M,) ||c_i - c_nearest||
+    scan_partition: Callable[[int], Tuple[np.ndarray, np.ndarray]],
+    item_dist_to_rho_sq: Callable[[float], float],
+    k: int,
+    recall_target: float,
+    table: np.ndarray,
+    tau_rho: float = 0.01,
+    max_scan: int | None = None,
+) -> APSResult:
+    """Algorithm 1 over an arbitrary candidate set.
+
+    ``scan_partition(m)`` scans candidate m (local index into the candidate
+    arrays) and returns (dists, ids) of its items in minimization convention.
+    ``item_dist_to_rho_sq`` maps the current k-th item distance to the
+    squared radius in the geometry space (identity for L2 on raw vectors;
+    MIPS augmentation otherwise).
+    """
+    m_total = len(cand_centroid_dists_sq)
+    assert m_total >= 1
+    order0 = int(np.argmin(cand_centroid_dists_sq))
+    heap = TopK(k)
+    max_scan = m_total if max_scan is None else min(max_scan, m_total)
+
+    # --- scan the nearest partition, set rho ---
+    scanned_mask = np.zeros(m_total, dtype=bool)
+    scan_order: List[int] = [order0]
+    d, i = scan_partition(order0)
+    heap.update(d, i)
+    scanned_mask[order0] = True
+
+    d0_sq = float(cand_centroid_dists_sq[order0])
+    di = np.asarray(cand_centroid_dists_sq, dtype=np.float64)
+    cc = np.maximum(np.asarray(cand_cc_dists, dtype=np.float64), 1e-12)
+    tbl = table if callable(table) else np.asarray(table, dtype=np.float64)
+    valid = np.ones(m_total, dtype=bool)
+    valid[order0] = False
+
+    recomputes = 0
+
+    def compute_probs(rho_sq: float) -> Tuple[float, np.ndarray]:
+        nonlocal recomputes
+        recomputes += 1
+        return estimate_probs_np(d0_sq, di, cc, rho_sq, tbl, valid)
+
+    if not heap.full:
+        # Fewer than k items seen: no radius yet -> conservatively keep
+        # scanning by centroid-distance order until the heap fills.
+        p0, probs = 0.0, None
+        rho_sq = np.inf
+    else:
+        rho_sq = item_dist_to_rho_sq(heap.kth)
+        p0, probs = compute_probs(rho_sq)
+
+    result = APSResult(ids=heap.ids, dists=heap.dists,
+                       scanned=np.asarray(scan_order), nprobe=1,
+                       recall_estimate=p0)
+    r = p0
+    trace = [r]
+
+    while r < recall_target and len(scan_order) < max_scan:
+        if probs is None:  # heap not yet full: nearest-centroid order
+            rem = np.where(~scanned_mask)[0]
+            nxt = int(rem[np.argmin(cand_centroid_dists_sq[rem])])
+        else:
+            masked = np.where(scanned_mask, -np.inf, probs)
+            nxt = int(np.argmax(masked))
+            if masked[nxt] == -np.inf:
+                break
+        d, i = scan_partition(nxt)
+        heap.update(d, i)
+        scanned_mask[nxt] = True
+        scan_order.append(nxt)
+
+        if heap.full:
+            new_rho_sq = item_dist_to_rho_sq(heap.kth)
+            if probs is None or (
+                    abs(np.sqrt(new_rho_sq) - np.sqrt(rho_sq))
+                    > tau_rho * np.sqrt(rho_sq)):
+                rho_sq = new_rho_sq
+                p0, probs = compute_probs(rho_sq)
+        if probs is not None:
+            # r = p0 + sum of probabilities of scanned non-nearest candidates
+            r = p0 + float(np.sum(np.where(scanned_mask & valid, probs, 0.0)))
+        trace.append(r)
+
+    result.ids = heap.ids
+    result.dists = heap.dists
+    result.scanned = np.asarray(scan_order)
+    result.nprobe = len(scan_order)
+    result.recall_estimate = float(r)
+    result.recompute_count = recomputes
+    result.trace = trace
+    return result

@@ -1,0 +1,172 @@
+"""Quake's query-latency cost model (paper §4.1).
+
+    C = sum_l sum_j  A_lj * lambda(s_lj)
+
+``lambda(s)`` is the latency of scanning a partition of ``s`` vectors.  The
+paper measures it by offline profiling and notes it is non-linear in ``s``
+because of top-k selection overhead.  We provide both:
+
+* an analytic default  lambda(s) = c_f + c_lin*s + c_sel*s*log2(s)   (ns),
+  whose shape matches the profile (linear memory term + selection term), and
+* ``profile()`` which times the actual jitted scan on this machine for a grid
+  of sizes and least-squares-fits the coefficients — the paper's offline
+  profiling step.
+
+All cost math is in nanoseconds and plain numpy: the maintenance loop is a
+host-side control plane, not a jitted data path.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field, replace
+
+import numpy as np
+
+
+@dataclass(frozen=True)
+class LatencyModel:
+    """lambda(s): scan latency (ns) for a partition of s vectors.
+
+    Defaults approximate a d~100 scan at DRAM bandwidth plus a top-k
+    selection term; ``profile()`` replaces them with measured values.  The
+    paper's own example profile (λ(500)=1200µs vs λ(250)=550µs) is strongly
+    superlinear — the selection term carries that."""
+    c_fixed: float = 200.0       # per-partition dispatch overhead
+    c_lin: float = 1.5           # per-vector memory/FMA term (ns/vector)
+    c_sel: float = 0.25          # selection term coefficient (ns/vector/log2)
+    dim: int = 0                 # informational: profiled dimensionality
+
+    def __call__(self, s) -> np.ndarray:
+        s = np.asarray(s, dtype=np.float64)
+        logs = np.log2(np.maximum(s, 2.0))
+        lat = self.c_fixed + self.c_lin * s + self.c_sel * s * logs
+        return np.where(s > 0, lat, 0.0)
+
+    def scaled(self, factor: float) -> "LatencyModel":
+        return replace(self, c_fixed=self.c_fixed * factor,
+                       c_lin=self.c_lin * factor, c_sel=self.c_sel * factor)
+
+
+def fit_latency_model(sizes: np.ndarray, lats_ns: np.ndarray,
+                      dim: int = 0) -> LatencyModel:
+    """Least-squares fit of (c_fixed, c_lin, c_sel) to measured latencies."""
+    s = np.asarray(sizes, dtype=np.float64)
+    y = np.asarray(lats_ns, dtype=np.float64)
+    A = np.stack([np.ones_like(s), s, s * np.log2(np.maximum(s, 2.0))], 1)
+    coef, *_ = np.linalg.lstsq(A, y, rcond=None)
+    coef = np.maximum(coef, 0.0)  # physical non-negativity
+    return LatencyModel(float(coef[0]), float(coef[1]), float(coef[2]), dim)
+
+
+def profile(dim: int, k: int = 100,
+            sizes=(64, 256, 1024, 4096, 16384),
+            repeats: int = 5, seed: int = 0) -> LatencyModel:
+    """Offline profiling of the real scan path (paper §4.1 'measured through
+    offline profiling').  Times the jitted scan_topk on this host."""
+    import jax.numpy as jnp
+
+    from ..kernels import ops
+
+    rng = np.random.default_rng(seed)
+    lats = []
+    q = jnp.asarray(rng.normal(size=(1, dim)), jnp.float32)
+    for s in sizes:
+        x = jnp.asarray(rng.normal(size=(s, dim)), jnp.float32)
+        kk = min(k, s)
+        ops.scan_topk(q, x, kk, impl="jnp")[0].block_until_ready()  # compile
+        t0 = time.perf_counter()
+        for _ in range(repeats):
+            ops.scan_topk(q, x, kk, impl="jnp")[0].block_until_ready()
+        lats.append((time.perf_counter() - t0) / repeats * 1e9)
+    return fit_latency_model(np.asarray(sizes), np.asarray(lats), dim)
+
+
+@dataclass
+class PartitionStats:
+    """Per-level tracking of sizes + access frequencies over the sliding
+    window W (paper Stage 0).  ``hits`` counts queries that scanned each
+    partition; ``window`` counts queries seen since the last reset."""
+    hits: np.ndarray = field(default_factory=lambda: np.zeros(0))
+    window: int = 0
+
+    def ensure(self, n: int) -> None:
+        if len(self.hits) < n:
+            self.hits = np.concatenate(
+                [self.hits, np.zeros(n - len(self.hits))])
+
+    def record(self, scanned: np.ndarray) -> None:
+        self.hits[scanned] += 1
+        self.window += 1
+
+    def access_freq(self, n: int, default: float = 0.0) -> np.ndarray:
+        """A_lj in [0,1]; ``default`` is used before any query arrives."""
+        self.ensure(n)
+        if self.window == 0:
+            return np.full(n, default)
+        return self.hits[:n] / self.window
+
+    def reset(self) -> None:
+        self.hits[:] = 0
+        self.window = 0
+
+    # --- structural edits (keep stats aligned with partition ids) ---
+    def split(self, j: int, alpha: float) -> None:
+        """Partition j split into (j, new_last): children inherit alpha * A."""
+        h = self.hits[j] * alpha
+        self.hits[j] = h
+        self.hits = np.append(self.hits, h)
+
+    def remove(self, j: int) -> None:
+        """Partition j deleted; swap-remove to match index storage layout."""
+        self.hits[j] = self.hits[-1]
+        self.hits = self.hits[:-1]
+
+
+def total_cost(lam: LatencyModel, sizes_per_level, freqs_per_level) -> float:
+    """Paper Eq. (2): C = sum_l sum_j A_lj * lambda(s_lj)  (ns/query)."""
+    c = 0.0
+    for sizes, freqs in zip(sizes_per_level, freqs_per_level):
+        c += float(np.sum(np.asarray(freqs) * lam(np.asarray(sizes))))
+    return c
+
+
+def split_delta_estimate(lam: LatencyModel, n_l: int, size: float,
+                         freq: float, alpha: float) -> float:
+    """Paper Eq. (6): Delta'Split = DeltaO+ - A*lam(s) + 2*alpha*A*lam(s/2)."""
+    d_over = lam(n_l + 1) - lam(n_l)  # extra centroid at the parent scan
+    return float(d_over - freq * lam(size) + 2 * alpha * freq * lam(size / 2))
+
+
+def split_delta_verify(lam: LatencyModel, n_l: int, size_before: float,
+                       freq: float, size_l: float, size_r: float,
+                       alpha: float) -> float:
+    """Paper Eq. (4) with measured child sizes but Stage-1 frequency
+    assumptions (A_child = alpha * A_parent)."""
+    d_over = lam(n_l + 1) - lam(n_l)
+    return float(d_over - freq * lam(size_before)
+                 + alpha * freq * (lam(size_l) + lam(size_r)))
+
+
+def merge_delta_estimate(lam: LatencyModel, n_l: int, size: float,
+                         freq: float, recv_sizes: np.ndarray,
+                         recv_freqs: np.ndarray) -> float:
+    """Merge (delete) estimate with uniform redistribution over receivers
+    (paper Eq. (5) with ds_m = s/|R|, dA_m = A/|R|)."""
+    r = max(len(recv_sizes), 1)
+    d_over = lam(n_l - 1) - lam(n_l)
+    ds, da = size / r, freq / r
+    bump = np.sum((recv_freqs + da) * lam(recv_sizes + ds)
+                  - recv_freqs * lam(recv_sizes))
+    return float(d_over - freq * lam(size) + bump)
+
+
+def merge_delta_verify(lam: LatencyModel, n_l: int, size: float, freq: float,
+                       recv_sizes_before: np.ndarray,
+                       recv_sizes_after: np.ndarray,
+                       recv_freqs: np.ndarray, recv_extra_freq: np.ndarray,
+                       ) -> float:
+    """Paper Eq. (5) with the *actual* receiver set and measured sizes."""
+    d_over = lam(n_l - 1) - lam(n_l)
+    bump = np.sum((recv_freqs + recv_extra_freq) * lam(recv_sizes_after)
+                  - recv_freqs * lam(recv_sizes_before))
+    return float(d_over - freq * lam(size) + bump)

@@ -1,0 +1,5 @@
+"""Data substrate: synthetic vector datasets, the configurable workload
+generator and Wikipedia-like trace (paper §7.1), graph generators + neighbor
+sampler, and deterministic checkpointable batch pipelines for the model zoo.
+"""
+from . import datasets, graphs, pipelines, workload, wikipedia  # noqa: F401

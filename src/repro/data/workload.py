@@ -1,0 +1,153 @@
+"""Configurable vector-search workload generator (paper §7.1).
+
+Parameters mirror the paper's generator: vectors per operation, operation
+count, operation mix (read/write ratio) and *spatial skew* — queries and
+updates sampled from hot clusters so both read and write skew are
+controllable.  Produces a deterministic stream of operations:
+
+    ("insert", vectors, ids) | ("delete", ids) | ("query", vectors, gt_fn)
+
+MSTuring-RO / MSTuring-IH style workloads from the paper are instances
+(see ``readonly_workload`` / ``insert_heavy_workload``); the Wikipedia trace
+lives in ``wikipedia.py``.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Iterator, List, Optional, Tuple
+
+import numpy as np
+
+from .datasets import VectorDataset, zipf_weights
+
+
+@dataclass
+class WorkloadConfig:
+    n_operations: int = 100
+    vectors_per_op: int = 1000
+    read_fraction: float = 0.5        # share of ops that are query batches
+    delete_fraction: float = 0.0      # share of *write* ops that delete
+    query_skew: float = 0.0           # 0 = uniform; >0 = zipf over clusters
+    write_skew: float = 0.0
+    queries_per_op: int = 100
+    k: int = 10
+    seed: int = 0
+
+
+@dataclass
+class Operation:
+    kind: str                          # insert | delete | query
+    vectors: Optional[np.ndarray] = None
+    ids: Optional[np.ndarray] = None
+    queries: Optional[np.ndarray] = None
+
+
+@dataclass
+class Workload:
+    """Materialized operation stream + initial state."""
+    initial_vectors: np.ndarray
+    initial_ids: np.ndarray
+    operations: List[Operation]
+    dataset: VectorDataset
+    config: WorkloadConfig
+
+    def resident_ids_after(self, t: int) -> np.ndarray:
+        """Ids resident in the index after operation t (for ground truth)."""
+        alive = set(self.initial_ids.tolist())
+        for op in self.operations[:t + 1]:
+            if op.kind == "insert":
+                alive.update(op.ids.tolist())
+            elif op.kind == "delete":
+                alive.difference_update(op.ids.tolist())
+        return np.asarray(sorted(alive), dtype=np.int64)
+
+
+def generate(ds: VectorDataset, cfg: WorkloadConfig,
+             initial_fraction: float = 0.3) -> Workload:
+    """Build a workload over ``ds``: a fraction of vectors resident up front,
+    the rest streamed in; queries jittered residents with cluster skew."""
+    rng = np.random.default_rng(cfg.seed)
+    n = ds.n
+    n_init = int(n * initial_fraction)
+    perm = rng.permutation(n)
+    init, pool = perm[:n_init], perm[n_init:]
+    pool_pos = 0
+    resident = list(init)
+
+    n_clusters = len(ds.centers)
+    qw = zipf_weights(n_clusters, 1.0 + cfg.query_skew) \
+        if cfg.query_skew > 0 else np.full(n_clusters, 1.0 / n_clusters)
+    ww = zipf_weights(n_clusters, 1.0 + cfg.write_skew) \
+        if cfg.write_skew > 0 else np.full(n_clusters, 1.0 / n_clusters)
+    # randomize which clusters are hot (decoupled from cluster id)
+    qw = qw[rng.permutation(n_clusters)]
+    ww = ww[rng.permutation(n_clusters)]
+
+    ops: List[Operation] = []
+    for t in range(cfg.n_operations):
+        if rng.random() < cfg.read_fraction:
+            res = np.asarray(resident)
+            cids = rng.choice(n_clusters, size=cfg.queries_per_op, p=qw)
+            base = np.empty(cfg.queries_per_op, dtype=np.int64)
+            res_cluster = ds.cluster_of[res]
+            for c in np.unique(cids):
+                cand = res[res_cluster == c]
+                if len(cand) == 0:
+                    cand = res
+                sel = cids == c
+                base[sel] = rng.choice(cand, size=int(sel.sum()))
+            q = (ds.vectors[base]
+                 + rng.normal(size=(cfg.queries_per_op, ds.dim))
+                 .astype(np.float32) * 0.05)
+            ops.append(Operation("query", queries=q.astype(np.float32)))
+        elif (cfg.delete_fraction > 0
+              and rng.random() < cfg.delete_fraction
+              and len(resident) > cfg.vectors_per_op * 2):
+            res = np.asarray(resident)
+            cids = rng.choice(n_clusters, size=cfg.vectors_per_op, p=ww)
+            res_cluster = ds.cluster_of[res]
+            victims: List[int] = []
+            for c in np.unique(cids):
+                cand = res[res_cluster == c]
+                if len(cand) == 0:
+                    cand = res
+                sel = int((cids == c).sum())
+                victims.extend(rng.choice(cand, size=min(sel, len(cand)),
+                                          replace=False).tolist())
+            victims = np.unique(np.asarray(victims, dtype=np.int64))
+            resident = [r for r in resident if r not in set(victims.tolist())]
+            ops.append(Operation("delete", ids=victims))
+        else:
+            take = min(cfg.vectors_per_op, len(pool) - pool_pos)
+            if take <= 0:
+                ops.append(Operation("query", queries=ds.vectors[
+                    rng.integers(0, n, cfg.queries_per_op)]))
+                continue
+            ids = pool[pool_pos:pool_pos + take]
+            pool_pos += take
+            resident.extend(ids.tolist())
+            ops.append(Operation("insert", vectors=ds.vectors[ids],
+                                 ids=ids.astype(np.int64)))
+    return Workload(initial_vectors=ds.vectors[init],
+                    initial_ids=init.astype(np.int64),
+                    operations=ops, dataset=ds, config=cfg)
+
+
+def readonly_workload(ds: VectorDataset, n_ops: int = 20,
+                      queries_per_op: int = 200, skew: float = 0.5,
+                      seed: int = 0) -> Workload:
+    """MSTuring-RO analogue: pure search."""
+    return generate(ds, WorkloadConfig(
+        n_operations=n_ops, read_fraction=1.0, query_skew=skew,
+        queries_per_op=queries_per_op, seed=seed), initial_fraction=1.0)
+
+
+def insert_heavy_workload(ds: VectorDataset, n_ops: int = 50,
+                          vectors_per_op: int = 2000,
+                          queries_per_op: int = 100,
+                          seed: int = 0) -> Workload:
+    """MSTuring-IH analogue: 90% insert / 10% search, growing 10x."""
+    return generate(ds, WorkloadConfig(
+        n_operations=n_ops, read_fraction=0.1,
+        vectors_per_op=vectors_per_op, queries_per_op=queries_per_op,
+        write_skew=0.5, seed=seed), initial_fraction=0.1)

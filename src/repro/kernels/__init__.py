@@ -1,0 +1,10 @@
+"""Pallas TPU kernels for Quake's compute hot-spots.
+
+- ``scan_topk``: fused partition scan (distance + bitonic running top-k).
+- ``kmeans_assign``: fused distance + argmin for maintenance/clustering.
+
+``ops`` holds the jit'd public wrappers (padding + impl dispatch), ``ref``
+the pure-jnp oracles.
+"""
+from . import ops, ref  # noqa: F401
+from .ops import kmeans_assign, scan_topk  # noqa: F401

@@ -1,0 +1,292 @@
+"""Pallas TPU kernel: *indexed* fused partition scan + top-k.
+
+The sharded engine's hot loop scans a per-batch **selection** of partition
+blocks out of the device-resident snapshot ``(P, S, d)``.  The baseline XLA
+path must ``gather`` the selected blocks into a fresh buffer and then run a
+GEMM over the copy — every scanned byte moves through HBM ~3x (gather read,
+gather write, dot read; plus a layout copy the dot may insert).
+
+This kernel removes the copy entirely: the selected partition indices are a
+**scalar-prefetch operand**, so the BlockSpec ``index_map`` streams each
+selected block HBM->VMEM exactly once, the MXU computes the distance tile,
+and a bitonic network folds it into the running top-k held in VMEM scratch.
+HBM traffic = U * S * d * bytes + (tiny) outputs — the roofline minimum for
+scanning U partitions.
+
+Per-query probe semantics are preserved by an optional ``(B, U)`` bias
+(0 where query b selected block u, MASK_DIST otherwise), so the fused union
+scan returns *exactly* the same top-k as the per-query gather path.
+
+Grid: ``(q_tiles, U, S/TS)`` with dimension_semantics
+(PARALLEL, ARBITRARY, ARBITRARY) — the two sequential axes walk selected
+blocks and their sub-tiles while the running top-k scratch persists.
+
+Validated in interpret mode against ``ref.scan_selected_ref`` (tests sweep
+shapes/selection patterns/metrics); Mosaic/TPU is the deployment target.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from .ref import MASK_DIST
+from .scan_topk import _is_pow2, bitonic_sort, merge_sorted_topk
+
+Array = jax.Array
+
+
+def _scan_indexed_kernel(sel_ref, q_ref, x_ref, aux_ref, qmask_ref,
+                         out_d_ref, out_i_ref, run_d, run_i, *,
+                         k_pad: int, coef: float, n_sel: int, n_sub: int,
+                         block_s: int, s_cap: int):
+    u = pl.program_id(1)
+    s = pl.program_id(2)
+
+    @pl.when((u == 0) & (s == 0))
+    def _init():
+        run_d[...] = jnp.full_like(run_d, MASK_DIST)
+        run_i[...] = jnp.full_like(run_i, -1)
+
+    q = q_ref[...]                      # (TQ, d)
+    x = x_ref[0]                        # (TS, d)
+    aux = aux_ref[0]                    # (TS,): ||x||^2 (+pad bias) or bias
+    qb = qmask_ref[...]                 # (TQ, 1): per-query selection bias
+    qx = jax.lax.dot_general(
+        q, x, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)      # MXU (TQ, TS)
+    dist = aux[None, :].astype(jnp.float32) + coef * qx \
+        + qb.astype(jnp.float32)
+
+    part = sel_ref[u]                   # selected partition id (scalar)
+    base = part * s_cap + s * block_s
+    idx = base + jax.lax.broadcasted_iota(jnp.int32, dist.shape, 1)
+
+    d_sorted, i_sorted = bitonic_sort(dist, idx)
+    m_d, m_i = merge_sorted_topk(run_d[...], run_i[...],
+                                 d_sorted[:, :k_pad], i_sorted[:, :k_pad])
+    run_d[...] = m_d
+    run_i[...] = m_i
+
+    @pl.when((u == n_sel - 1) & (s == n_sub - 1))
+    def _write():
+        out_d_ref[...] = run_d[...]
+        out_i_ref[...] = run_i[...]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("k_pad", "metric", "block_q", "block_s", "interpret"))
+def scan_topk_indexed_pallas(queries: Array, data: Array, aux: Array,
+                             sel: Array, qmask: Array, *, k_pad: int,
+                             metric: str = "l2", block_q: int = 128,
+                             block_s: int = 512, interpret: bool = True,
+                             ) -> Tuple[Array, Array]:
+    """Fused selected-block scan + top-k.  Shapes (pre-padded):
+
+    queries: (B, d), B % block_q == 0
+    data:    (P, S, d), S % block_s == 0
+    aux:     (P, S)    — ``||x||^2 + pad_bias`` (L2) or ``pad_bias`` (IP)
+    sel:     (U,) int32 — partition ids to scan (scalar-prefetched)
+    qmask:   (B, U) f32 — 0 where query b wants block u, MASK_DIST otherwise
+             (pass zeros to let every query see every selected block)
+
+    Returns ascending (dists (B, k_pad), flat idx (B, k_pad)) where idx is
+    ``partition * S + slot``; L2 dists omit ``||q||^2`` (caller adds back).
+    """
+    assert _is_pow2(block_s) and _is_pow2(k_pad) and k_pad <= block_s
+    B, d = queries.shape
+    P, S, _ = data.shape
+    U = sel.shape[0]
+    assert B % block_q == 0 and S % block_s == 0, (B, S, block_q, block_s)
+    nq, ns = B // block_q, S // block_s
+    coef = -2.0 if metric == "l2" else -1.0
+
+    kernel = functools.partial(
+        _scan_indexed_kernel, k_pad=k_pad, coef=coef, n_sel=U, n_sub=ns,
+        block_s=block_s, s_cap=S)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(nq, U, ns),
+        in_specs=[
+            pl.BlockSpec((block_q, d), lambda i, u, s, sel_r: (i, 0)),
+            pl.BlockSpec((1, block_s, d),
+                         lambda i, u, s, sel_r: (sel_r[u], s, 0)),
+            pl.BlockSpec((1, block_s),
+                         lambda i, u, s, sel_r: (sel_r[u], s)),
+            pl.BlockSpec((block_q, 1), lambda i, u, s, sel_r: (i, u)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_q, k_pad), lambda i, u, s, sel_r: (i, 0)),
+            pl.BlockSpec((block_q, k_pad), lambda i, u, s, sel_r: (i, 0)),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((block_q, k_pad), jnp.float32),
+            pltpu.VMEM((block_q, k_pad), jnp.int32),
+        ],
+    )
+    out_d, out_i = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((B, k_pad), jnp.float32),
+            jax.ShapeDtypeStruct((B, k_pad), jnp.int32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=(pltpu.GridDimensionSemantics.PARALLEL,
+                                 pltpu.GridDimensionSemantics.ARBITRARY,
+                                 pltpu.GridDimensionSemantics.ARBITRARY)),
+        interpret=interpret,
+        name="quake_scan_topk_indexed",
+    )(sel, queries, data, aux, qmask)
+    return out_d, out_i
+
+
+# ---------------------------------------------------------------------------
+# int8-quantized variant (paper §8.2 "Vector Compression", §Perf HC1 iter 5)
+# ---------------------------------------------------------------------------
+
+def _scan_indexed_q8_kernel(sel_ref, q_ref, qscale_ref, x_ref, scale_ref,
+                            aux_ref, qc_ref, qmask_ref, out_d_ref,
+                            out_i_ref, run_d, run_i, *, k_pad: int,
+                            coef: float, n_sel: int, n_sub: int,
+                            block_s: int, s_cap: int):
+    """Same scan, int8 codes: the MXU runs int8 x int8 -> int32 and the
+    scalar product is dequantized with per-query x per-slot scales.  The
+    dominant HBM stream (the vector codes) shrinks 4x vs f32.
+
+    Residual (IVF-SQ8) form: codes encode x - c_j; the exact f32
+    query-centroid dot rides in ``qc`` (per query x selected block) so
+    only the small residual term carries quantization error:
+        q.x = q.c_j + s_q * s_x * (q_i8 . r_i8).
+    Plain form passes qc = 0.
+    """
+    u = pl.program_id(1)
+    s = pl.program_id(2)
+
+    @pl.when((u == 0) & (s == 0))
+    def _init():
+        run_d[...] = jnp.full_like(run_d, MASK_DIST)
+        run_i[...] = jnp.full_like(run_i, -1)
+
+    q = q_ref[...]                      # (TQ, d) int8 codes
+    x = x_ref[0]                        # (TS, d) int8 codes
+    aux = aux_ref[0]                    # (TS,): dequantized ||x||^2 + bias
+    qb = qmask_ref[...]                 # (TQ, 1)
+    qc = qc_ref[...]                    # (TQ, 1) f32 q . c_{sel[u]}
+    qs = qscale_ref[...]                # (TQ, 1) per-query dequant scale
+    xs = scale_ref[0]                   # (TS,)  per-slot dequant scale
+    qx_i = jax.lax.dot_general(
+        q, x, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.int32)        # MXU int8 path
+    qx = qc.astype(jnp.float32) + qx_i.astype(jnp.float32) \
+        * qs.astype(jnp.float32) * xs[None, :].astype(jnp.float32)
+    dist = aux[None, :].astype(jnp.float32) + coef * qx \
+        + qb.astype(jnp.float32)
+
+    part = sel_ref[u]
+    base = part * s_cap + s * block_s
+    idx = base + jax.lax.broadcasted_iota(jnp.int32, dist.shape, 1)
+    d_sorted, i_sorted = bitonic_sort(dist, idx)
+    m_d, m_i = merge_sorted_topk(run_d[...], run_i[...],
+                                 d_sorted[:, :k_pad], i_sorted[:, :k_pad])
+    run_d[...] = m_d
+    run_i[...] = m_i
+
+    @pl.when((u == n_sel - 1) & (s == n_sub - 1))
+    def _write():
+        out_d_ref[...] = run_d[...]
+        out_i_ref[...] = run_i[...]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("k_pad", "metric", "block_q", "block_s", "interpret"))
+def scan_topk_indexed_q8_pallas(q_codes: Array, q_scales: Array,
+                                data_codes: Array, data_scales: Array,
+                                aux: Array, qc: Array, sel: Array,
+                                qmask: Array, *,
+                                k_pad: int, metric: str = "l2",
+                                block_q: int = 128, block_s: int = 512,
+                                interpret: bool = True,
+                                ) -> Tuple[Array, Array]:
+    """int8 indexed scan.  q_codes (B, d) int8 + q_scales (B, 1) f32;
+    data_codes (P, S, d) int8 + data_scales (P, S) f32 (per-slot symmetric
+    quantization); aux (P, S) = dequantized ||x||^2 + pad bias (L2) or pad
+    bias (IP); qc (B, U) f32 = exact q . c_{sel[u]} for residual codes
+    (zeros for plain codes).  Same return convention as
+    ``scan_topk_indexed_pallas``."""
+    assert _is_pow2(block_s) and _is_pow2(k_pad) and k_pad <= block_s
+    B, d = q_codes.shape
+    P, S, _ = data_codes.shape
+    U = sel.shape[0]
+    assert B % block_q == 0 and S % block_s == 0, (B, S, block_q, block_s)
+    nq, ns = B // block_q, S // block_s
+    coef = -2.0 if metric == "l2" else -1.0
+
+    kernel = functools.partial(
+        _scan_indexed_q8_kernel, k_pad=k_pad, coef=coef, n_sel=U, n_sub=ns,
+        block_s=block_s, s_cap=S)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(nq, U, ns),
+        in_specs=[
+            pl.BlockSpec((block_q, d), lambda i, u, s, sel_r: (i, 0)),
+            pl.BlockSpec((block_q, 1), lambda i, u, s, sel_r: (i, 0)),
+            pl.BlockSpec((1, block_s, d),
+                         lambda i, u, s, sel_r: (sel_r[u], s, 0)),
+            pl.BlockSpec((1, block_s),
+                         lambda i, u, s, sel_r: (sel_r[u], s)),
+            pl.BlockSpec((1, block_s),
+                         lambda i, u, s, sel_r: (sel_r[u], s)),
+            pl.BlockSpec((block_q, 1), lambda i, u, s, sel_r: (i, u)),
+            pl.BlockSpec((block_q, 1), lambda i, u, s, sel_r: (i, u)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_q, k_pad), lambda i, u, s, sel_r: (i, 0)),
+            pl.BlockSpec((block_q, k_pad), lambda i, u, s, sel_r: (i, 0)),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((block_q, k_pad), jnp.float32),
+            pltpu.VMEM((block_q, k_pad), jnp.int32),
+        ],
+    )
+    out_d, out_i = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((B, k_pad), jnp.float32),
+            jax.ShapeDtypeStruct((B, k_pad), jnp.int32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=(pltpu.GridDimensionSemantics.PARALLEL,
+                                 pltpu.GridDimensionSemantics.ARBITRARY,
+                                 pltpu.GridDimensionSemantics.ARBITRARY)),
+        interpret=interpret,
+        name="quake_scan_topk_indexed_q8",
+    )(sel, q_codes, q_scales, data_codes, data_scales, aux, qc, qmask)
+    return out_d, out_i
+
+
+def quantize_int8(x: Array, axis: int = -1) -> Tuple[Array, Array]:
+    """Symmetric per-row int8 quantization: returns (codes, scales) with
+    x ~= codes * scales[..., None]."""
+    amax = jnp.max(jnp.abs(x), axis=axis, keepdims=True)
+    scale = jnp.maximum(amax, 1e-12) / 127.0
+    codes = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return codes, scale[..., 0]
+
+
+def quantize_int8_residual(data: Array, centroids: Array
+                           ) -> Tuple[Array, Array]:
+    """IVF-style residual quantization: codes encode ``x - c_j`` (the
+    residual against the partition centroid), whose dynamic range is the
+    cluster radius rather than the embedding norm — substantially finer
+    int8 resolution at identical storage.  data (P, S, d), centroids
+    (P, d); returns (codes (P, S, d) int8, scales (P, S))."""
+    resid = data - centroids[:, None, :].astype(data.dtype)
+    return quantize_int8(resid)

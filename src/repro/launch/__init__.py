@@ -1,0 +1,7 @@
+"""Launchers: production mesh builders, the multi-pod dry-run driver, and
+the end-to-end train/serve entry points.
+
+NOTE: import ``repro.launch.dryrun`` only in a dedicated process — it forces
+512 virtual host devices before jax initializes.
+"""
+from .mesh import describe, make_host_mesh, make_production_mesh  # noqa: F401

@@ -1,0 +1,33 @@
+"""Production mesh construction.
+
+Defined as functions (never module-level constants) so importing this module
+never touches jax device state — required because the dry-run forces 512
+virtual host devices while tests/benches must see the single real device.
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    """16x16 = 256 chips per pod; the multi-pod mesh adds a leading 2-pod
+    axis (512 chips).  Axis roles: ("pod",) "data" = DP/FSDP,
+    "model" = TP/EP (and query-parallel for the quake engine)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(model: int = 1) -> Mesh:
+    """Mesh over whatever devices exist (tests / local benches)."""
+    devs = np.array(jax.devices())
+    n = len(devs)
+    assert n % model == 0
+    return Mesh(devs.reshape(n // model, model), ("data", "model"))
+
+
+def describe(mesh: Mesh) -> str:
+    return f"{dict(zip(mesh.axis_names, mesh.devices.shape))} " \
+           f"({mesh.devices.size} devices)"

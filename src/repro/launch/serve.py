@@ -1,0 +1,93 @@
+"""End-to-end Quake serving driver (deliverable b — the paper's kind).
+
+Replays a dynamic, skewed workload (Wikipedia-like by default) against the
+dynamic index: APS search per query batch, batched inserts/deletes, and the
+cost-model maintenance loop after every operation — the full online system
+of paper §3.  Reports per-phase latency/recall and the maintenance history.
+
+    PYTHONPATH=src python -m repro.launch.serve --months 8 --n 30000
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+from ..core import LatencyModel, Maintainer, QuakeConfig, QuakeIndex
+from ..core.multiquery import batch_search
+from ..data import wikipedia
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=30_000)
+    ap.add_argument("--dim", type=int, default=32)
+    ap.add_argument("--months", type=int, default=8)
+    ap.add_argument("--queries-per-month", type=int, default=500)
+    ap.add_argument("--k", type=int, default=10)
+    ap.add_argument("--recall-target", type=float, default=0.9)
+    ap.add_argument("--no-maintenance", action="store_true")
+    ap.add_argument("--batch-mode", action="store_true",
+                    help="use the multi-query batched executor")
+    args = ap.parse_args(argv)
+
+    wl = wikipedia.wikipedia_workload(
+        n_total=args.n, dim=args.dim, months=args.months,
+        queries_per_month=args.queries_per_month)
+    ds = wl.dataset
+    cfg = QuakeConfig(metric="ip", recall_target=args.recall_target)
+    t0 = time.time()
+    index = QuakeIndex.build(wl.initial_vectors, wl.initial_ids, config=cfg)
+    maintainer = Maintainer(index, LatencyModel(dim=args.dim))
+    print(f"built: {index.num_vectors} vectors, "
+          f"{index.num_partitions} partitions ({time.time()-t0:.1f}s)")
+
+    resident = {int(i) for i in wl.initial_ids}
+    for t, op in enumerate(wl.operations):
+        if op.kind == "insert":
+            t0 = time.time()
+            index.insert(op.vectors, op.ids)
+            resident.update(int(i) for i in op.ids)
+            dt_u = time.time() - t0
+            print(f"[{t:3d}] insert {len(op.ids):6d}  {dt_u*1e3:7.1f}ms")
+        elif op.kind == "delete":
+            t0 = time.time()
+            index.delete(op.ids)
+            resident.difference_update(int(i) for i in op.ids)
+            print(f"[{t:3d}] delete {len(op.ids):6d}  "
+                  f"{(time.time()-t0)*1e3:7.1f}ms")
+        else:
+            q = op.queries
+            res_ids = np.asarray(sorted(resident))
+            x_res = ds.vectors[res_ids]
+            gt = res_ids[np.argsort(-(q @ x_res.T), axis=1)[:, :args.k]]
+            t0 = time.time()
+            if args.batch_mode:
+                out = batch_search(index, q, args.k)
+                hits = [len(set(out.ids[i]) & set(gt[i])) / args.k
+                        for i in range(len(q))]
+                nprobe = np.nan
+            else:
+                hits, nprobes = [], []
+                for i in range(len(q)):
+                    r = index.search(q[i], args.k)
+                    hits.append(len(set(r.ids) & set(gt[i])) / args.k)
+                    nprobes.append(r.nprobe[0])
+                nprobe = float(np.mean(nprobes))
+            dt_q = (time.time() - t0) / len(q)
+            print(f"[{t:3d}] query  {len(q):6d}  {dt_q*1e6:7.0f}us/q  "
+                  f"recall={np.mean(hits):.3f}  nprobe={nprobe:.1f}  "
+                  f"parts={index.num_partitions}")
+        if not args.no_maintenance:
+            t0 = time.time()
+            rep = maintainer.run()
+            if rep.splits or rep.merges:
+                print(f"      maint: {rep.splits} splits {rep.merges} "
+                      f"merges ({time.time()-t0:.2f}s) cost "
+                      f"{rep.cost_before:.0f}->{rep.cost_after:.0f}ns")
+    print("done.")
+
+
+if __name__ == "__main__":
+    main()

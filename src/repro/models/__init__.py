@@ -1,0 +1,4 @@
+"""Model zoo: GQA transformer LM (dense + MoE), GAT, and four recsys models
+(DIN / SASRec / two-tower / DLRM).  Pure-JAX pytree params with matching
+PartitionSpec trees for the production mesh."""
+from . import gnn, layers, recsys, transformer  # noqa: F401

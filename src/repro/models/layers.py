@@ -1,0 +1,284 @@
+"""Shared neural layers (pure-JAX, pytree params).
+
+Conventions:
+  * params are nested dicts of jnp arrays; every ``init_*`` has a matching
+    ``spec_*`` returning the same tree of ``PartitionSpec`` leaves.
+  * compute dtype vs param dtype are separated (bf16 compute on TPU).
+  * attention is flash-style (blockwise online softmax via ``lax.scan``) so
+    32k-token prefill never materializes (S, S) scores.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+Array = jax.Array
+NEG_INF = -1e30
+
+
+def dense_init(key, shape, in_axis: int = 0, dtype=jnp.float32) -> Array:
+    fan_in = shape[in_axis]
+    std = 1.0 / math.sqrt(fan_in)
+    return jax.random.normal(key, shape, dtype) * std
+
+
+def rmsnorm(x: Array, scale: Array, eps: float = 1e-6) -> Array:
+    # f32 accumulation via the dot, NOT via casting x: casting the input
+    # makes XLA hoist a convert of the whole remat-saved residual stack out
+    # of the backward scan (an 88-layer f32 copy resident across the bwd).
+    ss = jnp.einsum("...d,...d->...", x, x,
+                    preferred_element_type=jnp.float32)
+    var = ss / x.shape[-1]
+    inv = jax.lax.rsqrt(var + eps).astype(x.dtype)
+    return x * inv[..., None] * scale.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+
+def rope_frequencies(d_head: int, theta: float = 10_000.0) -> Array:
+    return 1.0 / (theta ** (jnp.arange(0, d_head, 2,
+                                       dtype=jnp.float32) / d_head))
+
+
+def apply_rope(x: Array, positions: Array, freqs: Array) -> Array:
+    """x: (..., S, H, dh); positions: (..., S)."""
+    angles = positions[..., :, None, None].astype(jnp.float32) \
+        * freqs[None, None, :]
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = x[..., 0::2], x[..., 1::2]
+    out1 = x1 * cos - x2 * sin
+    out2 = x2 * cos + x1 * sin
+    out = jnp.stack([out1, out2], axis=-1).reshape(x.shape)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Flash-style attention (blockwise online softmax)
+# ---------------------------------------------------------------------------
+
+def _attn_block(q, k, v, mask, scale):
+    """One (qb, kb) tile: returns (scores_max, exp_sum, weighted_v)."""
+    s = jnp.einsum("bqhd,bkhd->bhqk", q, k,
+                   preferred_element_type=jnp.float32) * scale
+    s = jnp.where(mask, s, NEG_INF)
+    m = jnp.max(s, axis=-1)                         # (b,h,q)
+    p = jnp.exp(s - m[..., None])
+    l = jnp.sum(p, axis=-1)                          # noqa: E741
+    o = jnp.einsum("bhqk,bkhd->bqhd", p.astype(v.dtype), v,
+                   preferred_element_type=jnp.float32)
+    return m, l, o
+
+
+def _attn_block_grouped(q5, k, v, mask, scale):
+    """Grouped-GQA tile: q5 (b, qb, g, r, d), k/v (b, kb, g, d).
+
+    Contracts against the *unrepeated* K/V — the broadcast over the ``r``
+    query heads per group happens inside the einsum, so MQA/GQA K/V is
+    never materialized at ``h = g*r`` width (§Perf hillclimb 3: the repeat
+    inflated K/V traffic and TP all-gathers by ``r``x — 48x for MQA).
+    Returns (m, l (b,g,r,qb), o (b,qb,g,r,d)).
+    """
+    s = jnp.einsum("bqgrd,bkgd->bgrqk", q5, k,
+                   preferred_element_type=jnp.float32) * scale
+    s = jnp.where(mask[:, None], s, NEG_INF)        # mask (b, 1, 1, qb, kb)
+    m = jnp.max(s, axis=-1)                         # (b,g,r,q)
+    p = jnp.exp(s - m[..., None])
+    l = jnp.sum(p, axis=-1)                          # noqa: E741
+    o = jnp.einsum("bgrqk,bkgd->bqgrd", p.astype(v.dtype), v,
+                   preferred_element_type=jnp.float32)
+    return m, l, o
+
+
+def flash_attention(q: Array, k: Array, v: Array, *, causal: bool,
+                    q_block: int = 512, k_block: int = 1024,
+                    q_offset: int = 0, grouped: bool = False) -> Array:
+    """Memory-bounded attention.  q: (B, Sq, H, dh); k/v: (B, Sk, K, dh)
+    with GQA (H % K == 0).  Never materializes (Sq, Sk) — scans KV blocks
+    with running (max, denom, acc) per q block.
+
+    ``grouped=True`` keeps K/V at its native ``K`` heads and broadcasts
+    over the ``H/K`` query heads per group inside the tile einsum — K/V
+    bytes and TP all-gathers shrink by ``H/K``x (48x for MQA; §Perf
+    hillclimb 3).  Use it when the TP axis divides ``K`` or ``H/K`` so the
+    5-D query reshape shards cleanly; the legacy repeat path is the
+    fallback for awkward head counts (e.g. 8 kv heads on a 16-way axis).
+
+    ``q_offset`` is the absolute position of q[0] (prefill chunks/decode).
+    """
+    b, sq, h, dh = q.shape
+    _, sk, kh, _ = k.shape
+    assert h % kh == 0
+    rep = h // kh
+    if not grouped and rep > 1:
+        k = jnp.repeat(k, rep, axis=2)
+        v = jnp.repeat(v, rep, axis=2)
+    scale = 1.0 / math.sqrt(dh)
+    q_block = min(q_block, sq)
+    k_block = min(k_block, sk)
+    nq = -(-sq // q_block)
+    nk = -(-sk // k_block)
+    sq_pad, sk_pad = nq * q_block, nk * k_block
+    if sq_pad != sq:
+        q = jnp.pad(q, ((0, 0), (0, sq_pad - sq), (0, 0), (0, 0)))
+    if sk_pad != sk:
+        k = jnp.pad(k, ((0, 0), (0, sk_pad - sk), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, sk_pad - sk), (0, 0), (0, 0)))
+
+    kw = kh if grouped else h
+    if grouped:
+        q_r = q.reshape(b, nq, q_block, kh, rep, dh)
+    else:
+        q_r = q.reshape(b, nq, q_block, h, dh)
+    k_r = k.reshape(b, nk, k_block, kw, dh)
+    v_r = v.reshape(b, nk, k_block, kw, dh)
+    qpos = q_offset + jnp.arange(sq_pad).reshape(nq, q_block)
+    kpos = jnp.arange(sk_pad).reshape(nk, k_block)
+    kvalid = (jnp.arange(sk_pad) < sk).reshape(nk, k_block)
+
+    def outer(qi, qb):
+        # remat: the backward pass recomputes each block's (scores, probs)
+        # instead of saving the (B, H, qb, kb) tile per step — without this
+        # the inner scan's AD residuals materialize the full S x S scores.
+        @functools.partial(jax.checkpoint,
+                           policy=jax.checkpoint_policies.nothing_saveable)
+        def inner(carry, ki):
+            m_run, l_run, o_run = carry
+            kb, vb = k_r[:, ki], v_r[:, ki]
+            mask = kvalid[ki][None, None, None, :]
+            if causal:
+                cm = qpos[qi][:, None] >= kpos[ki][None, :]
+                mask = mask & cm[None, None, :, :]
+            if grouped:
+                m_blk, l_blk, o_blk = _attn_block_grouped(
+                    qb, kb, vb, mask, scale)
+                a_shape = lambda a: a.transpose(0, 3, 1, 2)[..., None]
+            else:
+                m_blk, l_blk, o_blk = _attn_block(qb, kb, vb, mask, scale)
+                a_shape = lambda a: a.transpose(0, 2, 1)[..., None]
+            m_new = jnp.maximum(m_run, m_blk)
+            a1 = jnp.exp(m_run - m_new)
+            a2 = jnp.exp(m_blk - m_new)
+            l_new = l_run * a1 + l_blk * a2
+            o_new = o_run * a_shape(a1) + o_blk * a_shape(a2)
+            return (m_new, l_new, o_new), None
+
+        if grouped:
+            m0 = jnp.full((b, kh, rep, q_block), NEG_INF, jnp.float32)
+            l0 = jnp.zeros((b, kh, rep, q_block), jnp.float32)
+            o0 = jnp.zeros((b, q_block, kh, rep, dh), jnp.float32)
+        else:
+            m0 = jnp.full((b, h, q_block), NEG_INF, jnp.float32)
+            l0 = jnp.zeros((b, h, q_block), jnp.float32)
+            o0 = jnp.zeros((b, q_block, h, dh), jnp.float32)
+        (m, l, o), _ = jax.lax.scan(inner, (m0, l0, o0),  # noqa: E741
+                                    jnp.arange(nk))
+        if grouped:
+            denom = jnp.maximum(l, 1e-20).transpose(0, 3, 1, 2)[..., None]
+            return (o / denom).reshape(b, q_block, h, dh)
+        denom = jnp.maximum(l, 1e-20).transpose(0, 2, 1)[..., None]
+        return o / denom
+
+    out = jax.lax.map(lambda qi: outer(qi, q_r[:, qi]), jnp.arange(nq))
+    out = jnp.moveaxis(out, 0, 1).reshape(b, sq_pad, h, dh)[:, :sq]
+    return out.astype(q.dtype)
+
+
+def decode_attention(q: Array, k_cache: Array, v_cache: Array,
+                     cache_len: Array) -> Array:
+    """Single-position decode: q (B, 1, H, dh) against (B, S, K, dh) cache.
+    Linear in S — this is why ``long_500k`` decode is runnable even for
+    full-attention architectures (DESIGN.md §5).  The KV cache may be
+    sequence-sharded; XLA turns the masked softmax reductions into
+    collectives (flash-decoding schedule emerges from the sharding)."""
+    b, _, h, dh = q.shape
+    _, s, kh, _ = k_cache.shape
+    rep = h // kh
+    scale = 1.0 / math.sqrt(dh)
+    qh = q[:, 0].reshape(b, kh, rep, dh)
+    scores = jnp.einsum("bkrd,bskd->bksr", qh, k_cache,
+                        preferred_element_type=jnp.float32) * scale
+    valid = (jnp.arange(s)[None, :] < cache_len[:, None])
+    scores = jnp.where(valid[:, None, :, None], scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=2)
+    out = jnp.einsum("bksr,bskd->bkrd", w.astype(v_cache.dtype), v_cache,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(b, 1, h, dh).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+def init_mlp(key, dims, dtype=jnp.float32) -> Dict[str, Any]:
+    """Plain MLP tower: dims = (in, h1, ..., out)."""
+    ks = jax.random.split(key, len(dims) - 1)
+    return {"w": [dense_init(ks[i], (dims[i], dims[i + 1]), 0, dtype)
+                  for i in range(len(dims) - 1)],
+            "b": [jnp.zeros((dims[i + 1],), dtype)
+                  for i in range(len(dims) - 1)]}
+
+
+def spec_mlp(dims, hidden_axis: Optional[str] = None):
+    n = len(dims) - 1
+    return {"w": [P(None, hidden_axis) if i < n - 1 else P(hidden_axis, None)
+                  for i in range(n)],
+            "b": [P(hidden_axis) if i < n - 1 else P(None)
+                  for i in range(n)]}
+
+
+def apply_mlp(params, x: Array, act=jax.nn.relu,
+              final_act: bool = False) -> Array:
+    n = len(params["w"])
+    for i, (w, b) in enumerate(zip(params["w"], params["b"])):
+        x = x @ w.astype(x.dtype) + b.astype(x.dtype)
+        if i < n - 1 or final_act:
+            x = act(x)
+    return x
+
+
+# ---------------------------------------------------------------------------
+# Embedding bag (recsys substrate — JAX has no nn.EmbeddingBag)
+# ---------------------------------------------------------------------------
+
+def embedding_bag(table: Array, ids: Array, *, mode: str = "sum",
+                  weights: Optional[Array] = None,
+                  valid: Optional[Array] = None) -> Array:
+    """Gather + reduce over the last axis of ``ids``: (..., n) -> (..., D).
+
+    Built from ``jnp.take`` + masked sum — the jnp.take lowers to a gather
+    that GSPMD partitions when ``table`` is row-sharded over 'model'
+    (each shard gathers its resident rows, psum combines).
+
+    ``mode="clip"`` on the take: out-of-range ids clamp to the last row
+    (EmbeddingBag semantics, and identical inside/outside jit) instead of
+    jnp.take's default NaN-fill outside jit.
+    """
+    vecs = jnp.take(table, ids, axis=0, mode="clip")     # (..., n, D)
+    if weights is not None:
+        vecs = vecs * weights[..., None]
+    if valid is not None:
+        vecs = jnp.where(valid[..., None], vecs, 0.0)
+    out = jnp.sum(vecs, axis=-2)
+    if mode == "mean":
+        cnt = (jnp.sum(valid, axis=-1, keepdims=True) if valid is not None
+               else ids.shape[-1])
+        out = out / jnp.maximum(cnt, 1)
+    return out
+
+
+def segment_softmax(scores: Array, segment_ids: Array,
+                    num_segments: int) -> Array:
+    """Softmax over variable-size groups (GNN edge softmax substrate)."""
+    smax = jax.ops.segment_max(scores, segment_ids, num_segments)
+    smax = jnp.nan_to_num(smax, neginf=0.0)
+    ex = jnp.exp(scores - smax[segment_ids])
+    denom = jax.ops.segment_sum(ex, segment_ids, num_segments)
+    return ex / jnp.maximum(denom[segment_ids], 1e-20)

@@ -1,0 +1,291 @@
+"""RecSys model zoo: DIN, SASRec, two-tower retrieval, DLRM.
+
+Shared substrate: huge sparse embedding tables, **row-sharded over the
+'model' mesh axis** (classic DLRM model parallelism) and looked up with
+``jnp.take`` + segment reductions (JAX has no nn.EmbeddingBag — building it
+is part of the system, kernel taxonomy §RecSys).  Dense towers are pure
+data-parallel.
+
+The two-tower model is where Quake plugs in directly: ``retrieval_cand``
+scores one query against 10^6 candidates — served either brute-force
+(batched dot over the sharded candidate matrix) or through the Quake index
+(examples/retrieval_serving.py); the paper's technique *is* this use case.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from .layers import (apply_mlp, dense_init, embedding_bag, init_mlp,
+                     rmsnorm, spec_mlp)
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# DIN — Deep Interest Network (arXiv:1706.06978)
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class DINConfig:
+    vocab: int = 1_000_000
+    embed_dim: int = 18
+    seq_len: int = 100
+    attn_mlp: Tuple[int, ...] = (80, 40)
+    mlp: Tuple[int, ...] = (200, 80)
+    n_dense: int = 13
+    tp_axis: str = "model"
+
+
+def din_init(key: Array, cfg: DINConfig) -> Dict[str, Any]:
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    d = cfg.embed_dim
+    return {
+        "item_embed": dense_init(k1, (cfg.vocab, d), 1),
+        # target-attention MLP over [h, t, h-t, h*t]
+        "attn": init_mlp(k2, (4 * d,) + cfg.attn_mlp + (1,)),
+        # final MLP over [pooled, target, dense]
+        "mlp": init_mlp(k3, (2 * d + cfg.n_dense,) + cfg.mlp + (1,)),
+    }
+
+
+def din_specs(cfg: DINConfig) -> Dict[str, Any]:
+    return {"item_embed": P(cfg.tp_axis, None),
+            "attn": spec_mlp((4 * cfg.embed_dim,) + cfg.attn_mlp + (1,)),
+            "mlp": spec_mlp((2 * cfg.embed_dim + cfg.n_dense,)
+                            + cfg.mlp + (1,))}
+
+
+def din_forward(params: Dict[str, Any], batch: Dict[str, Array],
+                cfg: DINConfig) -> Array:
+    hist = jnp.take(params["item_embed"], batch["history"], axis=0)
+    tgt = jnp.take(params["item_embed"], batch["target_item"], axis=0)
+    t = jnp.broadcast_to(tgt[:, None, :], hist.shape)
+    ai = jnp.concatenate([hist, t, hist - t, hist * t], axis=-1)
+    scores = apply_mlp(params["attn"], ai, act=jax.nn.sigmoid)[..., 0]
+    scores = jnp.where(batch["history_mask"], scores, -1e30)
+    w = jax.nn.softmax(scores, axis=-1)
+    pooled = jnp.einsum("bt,btd->bd", w, hist)
+    x = jnp.concatenate([pooled, tgt, batch["dense"]], axis=-1)
+    return apply_mlp(params["mlp"], x, act=jax.nn.relu)[..., 0]
+
+
+def din_loss(params, batch, cfg: DINConfig) -> Array:
+    logit = din_forward(params, batch, cfg)
+    y = batch["label"]
+    return jnp.mean(jnp.maximum(logit, 0) - logit * y
+                    + jnp.log1p(jnp.exp(-jnp.abs(logit))))
+
+
+# ---------------------------------------------------------------------------
+# SASRec — self-attentive sequential recommendation (arXiv:1808.09781)
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class SASRecConfig:
+    vocab: int = 1_000_000
+    embed_dim: int = 50
+    n_blocks: int = 2
+    n_heads: int = 1
+    seq_len: int = 50
+    tp_axis: str = "model"
+
+
+def sasrec_init(key: Array, cfg: SASRecConfig) -> Dict[str, Any]:
+    d = cfg.embed_dim
+    keys = iter(jax.random.split(key, 4 + 6 * cfg.n_blocks))
+    blocks = []
+    for _ in range(cfg.n_blocks):
+        blocks.append({
+            "wq": dense_init(next(keys), (d, d), 0),
+            "wk": dense_init(next(keys), (d, d), 0),
+            "wv": dense_init(next(keys), (d, d), 0),
+            "wo": dense_init(next(keys), (d, d), 0),
+            "ff1": dense_init(next(keys), (d, d), 0),
+            "ff2": dense_init(next(keys), (d, d), 0),
+            "ln1": jnp.ones((d,)), "ln2": jnp.ones((d,)),
+        })
+    return {"item_embed": dense_init(next(keys), (cfg.vocab, d), 1),
+            "pos_embed": dense_init(next(keys), (cfg.seq_len, d), 1),
+            "blocks": blocks, "ln_f": jnp.ones((d,))}
+
+
+def sasrec_specs(cfg: SASRecConfig) -> Dict[str, Any]:
+    blk = {"wq": P(None, None), "wk": P(None, None), "wv": P(None, None),
+           "wo": P(None, None), "ff1": P(None, None), "ff2": P(None, None),
+           "ln1": P(None), "ln2": P(None)}
+    return {"item_embed": P(cfg.tp_axis, None), "pos_embed": P(None, None),
+            "blocks": [dict(blk) for _ in range(cfg.n_blocks)],
+            "ln_f": P(None)}
+
+
+def sasrec_encode(params: Dict[str, Any], history: Array, mask: Array,
+                  cfg: SASRecConfig) -> Array:
+    """(B, T) item history -> (B, d) sequence representation."""
+    b, t = history.shape
+    d = cfg.embed_dim
+    x = jnp.take(params["item_embed"], history, axis=0)
+    x = x + params["pos_embed"][None, :t, :]
+    causal = jnp.tril(jnp.ones((t, t), bool))
+    attn_mask = causal[None, :, :] & mask[:, None, :]
+    for blk in params["blocks"]:
+        h = rmsnorm(x, blk["ln1"])
+        q, k, v = h @ blk["wq"], h @ blk["wk"], h @ blk["wv"]
+        s = jnp.einsum("bqd,bkd->bqk", q, k) / jnp.sqrt(float(d))
+        s = jnp.where(attn_mask, s, -1e30)
+        a = jax.nn.softmax(s, axis=-1)
+        x = x + (jnp.einsum("bqk,bkd->bqd", a, v) @ blk["wo"])
+        h2 = rmsnorm(x, blk["ln2"])
+        x = x + jax.nn.relu(h2 @ blk["ff1"]) @ blk["ff2"]
+    x = rmsnorm(x, params["ln_f"])
+    # last valid position
+    last = jnp.maximum(jnp.sum(mask, axis=1) - 1, 0)
+    return x[jnp.arange(b), last]
+
+
+def sasrec_loss(params, batch, cfg: SASRecConfig) -> Array:
+    """In-batch sampled softmax over next items."""
+    h = sasrec_encode(params, batch["history"], batch["history_mask"], cfg)
+    tgt = jnp.take(params["item_embed"], batch["target_item"], axis=0)
+    logits = h @ tgt.T                                   # (B, B) in-batch
+    labels = jnp.arange(h.shape[0])
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = logits[jnp.arange(h.shape[0]), labels]
+    return jnp.mean(lse - gold)
+
+
+# ---------------------------------------------------------------------------
+# Two-tower retrieval (Yi et al., RecSys'19)
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class TwoTowerConfig:
+    user_vocab: int = 1_000_000
+    item_vocab: int = 1_000_000
+    embed_dim: int = 256
+    tower_mlp: Tuple[int, ...] = (1024, 512, 256)
+    hist_len: int = 50
+    temperature: float = 0.05
+    tp_axis: str = "model"
+
+
+def twotower_init(key: Array, cfg: TwoTowerConfig) -> Dict[str, Any]:
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    d = cfg.embed_dim
+    return {"user_embed": dense_init(k1, (cfg.user_vocab, d), 1),
+            "item_embed": dense_init(k2, (cfg.item_vocab, d), 1),
+            "user_tower": init_mlp(k3, (d,) + cfg.tower_mlp),
+            "item_tower": init_mlp(k4, (d,) + cfg.tower_mlp)}
+
+
+def twotower_specs(cfg: TwoTowerConfig) -> Dict[str, Any]:
+    d = cfg.embed_dim
+    return {"user_embed": P(cfg.tp_axis, None),
+            "item_embed": P(cfg.tp_axis, None),
+            "user_tower": spec_mlp((d,) + cfg.tower_mlp, cfg.tp_axis),
+            "item_tower": spec_mlp((d,) + cfg.tower_mlp, cfg.tp_axis)}
+
+
+def user_repr(params, batch, cfg: TwoTowerConfig) -> Array:
+    u = embedding_bag(params["user_embed"], batch["history"], mode="mean",
+                      valid=batch["history_mask"])
+    u = apply_mlp(params["user_tower"], u, act=jax.nn.relu)
+    return u / jnp.maximum(jnp.linalg.norm(u, axis=-1, keepdims=True), 1e-6)
+
+
+def item_repr(params, item_ids: Array, cfg: TwoTowerConfig) -> Array:
+    i = jnp.take(params["item_embed"], item_ids, axis=0)
+    i = apply_mlp(params["item_tower"], i, act=jax.nn.relu)
+    return i / jnp.maximum(jnp.linalg.norm(i, axis=-1, keepdims=True), 1e-6)
+
+
+def twotower_loss(params, batch, cfg: TwoTowerConfig) -> Array:
+    """In-batch sampled softmax with logQ correction (Zipf propensity)."""
+    u = user_repr(params, batch, cfg)
+    v = item_repr(params, batch["target_item"], cfg)
+    logits = (u @ v.T) / cfg.temperature
+    # logQ correction: in-batch negatives are Zipf-skewed, correct by -log q
+    logq = -jnp.log1p(batch["target_item"].astype(jnp.float32))
+    logits = logits - logq[None, :]
+    n = u.shape[0]
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.diag(logits)
+    return jnp.mean(lse - gold)
+
+
+def retrieval_scores(params, batch, candidates: Array,
+                     cfg: TwoTowerConfig) -> Array:
+    """``retrieval_cand``: (B, n_cand) scores against encoded candidates —
+    one GEMM over the (pre-encoded, sharded) candidate matrix.  The ANN
+    alternative routes this through the Quake engine."""
+    u = user_repr(params, batch, cfg)
+    return u @ candidates.T
+
+
+# ---------------------------------------------------------------------------
+# DLRM (arXiv:1906.00091) — RM-2 configuration
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class DLRMConfig:
+    n_dense: int = 13
+    n_sparse: int = 26
+    vocab: int = 1_000_000
+    embed_dim: int = 64
+    bot_mlp: Tuple[int, ...] = (512, 256, 64)
+    top_mlp: Tuple[int, ...] = (512, 512, 256, 1)
+    tp_axis: str = "model"
+
+    @property
+    def n_interactions(self) -> int:
+        f = self.n_sparse + 1
+        return f * (f - 1) // 2
+
+
+def dlrm_init(key: Array, cfg: DLRMConfig) -> Dict[str, Any]:
+    k1, k2, k3 = jax.random.split(key, 3)
+    tables = dense_init(k1, (cfg.n_sparse, cfg.vocab, cfg.embed_dim), 2)
+    top_in = cfg.n_interactions + cfg.embed_dim
+    return {"tables": tables,
+            "bot": init_mlp(k2, (cfg.n_dense,) + cfg.bot_mlp),
+            "top": init_mlp(k3, (top_in,) + cfg.top_mlp)}
+
+
+def dlrm_specs(cfg: DLRMConfig) -> Dict[str, Any]:
+    top_in = cfg.n_interactions + cfg.embed_dim
+    return {"tables": P(None, cfg.tp_axis, None),
+            "bot": spec_mlp((cfg.n_dense,) + cfg.bot_mlp),
+            "top": spec_mlp((top_in,) + cfg.top_mlp)}
+
+
+def dlrm_forward(params: Dict[str, Any], batch: Dict[str, Array],
+                 cfg: DLRMConfig) -> Array:
+    dense = apply_mlp(params["bot"], batch["dense"], act=jax.nn.relu,
+                      final_act=True)                     # (B, d)
+    # per-field lookup: tables (F, V, d), ids (B, F)
+    emb = _dlrm_lookup(params["tables"], batch["sparse"])
+    feats = jnp.concatenate([dense[:, None, :], emb], axis=1)  # (B,F+1,d)
+    inter = jnp.einsum("bfd,bgd->bfg", feats, feats)
+    f = feats.shape[1]
+    iu, ju = jnp.triu_indices(f, k=1)
+    flat = inter[:, iu, ju]                                # (B, F(F-1)/2)
+    x = jnp.concatenate([dense, flat], axis=-1)
+    return apply_mlp(params["top"], x, act=jax.nn.relu)[..., 0]
+
+
+def _dlrm_lookup(tables: Array, sparse: Array) -> Array:
+    """tables (F, V, d), sparse ids (B, F) -> (B, F, d)."""
+    def one(table, ids):
+        return jnp.take(table, ids, axis=0)
+    return jax.vmap(one, in_axes=(0, 1), out_axes=1)(tables, sparse)
+
+
+def dlrm_loss(params, batch, cfg: DLRMConfig) -> Array:
+    logit = dlrm_forward(params, batch, cfg)
+    y = batch["label"]
+    return jnp.mean(jnp.maximum(logit, 0) - logit * y
+                    + jnp.log1p(jnp.exp(-jnp.abs(logit))))

@@ -1,0 +1,506 @@
+"""Decoder-only transformer LM (dense + MoE), GQA, RoPE, flash attention.
+
+Covers the five assigned LM architectures (mistral-large-123b, granite-34b,
+qwen2.5-14b, qwen3-moe-235b-a22b, llama4-scout-17b-16e) through one config.
+
+Paths:
+  * ``forward_train``  — full causal forward -> logits (flash attention,
+                         lax.scan over layers, optional remat)
+  * ``prefill``        — forward + emit KV cache (inference prefill)
+  * ``decode_step``    — one token against a KV cache (inference decode;
+                         linear in context, works for 524k contexts with a
+                         sequence-sharded cache)
+
+Sharding (DESIGN.md §6): weights FSDP-sharded over ("pod","data") and
+tensor-parallel over "model"; the residual stream is sequence-sharded over
+"model" between blocks (Megatron-SP; GSPMD inserts the all-gather /
+reduce-scatter pair at block boundaries from the sharding constraints).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from dataclasses import dataclass
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from .layers import (apply_rope, decode_attention, dense_init,
+                     flash_attention, rmsnorm, rope_frequencies)
+
+Array = jax.Array
+
+
+@dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int
+    top_k: int
+    d_ff: int                      # per-expert hidden
+    n_shared: int = 0              # shared (always-on) experts
+    capacity_factor: float = 1.25
+    group_size: int = 512
+    router_aux_weight: float = 0.01
+    impl: str = "dense"            # GShard one-hot dispatch/combine
+                                   # einsums (the GSPMD-friendly form);
+                                   # an argsort-bucketed dispatch is a
+                                   # potential §Perf follow-up
+
+
+@dataclass(frozen=True)
+class TransformerConfig:
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    d_head: Optional[int] = None
+    qkv_bias: bool = False
+    rope_theta: float = 1_000_000.0
+    moe: Optional[MoEConfig] = None
+    param_dtype: Any = jnp.float32
+    compute_dtype: Any = jnp.bfloat16
+    remat: bool = True
+    q_block: int = 512
+    k_block: int = 1024
+    # mesh axis groups
+    dp_axes: Tuple[str, ...] = ("pod", "data")
+    tp_axis: str = "model"
+    seq_shard_activations: bool = True
+    # grouped-GQA attention: contract against unrepeated K/V (K/V traffic
+    # / (H/K)).  Set by the launcher when tp divides n_kv_heads or the
+    # group width (families._adapt_lm_cfg); False = legacy repeat path.
+    attn_grouped: bool = False
+    # "jnp": blockwise-scan flash in XLA (score tiles round-trip HBM);
+    # "pallas": fused VMEM kernel (kernels/flash_attention.py) — the
+    # TPU-native hot path for the serving cells (interpret mode on CPU).
+    attn_impl: str = "jnp"
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_head or self.d_model // self.n_heads
+
+
+# ---------------------------------------------------------------------------
+# Init + sharding specs
+# ---------------------------------------------------------------------------
+
+def init_params(key: Array, cfg: TransformerConfig) -> Dict[str, Any]:
+    l, d, h, k = cfg.n_layers, cfg.d_model, cfg.n_heads, cfg.n_kv_heads
+    dh, f, v = cfg.head_dim, cfg.d_ff, cfg.vocab_size
+    dt = cfg.param_dtype
+    keys = iter(jax.random.split(key, 32))
+
+    def dn(shape, in_axis=1):  # layer-stacked dense
+        return dense_init(next(keys), shape, in_axis, dt)
+
+    attn = {"wq": dn((l, d, h * dh)), "wk": dn((l, d, k * dh)),
+            "wv": dn((l, d, k * dh)), "wo": dn((l, h * dh, d))}
+    if cfg.qkv_bias:
+        attn |= {"bq": jnp.zeros((l, h * dh), dt),
+                 "bk": jnp.zeros((l, k * dh), dt),
+                 "bv": jnp.zeros((l, k * dh), dt)}
+    params: Dict[str, Any] = {
+        "embed": dense_init(next(keys), (v, d), 1, dt),
+        "ln1": jnp.ones((l, d), dt), "ln2": jnp.ones((l, d), dt),
+        "attn": attn,
+        "ln_f": jnp.ones((d,), dt),
+        "lm_head": dense_init(next(keys), (d, v), 0, dt),
+    }
+    if cfg.moe is None:
+        params["mlp"] = {"w_gate": dn((l, d, f)), "w_up": dn((l, d, f)),
+                         "w_down": dn((l, f, d), in_axis=1)}
+    else:
+        e, fe = cfg.moe.n_experts, cfg.moe.d_ff
+        params["moe"] = {
+            "router": dn((l, d, e)),
+            "w_gate": dn((l, e, d, fe), in_axis=2),
+            "w_up": dn((l, e, d, fe), in_axis=2),
+            "w_down": dn((l, e, fe, d), in_axis=2),
+        }
+        if cfg.moe.n_shared:
+            fs = cfg.moe.d_ff * cfg.moe.n_shared
+            params["shared_mlp"] = {"w_gate": dn((l, d, fs)),
+                                    "w_up": dn((l, d, fs)),
+                                    "w_down": dn((l, fs, d), in_axis=1)}
+    return params
+
+
+def param_specs(cfg: TransformerConfig) -> Dict[str, Any]:
+    dp, tp = cfg.dp_axes, cfg.tp_axis
+    attn = {"wq": P(None, dp, tp), "wk": P(None, dp, tp),
+            "wv": P(None, dp, tp), "wo": P(None, tp, dp)}
+    if cfg.qkv_bias:
+        attn |= {"bq": P(None, tp), "bk": P(None, tp), "bv": P(None, tp)}
+    specs: Dict[str, Any] = {
+        "embed": P(tp, dp),
+        "ln1": P(None, None), "ln2": P(None, None),
+        "attn": attn,
+        "ln_f": P(None),
+        "lm_head": P(dp, tp),
+    }
+    if cfg.moe is None:
+        specs["mlp"] = {"w_gate": P(None, dp, tp), "w_up": P(None, dp, tp),
+                        "w_down": P(None, tp, dp)}
+    else:
+        specs["moe"] = {"router": P(None, dp, None),
+                        "w_gate": P(None, tp, dp, None),
+                        "w_up": P(None, tp, dp, None),
+                        "w_down": P(None, tp, None, dp)}
+        if cfg.moe.n_shared:
+            specs["shared_mlp"] = {"w_gate": P(None, dp, tp),
+                                   "w_up": P(None, dp, tp),
+                                   "w_down": P(None, tp, dp)}
+    return specs
+
+
+def _constrain(x: Array, spec: Optional[P]) -> Array:
+    if spec is None:
+        return x
+    try:
+        return jax.lax.with_sharding_constraint(x, spec)
+    except (ValueError, RuntimeError):  # no mesh in context (CPU unit tests)
+        return x
+
+
+# ---------------------------------------------------------------------------
+# MoE layer
+# ---------------------------------------------------------------------------
+
+def moe_ffn(p: Dict[str, Array], x: Array, cfg: TransformerConfig,
+            tp_spec: Optional[P]) -> Tuple[Array, Array]:
+    """GShard-style top-k MoE with capacity.  x: (B, S, D) -> (out, aux).
+
+    One-hot dispatch/combine einsums — the GSPMD-friendly baseline; the
+    (g, E, C) slot one-hot is the known traffic cost (visible as the
+    dispatch einsum/concat bytes in the qwen3 §Roofline row).
+    """
+    mcfg = cfg.moe
+    b, s, d = x.shape
+    e, k = mcfg.n_experts, mcfg.top_k
+    g = min(mcfg.group_size, b * s)
+    t = b * s
+    ng = -(-t // g)
+    xf = x.reshape(t, d)
+    if ng * g != t:
+        xf = jnp.pad(xf, ((0, ng * g - t), (0, 0)))
+    xg = xf.reshape(ng, g, d)
+
+    logits = jnp.einsum("gtd,de->gte", xg, p["router"].astype(x.dtype),
+                        preferred_element_type=jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_w, top_e = jax.lax.top_k(probs, k)              # (ng, g, k)
+    top_w = top_w / jnp.maximum(jnp.sum(top_w, -1, keepdims=True), 1e-9)
+
+    # aux load-balance loss (Switch): E * sum_e f_e * P_e
+    me = jnp.mean(probs, axis=(0, 1))
+    ce = jnp.mean(jax.nn.one_hot(top_e[..., 0], e), axis=(0, 1))
+    aux = e * jnp.sum(me * ce) * mcfg.router_aux_weight
+
+    cap = int(math.ceil(g * k * mcfg.capacity_factor / e / 4.0) * 4)
+    onehot = jax.nn.one_hot(top_e, e, dtype=jnp.float32)  # (ng,g,k,E)
+    flat = onehot.reshape(ng, g * k, e)
+    pos = jnp.cumsum(flat, axis=1) * flat - 1.0            # slot per token
+    keep = (pos >= 0) & (pos < cap)
+    slot = jax.nn.one_hot(pos, cap, dtype=jnp.float32) \
+        * keep[..., None].astype(jnp.float32)              # (ng,g*k,E,C)
+    gates = (slot * top_w.reshape(ng, g * k, 1, 1))
+    dispatch = slot.reshape(ng, g, k, e, cap).sum(2)       # (ng,g,E,C)
+    combine = gates.reshape(ng, g, k, e, cap).sum(2)
+    dispatch = _constrain(dispatch, tp_spec)
+    combine = _constrain(combine, tp_spec)
+
+    ein = jnp.einsum("gsec,gsd->gecd", dispatch.astype(x.dtype), xg,
+                     preferred_element_type=jnp.float32).astype(x.dtype)
+    hg = jnp.einsum("gecd,edf->gecf", ein, p["w_gate"].astype(x.dtype))
+    hu = jnp.einsum("gecd,edf->gecf", ein, p["w_up"].astype(x.dtype))
+    ho = jax.nn.silu(hg) * hu
+    eout = jnp.einsum("gecf,efd->gecd", ho, p["w_down"].astype(x.dtype))
+    out = jnp.einsum("gsec,gecd->gsd", combine.astype(x.dtype), eout,
+                     preferred_element_type=jnp.float32).astype(x.dtype)
+    out = out.reshape(ng * g, d)[:t].reshape(b, s, d)
+    return out, aux
+
+
+# ---------------------------------------------------------------------------
+# Transformer block + stacks
+# ---------------------------------------------------------------------------
+
+def _qkv(lp, x, cfg):
+    b, s, d = x.shape
+    dh = cfg.head_dim
+    q = x @ lp["attn"]["wq"].astype(x.dtype)
+    kk = x @ lp["attn"]["wk"].astype(x.dtype)
+    v = x @ lp["attn"]["wv"].astype(x.dtype)
+    if cfg.qkv_bias:
+        q = q + lp["attn"]["bq"].astype(x.dtype)
+        kk = kk + lp["attn"]["bk"].astype(x.dtype)
+        v = v + lp["attn"]["bv"].astype(x.dtype)
+    return (q.reshape(b, s, cfg.n_heads, dh),
+            kk.reshape(b, s, cfg.n_kv_heads, dh),
+            v.reshape(b, s, cfg.n_kv_heads, dh))
+
+
+def _ffn(lp, x, cfg, tp_spec):
+    if cfg.moe is None:
+        h = jax.nn.silu(x @ lp["mlp"]["w_gate"].astype(x.dtype)) \
+            * (x @ lp["mlp"]["w_up"].astype(x.dtype))
+        h = _constrain(h, None)
+        return h @ lp["mlp"]["w_down"].astype(x.dtype), jnp.zeros((),
+                                                                  jnp.float32)
+    out, aux = moe_ffn(lp["moe"], x, cfg, tp_spec)
+    if cfg.moe.n_shared:
+        sh = jax.nn.silu(x @ lp["shared_mlp"]["w_gate"].astype(x.dtype)) \
+            * (x @ lp["shared_mlp"]["w_up"].astype(x.dtype))
+        out = out + sh @ lp["shared_mlp"]["w_down"].astype(x.dtype)
+    return out, aux
+
+
+def _act_specs(cfg: TransformerConfig):
+    dp, tp = cfg.dp_axes, cfg.tp_axis
+    seq = tp if cfg.seq_shard_activations else None
+    return {
+        "resid": P(dp, seq, None),      # (B, S, D) sequence-sharded (SP)
+        "heads": P(dp, None, tp, None),  # (B, S, H, dh) head-sharded (TP)
+        "moe_disp": P(dp, None, tp, None) if cfg.moe else None,
+    }
+
+
+def block(lp: Dict[str, Any], x: Array, positions: Array,
+          cfg: TransformerConfig, freqs: Array) -> Tuple[Array, Array]:
+    sp = _act_specs(cfg)
+    h = rmsnorm(x, lp["ln1"].astype(x.dtype))
+    q, k, v = _qkv(lp, h, cfg)
+    q = _constrain(apply_rope(q, positions, freqs), sp["heads"])
+    # k/v left unconstrained: n_kv_heads may not divide the tp axis; GSPMD
+    # propagates the projection's output sharding through the reshape.
+    k = apply_rope(k, positions, freqs)
+    att = flash_attention(q, k, v, causal=True, q_block=cfg.q_block,
+                          k_block=cfg.k_block, grouped=cfg.attn_grouped)
+    b, s, _, _ = att.shape
+    att = att.reshape(b, s, cfg.n_heads * cfg.head_dim)
+    x = x + _constrain(att @ lp["attn"]["wo"].astype(x.dtype), sp["resid"])
+    h2 = rmsnorm(x, lp["ln2"].astype(x.dtype))
+    f, aux = _ffn(lp, h2, cfg, sp["moe_disp"])
+    x = x + _constrain(f, sp["resid"])
+    return x, aux
+
+
+def _layer_tree(params):
+    return {k: params[k] for k in params
+            if k in ("ln1", "ln2", "attn", "mlp", "moe", "shared_mlp")}
+
+
+def forward_train(params: Dict[str, Any], tokens: Array,
+                  cfg: TransformerConfig) -> Tuple[Array, Array]:
+    """tokens (B, S) int32 -> (logits (B, S, V) fp32, aux_loss scalar)."""
+    sp = _act_specs(cfg)
+    x = jnp.take(params["embed"], tokens, axis=0).astype(cfg.compute_dtype)
+    x = _constrain(x, sp["resid"])
+    positions = jnp.broadcast_to(jnp.arange(tokens.shape[1]), tokens.shape)
+    freqs = rope_frequencies(cfg.head_dim, cfg.rope_theta)
+
+    def body(carry, lp):
+        x, aux = carry
+        x, a = block(lp, x, positions, cfg, freqs)
+        return (x, aux + a), None
+
+    body_fn = body
+    if cfg.remat:
+        body_fn = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.nothing_saveable)
+    (x, aux), _ = jax.lax.scan(body_fn, (x, jnp.zeros((), jnp.float32)),
+                               _layer_tree(params))
+    x = rmsnorm(x, params["ln_f"].astype(x.dtype))
+    logits = (x @ params["lm_head"].astype(x.dtype)).astype(jnp.float32)
+    return logits, aux
+
+
+def lm_loss(params: Dict[str, Any], tokens: Array,
+            cfg: TransformerConfig) -> Array:
+    """Next-token cross-entropy (+ MoE aux)."""
+    logits, aux = forward_train(params, tokens, cfg)
+    tgt = tokens[:, 1:]
+    lg = logits[:, :-1]
+    lse = jax.nn.logsumexp(lg, axis=-1)
+    gold = jnp.take_along_axis(lg, tgt[..., None], axis=-1)[..., 0]
+    return jnp.mean(lse - gold) + aux
+
+
+def hidden_states(params: Dict[str, Any], tokens: Array,
+                  cfg: TransformerConfig) -> Tuple[Array, Array]:
+    """Forward up to the final norm (no unembedding): (B, S, D), aux."""
+    sp = _act_specs(cfg)
+    x = jnp.take(params["embed"], tokens, axis=0).astype(cfg.compute_dtype)
+    x = _constrain(x, sp["resid"])
+    positions = jnp.broadcast_to(jnp.arange(tokens.shape[1]), tokens.shape)
+    freqs = rope_frequencies(cfg.head_dim, cfg.rope_theta)
+
+    def body(carry, lp):
+        x, aux = carry
+        x, a = block(lp, x, positions, cfg, freqs)
+        return (x, aux + a), None
+
+    body_fn = body
+    if cfg.remat:
+        body_fn = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.nothing_saveable)
+    (x, aux), _ = jax.lax.scan(body_fn, (x, jnp.zeros((), jnp.float32)),
+                               _layer_tree(params))
+    return rmsnorm(x, params["ln_f"].astype(x.dtype)), aux
+
+
+def lm_loss_chunked(params: Dict[str, Any], tokens: Array,
+                    cfg: TransformerConfig, chunk: int = 512) -> Array:
+    """Memory-bounded loss: the (B, S, V) logits tensor is never
+    materialized — the unembedding + cross-entropy run per sequence chunk
+    under remat.  Required for 150k-vocab 4k-seq training cells."""
+    x, aux = hidden_states(params, tokens, cfg)
+    b, s, d = x.shape
+    tgt = jnp.pad(tokens[:, 1:], ((0, 0), (0, 1)))           # (B, S)
+    mask = jnp.arange(s) < (s - 1)
+    n_chunks = -(-s // chunk)
+    s_pad = n_chunks * chunk
+    if s_pad != s:
+        x = jnp.pad(x, ((0, 0), (0, s_pad - s), (0, 0)))
+        tgt = jnp.pad(tgt, ((0, 0), (0, s_pad - s)))
+        mask = jnp.pad(mask, (0, s_pad - s))
+    xr = x.reshape(b, n_chunks, chunk, d)
+    tr_ = tgt.reshape(b, n_chunks, chunk)
+    mr = mask.reshape(n_chunks, chunk)
+
+    @functools.partial(jax.checkpoint,
+                       policy=jax.checkpoint_policies.nothing_saveable)
+    def one(ci):
+        lg = (xr[:, ci] @ params["lm_head"].astype(x.dtype)
+              ).astype(jnp.float32)
+        lse = jax.nn.logsumexp(lg, axis=-1)
+        gold = jnp.take_along_axis(lg, tr_[:, ci][..., None],
+                                   axis=-1)[..., 0]
+        return jnp.sum((lse - gold) * mr[ci][None, :])
+
+    def scan_body(tot, ci):
+        return tot + one(ci), None
+
+    total, _ = jax.lax.scan(scan_body, jnp.zeros(()), jnp.arange(n_chunks))
+    return total / (b * (s - 1)) + aux
+
+
+# ---------------------------------------------------------------------------
+# Serving
+# ---------------------------------------------------------------------------
+
+def cache_specs(cfg: TransformerConfig, seq_shard: bool = False):
+    """KV cache sharding: batch over dp; sequence over model when the cache
+    dominates memory (decode_32k / long_500k -> flash-decoding layout)."""
+    dp, tp = cfg.dp_axes, cfg.tp_axis
+    if seq_shard:
+        return P(None, dp, tp, None, None)      # (L, B, S, K, dh)
+    return P(None, dp, None, tp, None)
+
+
+def prefill(params: Dict[str, Any], tokens: Array, cfg: TransformerConfig
+            ) -> Tuple[Array, Tuple[Array, Array]]:
+    """Full-prompt forward; returns (last-position logits, KV cache)."""
+    sp = _act_specs(cfg)
+    x = jnp.take(params["embed"], tokens, axis=0).astype(cfg.compute_dtype)
+    x = _constrain(x, sp["resid"])
+    positions = jnp.broadcast_to(jnp.arange(tokens.shape[1]), tokens.shape)
+    freqs = rope_frequencies(cfg.head_dim, cfg.rope_theta)
+
+    def body(x, lp):
+        h = rmsnorm(x, lp["ln1"].astype(x.dtype))
+        q, k, v = _qkv(lp, h, cfg)
+        # heads constraint keeps attention TP-sharded (without it GSPMD
+        # replicates the whole attention block per device — §Perf hc3 it2)
+        q = _constrain(apply_rope(q, positions, freqs), sp["heads"])
+        k = apply_rope(k, positions, freqs)
+        if cfg.attn_impl == "pallas":
+            from ..kernels.flash_attention import flash_attention_pallas
+            att = flash_attention_pallas(q, k, v, causal=True,
+                                         q_block=cfg.q_block,
+                                         k_block=cfg.k_block)
+        else:
+            att = flash_attention(q, k, v, causal=True,
+                                  q_block=cfg.q_block, k_block=cfg.k_block,
+                                  grouped=cfg.attn_grouped)
+        b, s, _, _ = att.shape
+        att = att.reshape(b, s, cfg.n_heads * cfg.head_dim)
+        x = x + _constrain(att @ lp["attn"]["wo"].astype(x.dtype),
+                           sp["resid"])
+        h2 = rmsnorm(x, lp["ln2"].astype(x.dtype))
+        f, _ = _ffn(lp, h2, cfg, sp["moe_disp"])
+        return x + _constrain(f, sp["resid"]), (k, v)
+
+    x, kv = jax.lax.scan(body, x, _layer_tree(params))
+    x = rmsnorm(x[:, -1:], params["ln_f"].astype(x.dtype))
+    logits = (x @ params["lm_head"].astype(x.dtype)).astype(jnp.float32)
+    return logits[:, 0], kv
+
+
+def decode_step(params: Dict[str, Any], token: Array, cache_k: Array,
+                cache_v: Array, cache_len: Array, cfg: TransformerConfig,
+                update_cache: bool = True
+                ) -> Tuple[Array, Tuple[Array, Array]]:
+    """One decode step.  token (B,) int32; cache (L, B, S, K, dh);
+    cache_len (B,) current lengths.  Linear in S."""
+    x = jnp.take(params["embed"], token[:, None],
+                 axis=0).astype(cfg.compute_dtype)     # (B, 1, D)
+    freqs = rope_frequencies(cfg.head_dim, cfg.rope_theta)
+    positions = cache_len[:, None]
+
+    def body(x, layer):
+        lp, ck, cv = layer
+        h = rmsnorm(x, lp["ln1"].astype(x.dtype))
+        q, k, v = _qkv(lp, h, cfg)
+        q = apply_rope(q, positions, freqs)
+        k = apply_rope(k, positions, freqs)
+        if update_cache:
+            bidx = jnp.arange(x.shape[0])
+            ck = ck.at[bidx, cache_len].set(k[:, 0].astype(ck.dtype))
+            cv = cv.at[bidx, cache_len].set(v[:, 0].astype(cv.dtype))
+            att = decode_attention(q, ck, cv, cache_len + 1)
+        else:
+            att = decode_attention(q, ck, cv, cache_len)
+        att = att.reshape(x.shape[0], 1, cfg.n_heads * cfg.head_dim)
+        x = x + att @ lp["attn"]["wo"].astype(x.dtype)
+        h2 = rmsnorm(x, lp["ln2"].astype(x.dtype))
+        f, _ = _ffn(lp, h2, cfg, None)
+        return x + f, (ck, cv)
+
+    def scan_body(x, layer):
+        return body(x, layer)
+
+    x, (ck_new, cv_new) = jax.lax.scan(
+        scan_body, x, (_layer_tree(params), cache_k, cache_v))
+    x = rmsnorm(x, params["ln_f"].astype(x.dtype))
+    logits = (x @ params["lm_head"].astype(x.dtype)).astype(jnp.float32)
+    return logits[:, 0], (ck_new, cv_new)
+
+
+def param_count(cfg: TransformerConfig) -> int:
+    """Analytic parameter count (for 6ND model-FLOPs in the roofline)."""
+    d, dh = cfg.d_model, cfg.head_dim
+    attn = d * dh * (cfg.n_heads + 2 * cfg.n_kv_heads) + cfg.n_heads * dh * d
+    if cfg.moe is None:
+        ffn = 3 * d * cfg.d_ff
+    else:
+        ffn = cfg.moe.n_experts * 3 * d * cfg.moe.d_ff + d * cfg.moe.n_experts
+        ffn += cfg.moe.n_shared * 3 * d * cfg.moe.d_ff
+    per_layer = attn + ffn + 2 * d
+    return cfg.n_layers * per_layer + 2 * cfg.vocab_size * d + d
+
+
+def active_param_count(cfg: TransformerConfig) -> int:
+    """Active (per-token) parameters — MoE counts top_k + shared experts."""
+    if cfg.moe is None:
+        return param_count(cfg)
+    d, dh = cfg.d_model, cfg.head_dim
+    attn = d * dh * (cfg.n_heads + 2 * cfg.n_kv_heads) + cfg.n_heads * dh * d
+    ffn = (cfg.moe.top_k + cfg.moe.n_shared) * 3 * d * cfg.moe.d_ff \
+        + d * cfg.moe.n_experts
+    per_layer = attn + ffn + 2 * d
+    return cfg.n_layers * per_layer + 2 * cfg.vocab_size * d + d

@@ -1,0 +1,3 @@
+"""Roofline analysis from compiled dry-run artifacts (§Roofline)."""
+from .analysis import HW_V5E, analyze_compiled, model_flops  # noqa: F401
+from .analysis import parse_collectives  # noqa: F401

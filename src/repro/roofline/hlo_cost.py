@@ -1,0 +1,329 @@
+"""Trip-count-aware HLO cost analysis.
+
+``compiled.cost_analysis()`` counts every while-loop body exactly once —
+useless for scan-over-layers models (an 88-layer transformer reports 1/88th
+of its flops) and it ignores collectives entirely.  This module re-derives
+the three roofline inputs directly from the optimized HLO text:
+
+  * walks the call graph (ENTRY -> while bodies / fusion callees) carrying a
+    *trip multiplier* from ``backend_config={"known_trip_count":{"n":...}}``
+    (lax.scan / fori_loop always annotate it; dynamic ``while_loop``s fall
+    back to x1 and are flagged),
+  * flops: dot ops from operand shapes + contracting dims; elementwise and
+    reduce ops at 1 flop/element,
+  * memory bytes: operand + result bytes of every top-level instruction
+    (fused computations count only at their fusion's I/O boundary, matching
+    XLA's convention),
+  * collective wire bytes: ring formulas per kind x replica-group size x
+    trip multiplier.
+
+Validated against ``cost_analysis()`` on loop-free programs in the tests.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s2": 1, "s4": 1, "s8": 1, "u2": 1, "u4": 1, "u8": 1,
+    "s16": 2, "u16": 2, "s32": 4, "u32": 4, "s64": 8, "u64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1, "f8e3m4": 1,
+    "bf16": 2, "f16": 2, "f32": 4, "f64": 8, "c64": 8, "c128": 16,
+    "token": 0, "opaque": 0,
+}
+
+_ELEMENTWISE = {
+    "add", "subtract", "multiply", "divide", "maximum", "minimum", "abs",
+    "negate", "exponential", "exponential-minus-one", "log", "log-plus-one",
+    "rsqrt", "sqrt", "tanh", "logistic", "sine", "cosine", "power",
+    "compare", "select", "and", "or", "xor", "not", "floor", "ceil",
+    "round-nearest-afz", "round-nearest-even", "clamp", "remainder",
+    "atan2", "sign", "convert", "erf", "cbrt",
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_TRIP_RE = re.compile(r'known_trip_count[":{\s]+n["\s:]+(\d+)')
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([0-9,]+)\}")
+_CALL_RE = re.compile(r"(?:calls|body|to_apply|branch_computations)="
+                      r"[{]?%?([\w.\-]+)")
+_COND_RE = re.compile(r"condition=%?([\w.\-]+)")
+
+
+def _shape_info(type_str: str) -> Tuple[int, List[Tuple[str, List[int]]]]:
+    """Total bytes + per-element (dtype, dims) list from a type string
+    (handles tuples)."""
+    total = 0
+    elems = []
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        shape = [int(d) for d in dims.split(",")] if dims else []
+        n = 1
+        for d in shape:
+            n *= d
+        total += n * _DTYPE_BYTES[dt]
+        elems.append((dt, shape))
+    return total, elems
+
+
+@dataclass
+class Instr:
+    name: str
+    opcode: str
+    result_bytes: int
+    result_elems: int
+    result_shapes: List[Tuple[str, List[int]]]
+    operands: List[str]
+    line: str
+
+
+@dataclass
+class Computation:
+    name: str
+    instrs: List[Instr] = field(default_factory=list)
+
+
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(.+?)\s+([\w\-]+)\((.*)$")
+_COMP_START_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->")
+
+
+def parse_module(text: str) -> Tuple[Dict[str, Computation], str]:
+    comps: Dict[str, Computation] = {}
+    entry = None
+    cur: Optional[Computation] = None
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        if cur is None:
+            if line.endswith("{"):
+                m = _COMP_START_RE.match(line.strip())
+                if m:
+                    cur = Computation(m.group(1))
+                    if line.strip().startswith("ENTRY"):
+                        entry = m.group(1)
+            continue
+        if line.strip() == "}":
+            comps[cur.name] = cur
+            cur = None
+            continue
+        m = _INSTR_RE.match(line)
+        if not m:
+            continue
+        name, type_str, opcode, rest = m.groups()
+        rb, shapes = _shape_info(type_str)
+        elems = sum(int(np_prod(s[1])) for s in shapes)
+        # operand names: %refs inside the first (...) group
+        depth, i, args = 1, 0, ""
+        for i, ch in enumerate(rest):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    break
+            args += ch
+        operands = re.findall(r"%([\w.\-]+)", args)
+        cur.instrs.append(Instr(name, opcode, rb, elems, shapes, operands,
+                                line))
+    return comps, entry or ""
+
+
+def np_prod(xs) -> int:
+    n = 1
+    for x in xs:
+        n *= x
+    return n
+
+
+def _dot_flops(instr: Instr, defs: Dict[str, Instr]) -> float:
+    lhs = defs.get(instr.operands[0]) if instr.operands else None
+    m = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", instr.line)
+    contract = 1
+    if lhs is not None and m and lhs.result_shapes:
+        dims = lhs.result_shapes[0][1]
+        for i in (int(x) for x in m.group(1).split(",") if x):
+            if i < len(dims):
+                contract *= dims[i]
+    return 2.0 * instr.result_elems * contract
+
+
+def _collective_wire_bytes(instr: Instr, defs: Dict[str, Instr],
+                           kind: str) -> float:
+    gs = 1
+    gm = _GROUPS_IOTA_RE.search(instr.line)
+    if gm:
+        gs = int(gm.group(2))
+    else:
+        gl = _GROUPS_LIST_RE.search(instr.line)
+        if gl:
+            gs = len(gl.group(1).split(","))
+    if gs <= 1:
+        return 0.0
+    frac = (gs - 1) / gs
+    rb = instr.result_bytes
+    ob = sum(defs[o].result_bytes for o in instr.operands if o in defs)
+    if kind == "all-reduce":
+        return 2.0 * rb * frac
+    if kind == "all-gather":
+        return rb * frac
+    if kind == "reduce-scatter":
+        return (ob or rb * gs) * frac
+    if kind == "all-to-all":
+        return rb * frac
+    return float(rb)  # collective-permute
+
+
+@dataclass
+class HloCost:
+    flops: float = 0.0
+    bytes_accessed: float = 0.0
+    wire_bytes: float = 0.0
+    wire_by_kind: Dict[str, float] = field(default_factory=dict)
+    collective_ops: int = 0
+    dynamic_whiles: int = 0        # loops without known trip counts (x1)
+
+    def add(self, other: "HloCost", mult: float = 1.0) -> None:
+        self.flops += other.flops * mult
+        self.bytes_accessed += other.bytes_accessed * mult
+        self.wire_bytes += other.wire_bytes * mult
+        for k, v in other.wire_by_kind.items():
+            self.wire_by_kind[k] = self.wire_by_kind.get(k, 0) + v * mult
+        self.collective_ops += other.collective_ops
+        self.dynamic_whiles += other.dynamic_whiles
+
+
+_SKIP_BYTES = {"parameter", "constant", "tuple", "get-tuple-element",
+               "bitcast", "while", "conditional", "call", "after-all",
+               "iota", "partition-id", "replica-id", "custom-call"}
+
+_SLICE_OPS = {"dynamic-slice", "slice", "gather"}
+
+
+def _fusion_slice_discount(ins: Instr, called: Optional[Computation],
+                           defs: Dict[str, Instr]) -> float:
+    """Bytes to subtract from a fusion's operand accounting: operands whose
+    only in-fusion consumers are slicing ops are read slice-wise."""
+    if called is None:
+        return 0.0
+    params: Dict[int, Instr] = {}
+    users: Dict[str, List[Instr]] = {}
+    for sub in called.instrs:
+        if sub.opcode == "parameter":
+            m = re.search(r"parameter\((\d+)\)", sub.line)
+            if m:
+                params[int(m.group(1))] = sub
+        for o in sub.operands:
+            users.setdefault(o, []).append(sub)
+    discount = 0.0
+    for idx, opname in enumerate(ins.operands):
+        if opname not in defs or idx not in params:
+            continue
+        p = params[idx]
+        consumers = users.get(p.name, [])
+        if consumers and all(c.opcode in _SLICE_OPS for c in consumers):
+            sliced = sum(c.result_bytes for c in consumers)
+            full = defs[opname].result_bytes
+            if sliced < full:
+                discount += full - sliced
+    return discount
+
+
+def analyze(text: str) -> HloCost:
+    comps, entry = parse_module(text)
+    defs: Dict[str, Instr] = {}
+    for comp in comps.values():
+        for ins in comp.instrs:
+            defs[ins.name] = ins
+
+    memo: Dict[str, HloCost] = {}
+
+    def comp_cost(name: str) -> HloCost:
+        if name in memo:
+            return memo[name]
+        memo[name] = HloCost()  # cycle guard
+        total = HloCost()
+        comp = comps.get(name)
+        if comp is None:
+            return total
+        for ins in comp.instrs:
+            op = ins.opcode
+            kind = next((k for k in _COLLECTIVES if op.startswith(k)), None)
+            # flops
+            if op == "dot":
+                total.flops += _dot_flops(ins, defs)
+            elif op in _ELEMENTWISE:
+                total.flops += ins.result_elems
+            elif op == "reduce":
+                ops_ = [defs[o] for o in ins.operands if o in defs]
+                total.flops += max((o.result_elems for o in ops_),
+                                   default=ins.result_elems)
+            # bytes — XLA conventions: sliced/gathered reads count only the
+            # transferred elements, in-place updates only the update.
+            if op not in _SKIP_BYTES:
+                if op in ("dynamic-slice", "slice", "gather"):
+                    total.bytes_accessed += 2.0 * ins.result_bytes
+                elif op == "dynamic-update-slice":
+                    upd = (defs[ins.operands[1]].result_bytes
+                           if len(ins.operands) > 1
+                           and ins.operands[1] in defs else 0)
+                    total.bytes_accessed += 2.0 * upd
+                elif op == "scatter":
+                    upd = (defs[ins.operands[2]].result_bytes
+                           if len(ins.operands) > 2
+                           and ins.operands[2] in defs else ins.result_bytes)
+                    total.bytes_accessed += 2.0 * upd
+                elif op == "broadcast":
+                    total.bytes_accessed += ins.result_bytes
+                else:
+                    ob = sum(defs[o].result_bytes for o in ins.operands
+                             if o in defs)
+                    total.bytes_accessed += ob + ins.result_bytes
+            # collectives
+            if kind is not None and not op.endswith("-done"):
+                w = _collective_wire_bytes(ins, defs, kind)
+                if w > 0:
+                    total.wire_bytes += w
+                    total.wire_by_kind[kind] = \
+                        total.wire_by_kind.get(kind, 0) + w
+                    total.collective_ops += 1
+            # recursion
+            if op == "while":
+                tm = _TRIP_RE.search(ins.line)
+                trip = int(tm.group(1)) if tm else 1
+                if tm is None:
+                    total.dynamic_whiles += 1
+                bm = _CALL_RE.search(ins.line)
+                cm = _COND_RE.search(ins.line)
+                if bm:
+                    total.add(comp_cost(bm.group(1)), trip)
+                if cm:
+                    total.add(comp_cost(cm.group(1)), trip + 1)
+            elif op == "fusion":
+                fm = _CALL_RE.search(ins.line)
+                if fm:
+                    sub = comp_cost(fm.group(1))
+                    # fused instrs: count flops (they execute) but not bytes
+                    # (fusion I/O already counted)
+                    total.flops += sub.flops
+                    total.wire_bytes += sub.wire_bytes
+                    total.collective_ops += sub.collective_ops
+                    # correction: a fusion operand that is only *sliced*
+                    # inside (dynamic-slice of a stacked scan input) reads
+                    # the slice, not the whole array
+                    total.bytes_accessed -= _fusion_slice_discount(
+                        ins, comps.get(fm.group(1)), defs)
+            elif op == "conditional":
+                for branch in re.findall(r"%([\w.\-]+)", ins.line.split(
+                        "branch_computations=")[-1])[:8] \
+                        if "branch_computations" in ins.line else []:
+                    total.add(comp_cost(branch), 1.0)
+        memo[name] = total
+        return total
+
+    return comp_cost(entry)

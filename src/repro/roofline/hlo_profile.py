@@ -1,0 +1,127 @@
+"""Op-level attribution for the §Perf loop: which collectives / memory ops
+dominate a compiled cell.  This is the 'profile' of the hypothesis->change->
+measure cycle on a dry-run-only container — wall-time traces don't exist,
+the optimized HLO is the ground truth.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from typing import Dict, List, Tuple
+
+from . import hlo_cost
+from .hlo_cost import (_COLLECTIVES, _TRIP_RE, _CALL_RE, _collective_wire_bytes,
+                       Instr, parse_module)
+
+
+def top_collectives(text: str, n: int = 12) -> List[Dict]:
+    """Collectives ranked by trip-weighted wire bytes."""
+    comps, entry = parse_module(text)
+    defs: Dict[str, Instr] = {}
+    for comp in comps.values():
+        for ins in comp.instrs:
+            defs[ins.name] = ins
+
+    # trip multiplier per computation (entry = 1; while bodies *= trip)
+    mult: Dict[str, float] = defaultdict(float)
+    mult[entry] = 1.0
+    order = [entry]
+    seen = {entry}
+    while order:
+        name = order.pop(0)
+        comp = comps.get(name)
+        if comp is None:
+            continue
+        for ins in comp.instrs:
+            if ins.opcode in ("while", "fusion", "call", "conditional"):
+                tm = _TRIP_RE.search(ins.line)
+                trip = int(tm.group(1)) if tm else 1
+                for callee in re.findall(
+                        r"(?:calls|body|condition|to_apply)=%?([\w.\-]+)",
+                        ins.line):
+                    mult[callee] += mult[name] * (
+                        trip if ins.opcode == "while" else 1)
+                    if callee not in seen:
+                        seen.add(callee)
+                        order.append(callee)
+
+    rows = []
+    for cname, comp in comps.items():
+        m = mult.get(cname, 0.0)
+        if m <= 0:
+            continue
+        for ins in comp.instrs:
+            kind = next((k for k in _COLLECTIVES
+                         if ins.opcode.startswith(k)), None)
+            if kind is None or ins.opcode.endswith("-done"):
+                continue
+            w = _collective_wire_bytes(ins, defs, kind)
+            if w <= 0:
+                continue
+            shape = ins.line.split("=")[1].strip().split(" ")[0]
+            rows.append({"kind": kind, "shape": shape, "trips": m,
+                         "wire_gb_total": w * m / 1e9,
+                         "comp": cname, "name": ins.name})
+    rows.sort(key=lambda r: -r["wire_gb_total"])
+    return rows[:n]
+
+
+def top_memory_ops(text: str, n: int = 12) -> List[Tuple[str, float, str]]:
+    """Opcode classes ranked by trip-weighted HBM bytes (fusion-boundary
+    convention, same as hlo_cost)."""
+    comps, entry = parse_module(text)
+    defs: Dict[str, Instr] = {}
+    for comp in comps.values():
+        for ins in comp.instrs:
+            defs[ins.name] = ins
+
+    mult: Dict[str, float] = defaultdict(float)
+    mult[entry] = 1.0
+    order, seen = [entry], {entry}
+    while order:
+        name = order.pop(0)
+        comp = comps.get(name)
+        if comp is None:
+            continue
+        for ins in comp.instrs:
+            if ins.opcode in ("while", "fusion", "call", "conditional"):
+                tm = _TRIP_RE.search(ins.line)
+                trip = int(tm.group(1)) if tm else 1
+                for callee in re.findall(
+                        r"(?:calls|body|condition|to_apply)=%?([\w.\-]+)",
+                        ins.line):
+                    mult[callee] += mult[name] * (
+                        trip if ins.opcode == "while" else 1)
+                    if callee not in seen:
+                        seen.add(callee)
+                        order.append(callee)
+
+    # fusion callee bodies don't count bytes; group leaf ops by example
+    agg: Dict[str, float] = defaultdict(float)
+    example: Dict[str, str] = {}
+    for cname, comp in comps.items():
+        m = mult.get(cname, 0.0)
+        if m <= 0 or ".fused" in cname or cname.startswith("fused"):
+            continue
+        for ins in comp.instrs:
+            op = ins.opcode
+            if op in hlo_cost._SKIP_BYTES:
+                continue
+            if op in ("dynamic-slice", "slice", "gather"):
+                b = 2.0 * ins.result_bytes
+            elif op == "dynamic-update-slice":
+                b = 2.0 * (defs[ins.operands[1]].result_bytes
+                           if len(ins.operands) > 1
+                           and ins.operands[1] in defs else 0)
+            elif op == "broadcast":
+                b = ins.result_bytes
+            else:
+                b = ins.result_bytes + sum(
+                    defs[o].result_bytes for o in ins.operands if o in defs)
+            key = f"{op}"
+            agg[key] += b * m
+            shape = ins.line.split("=")[1].strip().split(" ")[0]
+            if agg[key] == b * m or ins.result_bytes > 1e8:
+                example[key] = shape
+    rows = sorted(agg.items(), key=lambda kv: -kv[1])[:n]
+    return [(k, v / 1e9, example.get(k, "")) for k, v in rows]

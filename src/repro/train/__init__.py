@@ -1,0 +1,8 @@
+"""Training substrate: pure-JAX AdamW (+schedules, clipping, int8
+error-feedback gradient compression), step builders with explicit shardings
+and microbatch accumulation, atomic/async checkpointing with elastic
+restore, and the fault-tolerant training supervisor."""
+from . import checkpoint, loop, optimizer, steps  # noqa: F401
+from .checkpoint import CheckpointManager  # noqa: F401
+from .loop import LoopConfig, train_loop  # noqa: F401
+from .optimizer import AdamWConfig, init_state  # noqa: F401

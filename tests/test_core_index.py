@@ -1,0 +1,102 @@
+"""Dynamic index: build/search/update correctness and APS behaviour."""
+import numpy as np
+import pytest
+
+from repro.core import QuakeConfig, QuakeIndex
+from repro.data import datasets
+
+
+@pytest.fixture(scope="module")
+def clustered():
+    return datasets.clustered(6000, 24, n_clusters=32, seed=0)
+
+
+def _recall_of(index, ds, k=10, n=40, target=0.9, seed=1, **kw):
+    rng = np.random.default_rng(seed)
+    gt_all, got = [], []
+    q = datasets.queries_near(ds, n, seed=seed)
+    gt = ds.ground_truth(q, k)
+    rs = []
+    for i in range(n):
+        r = index.search(q[i], k, recall_target=target, **kw)
+        rs.append(len(set(r.ids.tolist()) & set(gt[i].tolist())) / k)
+    return float(np.mean(rs))
+
+
+@pytest.mark.parametrize("metric", ["l2", "ip"])
+def test_build_search_recall(clustered, metric):
+    ds = datasets.clustered(6000, 24, n_clusters=32, seed=0, metric=metric)
+    idx = QuakeIndex.build(ds.vectors, config=QuakeConfig(metric=metric),
+                           kmeans_iters=4)
+    idx.check_invariants()
+    assert _recall_of(idx, ds) >= 0.85
+
+
+def test_multilevel_matches_flat(clustered):
+    ds = clustered
+    flat = QuakeIndex.build(ds.vectors, num_partitions=96, kmeans_iters=4)
+    two = QuakeIndex.build(ds.vectors, level_sizes=(96, 12), kmeans_iters=4)
+    two.check_invariants()
+    r_flat = _recall_of(flat, ds)
+    r_two = _recall_of(two, ds)
+    assert r_two >= r_flat - 0.1   # hierarchy must not wreck recall
+
+
+def test_insert_then_search(clustered):
+    ds = clustered
+    idx = QuakeIndex.build(ds.vectors[:4000], ids=np.arange(4000),
+                           kmeans_iters=4)
+    idx.insert(ds.vectors[4000:], np.arange(4000, 6000))
+    idx.check_invariants()
+    assert idx.num_vectors == 6000
+    # new vectors must be findable
+    q = ds.vectors[5000]
+    r = idx.search(q, 5, recall_target=0.95)
+    assert 5000 in r.ids.tolist()
+
+
+def test_delete_removes(clustered):
+    ds = clustered
+    idx = QuakeIndex.build(ds.vectors, ids=np.arange(ds.n), kmeans_iters=4)
+    victims = np.arange(0, 3000)
+    removed = idx.delete(victims)
+    idx.check_invariants()
+    assert removed == 3000
+    assert idx.num_vectors == ds.n - 3000
+    r = idx.search(ds.vectors[100], 10)
+    assert not np.isin(r.ids, victims).any()
+
+
+def test_aps_adapts_nprobe_to_target(clustered):
+    """Higher recall targets must scan at least as many partitions."""
+    ds = clustered
+    idx = QuakeIndex.build(ds.vectors, kmeans_iters=4)
+    q = datasets.queries_near(ds, 20, seed=3)
+    n_low = [idx.search(qi, 10, recall_target=0.5).nprobe[0] for qi in q]
+    n_high = [idx.search(qi, 10, recall_target=0.99).nprobe[0] for qi in q]
+    assert np.mean(n_high) >= np.mean(n_low)
+
+
+def test_fixed_nprobe_baseline(clustered):
+    ds = clustered
+    idx = QuakeIndex.build(ds.vectors, kmeans_iters=4)
+    r1 = idx.search(ds.vectors[0], 10, nprobe=1)
+    r8 = idx.search(ds.vectors[0], 10, nprobe=8)
+    assert r8.nprobe[0] == 8 and r1.nprobe[0] == 1
+    assert r8.dists[-1] <= r1.dists[-1] + 1e-6  # more probes only improve
+
+
+def test_recall_estimate_tracks_true_recall(clustered):
+    """APS estimate should be well-calibrated on average (paper Table 5:
+    estimate-driven termination lands near the target)."""
+    ds = clustered
+    idx = QuakeIndex.build(ds.vectors, kmeans_iters=4)
+    q = datasets.queries_near(ds, 50, seed=5)
+    gt = ds.ground_truth(q, 10)
+    true_r, est_r = [], []
+    for i in range(len(q)):
+        r = idx.search(q[i], 10, recall_target=0.9)
+        true_r.append(len(set(r.ids.tolist()) & set(gt[i].tolist())) / 10)
+        est_r.append(r.recall_estimate)
+    assert np.mean(true_r) >= 0.85
+    assert abs(np.mean(est_r) - np.mean(true_r)) < 0.12

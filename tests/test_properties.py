@@ -1,0 +1,176 @@
+"""Hypothesis property tests on system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import aps, geometry, kmeans
+from repro.core.cost_model import LatencyModel
+from repro.models.layers import embedding_bag
+
+SET = settings(max_examples=30, deadline=None)
+
+
+@given(st.integers(2, 512), st.floats(-2.0, 2.0))
+@SET
+def test_cap_fraction_bounds(dim, t):
+    """Cap volume fraction is in [0,1], 1/2 at the equator, decreasing in
+    the (signed) margin."""
+    tbl = jnp.asarray(geometry.betainc_table(dim))
+    v = float(geometry.cap_fraction(jnp.float32(t), tbl))
+    assert 0.0 <= v <= 1.0
+    v0 = float(geometry.cap_fraction(jnp.float32(0.0), tbl))
+    assert abs(v0 - 0.5) < 1e-3
+    v_hi = float(geometry.cap_fraction(jnp.float32(min(t + 0.2, 1.0)), tbl))
+    assert v_hi <= v + 1e-4
+
+
+@given(st.integers(2, 256))
+@SET
+def test_cap_table_matches_exact(dim):
+    tbl = jnp.asarray(geometry.betainc_table(dim))
+    ts = jnp.linspace(-1, 1, 33)
+    approx = geometry.cap_fraction(ts, tbl)
+    exact = geometry.cap_fraction_exact(ts, dim)
+    np.testing.assert_allclose(np.asarray(approx), np.asarray(exact),
+                               atol=2e-3)
+
+
+@given(st.integers(1, 30), st.floats(0.1, 10.0), st.integers(0, 10**6))
+@SET
+def test_probabilities_form_distribution(m, rho, seed):
+    rng = np.random.default_rng(seed)
+    d0 = float(rng.uniform(0.1, 5.0))
+    di = d0 + np.abs(rng.normal(size=m)) + 1e-3
+    cc = np.abs(rng.normal(size=m)) + 1e-2
+    tbl = geometry.betainc_table(32).astype(np.float64)
+    valid = np.ones(m, bool)
+    p0, p = aps.estimate_probs_np(d0, di, cc, rho ** 2, tbl, valid)
+    assert 0.0 <= p0 <= 1.0 + 1e-9
+    assert (p >= -1e-12).all()
+    assert p0 + p.sum() <= 1.0 + 1e-6
+
+
+@given(st.integers(2, 40), st.integers(0, 10**6))
+@SET
+def test_np_and_jnp_estimators_agree(m, seed):
+    rng = np.random.default_rng(seed)
+    d0 = float(rng.uniform(0.1, 5.0))
+    di = d0 + np.abs(rng.normal(size=m)) + 1e-3
+    cc = np.abs(rng.normal(size=m)) + 1e-2
+    rho_sq = float(rng.uniform(0.05, 9.0))
+    tbl = geometry.betainc_table(16)
+    valid = np.ones(m, bool)
+    valid[int(rng.integers(m))] = False
+    p0n, pn = aps.estimate_probs_np(d0, di, cc, rho_sq,
+                                    tbl.astype(np.float64), valid)
+    p0j, pj = aps.estimate_probs(jnp.float32(d0), jnp.asarray(di, jnp.float32),
+                                 jnp.asarray(cc, jnp.float32),
+                                 jnp.float32(rho_sq), jnp.asarray(tbl),
+                                 jnp.asarray(valid))
+    assert abs(p0n - float(p0j)) < 5e-3
+    np.testing.assert_allclose(pn, np.asarray(pj, np.float64), atol=5e-3)
+
+
+@given(st.integers(20, 200), st.integers(2, 8), st.integers(0, 10**6))
+@SET
+def test_kmeans_objective_nonincreasing(n, k, seed):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(n, 8)).astype(np.float32)
+
+    def objective(c, a):
+        return float(np.sum((x - c[a]) ** 2))
+
+    c1, a1 = kmeans.kmeans(x, k, iters=1, seed=0)
+    c5, a5 = kmeans.kmeans(x, k, iters=6, seed=0)
+    assert objective(c5, a5) <= objective(c1, a1) + 1e-3
+    assert len(np.unique(a5)) <= k
+    assert (a5 >= 0).all() and (a5 < min(k, n)).all()
+
+
+@given(st.integers(2, 100))
+@SET
+def test_split_two_always_splits(n):
+    rng = np.random.default_rng(n)
+    # adversarial: duplicate points
+    x = np.repeat(rng.normal(size=(max(n // 3, 1), 4)), 3, axis=0)[:n]
+    x = x.astype(np.float32)
+    c, a = kmeans.split_two(x, seed=0)
+    assert set(np.unique(a).tolist()) == {0, 1}
+    assert c.shape == (2, 4)
+
+
+@given(st.floats(0, 1e5), st.floats(0, 1e5))
+@SET
+def test_latency_model_monotone(s1, s2):
+    lam = LatencyModel()
+    lo, hi = sorted([s1, s2])
+    assert lam(lo) <= lam(hi) + 1e-9
+
+
+@given(st.integers(1, 8), st.integers(1, 16), st.integers(2, 50),
+       st.integers(0, 10**6))
+@SET
+def test_embedding_bag_matches_onehot(b, bag, vocab, seed):
+    rng = np.random.default_rng(seed)
+    table = jnp.asarray(rng.normal(size=(vocab, 6)), jnp.float32)
+    ids = jnp.asarray(rng.integers(0, vocab, size=(b, bag)))
+    valid = jnp.asarray(rng.random((b, bag)) < 0.8)
+    got = embedding_bag(table, ids, mode="sum", valid=valid)
+    onehot = jax.nn.one_hot(ids, vocab) * valid[..., None]
+    want = jnp.einsum("bnv,vd->bd", onehot, table)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-5)
+
+
+@given(st.integers(1, 6), st.integers(0, 10**6))
+@SET
+def test_topk_accumulator(k, seed):
+    rng = np.random.default_rng(seed)
+    heap = aps.TopK(k)
+    all_d, all_i = [], []
+    for _ in range(3):
+        d = rng.normal(size=rng.integers(0, 7))
+        i = rng.integers(0, 10**6, size=len(d))
+        heap.update(d, i)
+        all_d.extend(d.tolist())
+        all_i.extend(i.tolist())
+    want = np.sort(np.asarray(all_d))[:k] if all_d else []
+    got = heap.dists[np.isfinite(heap.dists)]
+    np.testing.assert_allclose(got, want[:len(got)], rtol=1e-9)
+
+
+@given(st.integers(2, 10), st.integers(1, 6), st.integers(1, 8),
+       st.integers(0, 10**6))
+@SET
+def test_scan_selected_subset_of_full(p, b, u, seed):
+    """Indexed scan over a selection == full scan restricted to the union:
+    every returned id belongs to a selected partition the query asked for,
+    and distances match the brute-force oracle over that subset."""
+    from repro.kernels import ref as kref
+    rng = np.random.default_rng(seed)
+    s, d, k = 16, 8, 5
+    u = min(u, p)
+    data = jnp.asarray(rng.normal(size=(p, s, d)), jnp.float32)
+    valid = jnp.ones((p, s), bool)
+    sel = jnp.asarray(rng.choice(p, u, replace=False).astype(np.int32))
+    qmask = jnp.asarray(rng.random((b, u)) < 0.7)
+    qs = jnp.asarray(rng.normal(size=(b, d)), jnp.float32)
+    dd, ii = kref.scan_selected_ref(qs, data, valid, sel, qmask, k, "l2")
+    dd, ii = np.asarray(dd), np.asarray(ii)
+    sel_np, qm = np.asarray(sel), np.asarray(qmask)
+    for r in range(b):
+        allowed = {int(pp) * s + j for ui, pp in enumerate(sel_np)
+                   if qm[r, ui] for j in range(s)}
+        got = ii[r][ii[r] >= 0]
+        assert set(got.tolist()) <= allowed
+        # brute-force the allowed subset
+        if allowed:
+            flat = np.asarray(data).reshape(p * s, d)
+            q = np.asarray(qs[r])
+            al = np.asarray(sorted(allowed))
+            dist = ((flat[al] - q) ** 2).sum(1)
+            want = np.sort(dist)[:min(k, len(al))]
+            have = dd[r][dd[r] < 1e37]
+            np.testing.assert_allclose(np.sort(have), want[:len(have)],
+                                       rtol=1e-4, atol=1e-4)

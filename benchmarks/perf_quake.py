@@ -106,12 +106,67 @@ def run(shape: str, variants=None, out_path="results/perf_quake.json"):
     return results
 
 
+def run_multiquery(out_path="results/perf_quake.json", n=20_000, b=256,
+                   nprobe=12, k=10):
+    """Batched-vs-single QPS + vectors-scanned for the device-resident
+    multi-query executor (paper §7.4) — the host-scale companion to the
+    lowered serve cells above.  Runs on the current host backend (the
+    packed scan is the same ``scan_topk_indexed`` primitive the sharded
+    engine uses per shard)."""
+    import numpy as np
+    from repro.core.multiquery import batch_search, per_query_search
+    from repro.data import datasets
+    from benchmarks.common import build_index, sift_like
+
+    ds = sift_like(n, 32, 0)
+    idx = build_index(ds)
+    q = datasets.queries_near(ds, b, seed=6)
+    batch_search(idx, q, k, nprobe=nprobe)          # warm the (B, U) shape
+    t0 = time.perf_counter()
+    rb = batch_search(idx, q, k, nprobe=nprobe)
+    t_b = time.perf_counter() - t0
+    b_per = min(b, 64)
+    per_query_search(idx, q[:2], k, nprobe=nprobe)  # warm the B=1 shape
+    t0 = time.perf_counter()
+    rp = per_query_search(idx, q[:b_per], k, nprobe=nprobe)
+    t_p = (time.perf_counter() - t0) / b_per * b
+    r = {"batch": b, "nprobe": nprobe,
+         "qps_batched": round(b / t_b, 1),
+         "qps_single": round(b / t_p, 1),
+         "partitions_scanned": rb.partitions_scanned,
+         "partitions_single": int(rp.partitions_scanned / b_per * b),
+         "vectors_scanned": rb.vectors_scanned,
+         "vectors_single": int(rp.vectors_scanned / b_per * b),
+         "scan_amortization": round(
+             rp.vectors_scanned / b_per * b / max(rb.vectors_scanned, 1), 2)}
+    print(f"multiquery B={b}: batched {r['qps_batched']} qps / "
+          f"{r['vectors_scanned']} vec streamed  vs  single "
+          f"{r['qps_single']} qps / {r['vectors_single']} vec "
+          f"({r['scan_amortization']}x less scan traffic)")
+    os.makedirs(os.path.dirname(out_path), exist_ok=True)
+    existing = {}
+    if os.path.exists(out_path):
+        with open(out_path) as f:
+            existing = json.load(f)
+    existing["multiquery"] = r
+    with open(out_path, "w") as f:
+        json.dump(existing, f, indent=1)
+    print(f"-> {out_path}")
+    return r
+
+
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--shape", default="serve_fixed_1k",
                     choices=["serve_fixed_1k", "serve_adaptive_1k"])
     ap.add_argument("--variants", default=None,
                     help="comma list (default: all)")
+    ap.add_argument("--multiquery", action="store_true",
+                    help="batched-vs-single executor comparison instead of "
+                         "the lowered serve cells")
     args = ap.parse_args()
-    run(args.shape,
-        args.variants.split(",") if args.variants else None)
+    if args.multiquery:
+        run_multiquery()
+    else:
+        run(args.shape,
+            args.variants.split(",") if args.variants else None)

@@ -1,0 +1,59 @@
+"""Cross-version JAX API aliases (non-Pallas; kernels use
+``kernels.pallas_compat``).
+
+Two seams, both of which have broken this repo on version skew before:
+
+  * ``shard_map`` graduated from ``jax.experimental.shard_map.shard_map``
+    to ``jax.shard_map``, and its replication-check kwarg was renamed
+    ``check_rep`` -> ``check_vma``.  :func:`shard_map` here accepts the new
+    spelling and translates down when running on an older JAX.
+  * ``Compiled.cost_analysis()`` returned a one-element ``list`` of dicts
+    on older JAX and a plain dict on newer ones.
+    :func:`cost_analysis_dict` normalizes to a dict.
+
+Policy: see ``docs/compat.md``.  Application code imports from here and
+never feature-tests ``jax`` itself.
+"""
+from __future__ import annotations
+
+import inspect
+from typing import Any, Dict
+
+import jax
+
+__all__ = ["shard_map", "cost_analysis_dict"]
+
+
+if hasattr(jax, "shard_map"):
+    _shard_map = jax.shard_map
+else:  # JAX <= 0.5.x
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+_SM_PARAMS = inspect.signature(_shard_map).parameters
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True,
+              **kwargs: Any):
+    """``jax.shard_map`` with the modern signature on every JAX version.
+
+    Callers use the current kwarg name ``check_vma``; on versions that
+    predate the rename it is forwarded as ``check_rep``.
+    """
+    if "check_vma" in _SM_PARAMS:
+        kwargs["check_vma"] = check_vma
+    elif "check_rep" in _SM_PARAMS:
+        kwargs["check_rep"] = check_vma
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      **kwargs)
+
+
+def cost_analysis_dict(compiled) -> Dict[str, float]:
+    """``compiled.cost_analysis()`` as a flat dict on every JAX version.
+
+    Older releases return ``[{...}]`` (one entry per computation, in
+    practice exactly one); newer ones return the dict directly.
+    """
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        return cost[0] if cost else {}
+    return cost

@@ -15,6 +15,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from ..compat import shard_map
 from ..models import gnn, recsys, transformer as tr
 from ..train import optimizer as opt, steps
 from .base import SDS, Lowering, dp_axes_for, named_sharding_tree
@@ -224,7 +225,7 @@ def _make_gnn_step(cfg: gnn.GATConfig, mesh: Mesh):
         return l, g
 
     def step(params, opt_state, batch):
-        mapped = jax.shard_map(
+        mapped = shard_map(
             local_grad, mesh=mesh,
             in_specs=(P(), {"src": P(dp), "dst": P(dp), "feats": P(),
                             "labels": P()}),
@@ -253,7 +254,7 @@ def _make_gnn_pooled_step(cfg: gnn.GATConfig, mesh: Mesh, n_graphs: int):
         return jax.value_and_grad(loss)(params)
 
     def step(params, opt_state, batch):
-        mapped = jax.shard_map(
+        mapped = shard_map(
             local_grad, mesh=mesh,
             in_specs=(P(), {"src": P(dp), "dst": P(dp), "feats": P(),
                             "graph_of": P(), "labels": P()}),

@@ -44,6 +44,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from ..compat import shard_map
 from ..kernels.ref import MASK_DIST, merge_topk, pairwise_l2_sq
 from . import geometry
 from .index import QuakeIndex
@@ -112,7 +113,12 @@ class IndexSnapshot:
         for j in range(p_real):
             s = min(int(sizes[j]), s_cap)
             data[j, :s] = lvl0.vectors[j][:s]
-            ids[j, :s] = lvl0.ids[j][:s]
+            ext = lvl0.ids[j][:s]
+            if len(ext) and int(ext.max()) > np.iinfo(np.int32).max:
+                raise ValueError(
+                    "IndexSnapshot stores external ids as int32; id "
+                    f"{int(ext.max())} does not fit (partition {j})")
+            ids[j, :s] = ext
         cents = np.zeros((p, d), dtype=np.float32)
         cents[:p_real] = lvl0.centroids
         # padding partitions: park centroids far away so routing never
@@ -273,10 +279,7 @@ class ShardedQuakeEngine:
         n_union = min(cfg.union_cap or b * n_sel, p_loc)
         selected = jnp.zeros((b, p_loc), jnp.bool_).at[
             jnp.arange(b)[:, None], sel].set(True)
-        hits = selected.any(axis=0)
-        _, sel_u = jax.lax.top_k(hits.astype(jnp.float32), n_union)
-        sel_u = sel_u.astype(jnp.int32)
-        qmask = jnp.take(selected, sel_u, axis=1)        # (B, U)
+        sel_u, qmask = kops.pack_union(selected, n_union)  # (U,), (B, U)
         valid = snap.ids >= 0                            # (P_loc, S)
         if snap.scales is not None:                      # int8 residuals
             d, flat = kops.scan_selected_topk_q8(
@@ -452,7 +455,7 @@ class ShardedQuakeEngine:
                      "brute": (self._search_brute_local, 2)}[kind]
         qspec = self.query_spec()
         out_specs = tuple([qspec] * n_out)
-        return jax.shard_map(
+        return shard_map(
             fn, mesh=self.mesh,
             in_specs=(qspec, self.snapshot_spec()),
             out_specs=out_specs if n_out > 1 else qspec,

@@ -120,6 +120,8 @@ class QuakeIndex:
         self.config = config or QuakeConfig()
         self.levels: List[Level] = []
         self.id_map: Dict[int, int] = {}     # external id -> level-0 partition
+        self.version = 0                     # bumped on any data mutation;
+                                             # device snapshot caches key on it
         self._rng = np.random.default_rng(self.config.seed)
         self.geometry_dim = dim if self.config.metric == "l2" else dim + 1
         self._beta_table = geometry.betainc_table(self.geometry_dim)
@@ -381,6 +383,21 @@ class QuakeIndex:
                 cand_geo, _ = self._centroid_geo_dists(q, l - 1, cand)
         raise AssertionError("unreachable")
 
+    def search_batch(self, queries: np.ndarray, k: int,
+                     nprobe: Optional[int] = None,
+                     recall_target: Optional[float] = None,
+                     impl: str = "auto"):
+        """Batched multi-query search (paper §7.4) through the
+        device-resident executor: per-query probe sets are planned on the
+        host (APS-driven when ``nprobe`` is None), then every distinct
+        partition in the batch's union is scanned exactly once via the
+        packed ``scan_topk_indexed`` kernel.  Single-query search is the
+        B=1 case of the same path.  Returns ``multiquery.BatchResult``.
+        """
+        from .multiquery import batch_search  # late: avoid import cycle
+        return batch_search(self, queries, k, nprobe=nprobe,
+                            recall_target=recall_target, impl=impl)
+
     @staticmethod
     def _fixed_scan(cand_geo, scan_fn, k, n_fixed) -> aps_mod.APSResult:
         order = np.argsort(cand_geo, kind="stable")[:max(n_fixed, 1)]
@@ -422,6 +439,7 @@ class QuakeIndex:
     def insert(self, x: np.ndarray, ids: np.ndarray) -> None:
         x = np.ascontiguousarray(x, dtype=np.float32)
         ids = np.asarray(ids, dtype=np.int64)
+        self.version += 1
         self._max_norm_sq = max(self._max_norm_sq, float(np.max(
             np.sum(x.astype(np.float64) ** 2, axis=1), initial=0.0)))
         self._aug_extra = [None] * len(self.levels)
@@ -440,6 +458,7 @@ class QuakeIndex:
     def delete(self, ids: np.ndarray) -> int:
         """Delete by external id with immediate compaction; returns #removed."""
         ids = np.asarray(ids, dtype=np.int64)
+        self.version += 1
         by_part: Dict[int, list] = {}
         removed = 0
         for ext in ids:

@@ -129,6 +129,7 @@ class Maintainer:
             self._run_level(l, rep)
         self._maybe_adjust_levels(rep)
         rep.cost_after = self.total_cost()
+        idx.version += 1  # invalidate cached snapshots (batched executor)
         if reset_stats:
             for level in idx.levels:
                 level.stats.reset()

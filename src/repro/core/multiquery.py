@@ -1,132 +1,295 @@
-"""Batched multi-query execution (paper §7.4, policy from [26]/[34]).
+"""Device-resident batched multi-query executor (paper §7.4, policy from
+[26]/[34] — the incremental-IVF maintenance line of Mohoney et al.).
 
 Single-query processing scans each needed partition once *per query*; with a
 batch we invert the mapping — group queries by the partitions they access and
 scan every needed partition exactly **once per batch**, amortizing the
-partition read across all queries that probe it.  On TPU this turns B
-GEMVs per partition into one (B_p, d) x (d, s) GEMM — MXU-shaped work.
+partition read across all queries that probe it.  On TPU this turns B GEMVs
+per partition into one ``(B_p, d) x (d, s)`` GEMM — MXU-shaped work.
 
-The mesh-sharded equivalent for very large batches degenerates to
-``ShardedQuakeEngine.search_bruteforce`` (every partition needed by someone);
-this host-side implementation covers the dynamic-index engine and the QPS
-benchmark.
+Architecture (this module is the host-side control plane; the scan is the
+same packed-scan primitive the sharded engine uses per shard):
+
+  1. **Plan** (host): per-query probe sets, either a fixed ``nprobe`` (the
+     paper's Fig. 5 policy) or APS-driven per-query counts — the estimator
+     math of ``aps.estimate_probs_np`` run against a radius calibrated on a
+     sample of the batch (APS picks *how many*, the batch executor amortizes
+     *the scanning*).
+  2. **Pack** (host): the batch's probe sets collapse into one partition
+     union + a per-query ``(B, U)`` mask (`kernels.ops.pack_union` is the
+     device-side twin used inside the sharded engine).
+  3. **Scan** (device): one call to ``kernels.ops.scan_selected_topk`` —
+     the scalar-prefetch ``scan_topk_indexed`` Pallas kernel streams each
+     selected partition HBM->VMEM exactly once and folds the running top-k
+     in VMEM (interpret mode on CPU CI, Mosaic on TPU; ``impl="jnp"`` is
+     the XLA oracle path).
+
+Single-query search is the B=1 case of the same executor
+(``per_query_search`` below, and ``QuakeIndex.search_batch`` with one row);
+the mesh-sharded equivalent for very large batches degenerates to
+``ShardedQuakeEngine.search_bruteforce``.
+
+The executor serves a cached ``IndexSnapshot`` of the dynamic index
+(copy-on-write semantics, paper §8.2), invalidated by the index's mutation
+``version`` counter.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Dict, List, Optional, Tuple
+from typing import Optional, Tuple
 
+import jax.numpy as jnp
 import numpy as np
 
+from ..kernels import ops
+from ..kernels.ref import MASK_DIST
+from . import aps as aps_mod
 from .index import QuakeIndex
 
 
 @dataclass
 class BatchResult:
-    ids: np.ndarray        # (B, k)
-    dists: np.ndarray      # (B, k) minimization convention
-    partitions_scanned: int = 0
-    vectors_scanned: int = 0
+    ids: np.ndarray        # (B, k) external ids, -1 on misses
+    dists: np.ndarray      # (B, k) minimization convention, inf on misses
+    partitions_scanned: int = 0   # distinct partitions streamed (union size)
+    vectors_scanned: int = 0      # vectors streamed from memory: each union
+                                  # partition is read once for the whole batch
+    comparisons: int = 0          # query-vector distance evaluations (the
+                                  # per-query-loop equivalent of
+                                  # vectors_scanned; ratio = amortization)
+    nprobe: Optional[np.ndarray] = None   # (B,) planned probes per query
+
+
+@dataclass
+class BatchPlan:
+    """Output of the host-side batch planner."""
+    sel: np.ndarray      # (U_pad,) union partition ids (tail entries may
+                         # duplicate sel[0] for tile-count padding)
+    qmask: np.ndarray    # (B, U_pad) bool — query b probes union slot u
+    nprobe: np.ndarray   # (B,) per-query probe count
+    n_real: int          # distinct real partitions (sel[:n_real] unique)
+
+
+def _centroid_dists(index: QuakeIndex, q: np.ndarray) -> np.ndarray:
+    """(B, P) level-0 centroid distances in scan-order convention
+    (squared L2, or -score for IP — both rank like the geometry dists)."""
+    cents = index.levels[0].centroids
+    if index.config.metric == "l2":
+        return (np.sum(q * q, 1)[:, None] + np.sum(cents * cents, 1)[None, :]
+                - 2.0 * (q @ cents.T))
+    return -(q @ cents.T)
+
+
+def _aps_probe_counts(index: QuakeIndex, q: np.ndarray, k: int,
+                      target: float
+                      ) -> Tuple[np.ndarray, np.ndarray, int]:
+    """APS-driven per-query probe sets: the paper's recall estimator run as
+    a *planner* — the radius rho comes from full APS searches on a small
+    sample of the batch, then every query picks the smallest probe set whose
+    estimated recall clears the target.  Returns (sel (B, n_max), valid
+    (B, n_max), max nprobe)."""
+    b = q.shape[0]
+    p = index.levels[0].num_partitions
+    cfg = index.config
+    n_consider = min(max(int(np.ceil(cfg.f_m * p)), cfg.min_candidates), p)
+
+    # --- calibrate the k-NN radius on a batch sample (full host APS) ---
+    sample = np.linspace(0, b - 1, min(8, b)).astype(int)
+    kths = []
+    for s in np.unique(sample):
+        r = index.search(q[s], k, recall_target=target, record_stats=False)
+        if len(r.dists):
+            kths.append(float(r.dists[min(k, len(r.dists)) - 1]))
+    kth_med = float(np.median(kths)) if kths else np.inf
+
+    sel = np.zeros((b, n_consider), dtype=np.int64)
+    valid = np.zeros((b, n_consider), dtype=bool)
+    counts = np.empty(b, dtype=np.int64)
+    table = index._beta_table
+    for i in range(b):
+        qi = q[i]
+        geo, _ = index._centroid_geo_dists(qi, 0, np.arange(p))
+        order = np.argsort(geo, kind="stable")[:n_consider]
+        rho_fn = index._rho_sq_from_item_dist(
+            float(np.sum(qi.astype(np.float64) ** 2)))
+        rho_sq = rho_fn(kth_med) if np.isfinite(kth_med) else np.inf
+        if not np.isfinite(rho_sq) or rho_sq <= 0 or len(order) == 1:
+            m = len(order)  # no radius: conservative full candidate scan
+            probes = order
+        else:
+            cc = index._centroid_cc_dists(0, order, 0)
+            vmask = np.ones(len(order), dtype=bool)
+            vmask[0] = False
+            p0, probs = aps_mod.estimate_probs_np(
+                float(geo[order[0]]), geo[order].astype(np.float64),
+                cc, rho_sq, table, vmask)
+            if p0 >= target:
+                m, probes = 1, order[:1]
+            else:
+                desc = np.argsort(-probs, kind="stable")
+                desc = desc[desc != 0]     # nearest is always scanned
+                r_cum = p0 + np.cumsum(probs[desc])
+                reach = np.nonzero(r_cum >= target)[0]
+                extra = (reach[0] + 1) if len(reach) else len(desc)
+                m = int(min(1 + extra, len(order)))
+                probes = np.concatenate([order[:1], order[desc[:m - 1]]])
+        sel[i, :m] = probes
+        valid[i, :m] = True
+        counts[i] = m
+    n_max = int(counts.max())
+    return sel[:, :n_max], valid[:, :n_max], counts
+
+
+def plan_batch(index: QuakeIndex, q: np.ndarray, k: int,
+               nprobe: Optional[int] = None,
+               recall_target: Optional[float] = None,
+               u_bucket: int = 8) -> BatchPlan:
+    """Plan one batched scan: per-query probe sets -> partition union +
+    per-query mask.  ``u_bucket`` rounds the union size up so the jitted
+    scan sees few distinct shapes (pad slots duplicate a real partition and
+    carry an all-False mask — they add work, never wrong results)."""
+    b = q.shape[0]
+    p = index.levels[0].num_partitions
+
+    if nprobe is not None:
+        cd = _centroid_dists(index, q)
+        n = int(max(1, min(nprobe, p)))
+        if n < p:
+            sel_q = np.argpartition(cd, n - 1, axis=1)[:, :n]
+        else:
+            sel_q = np.broadcast_to(np.arange(p), (b, p)).copy()
+        qvalid = np.ones((b, n), dtype=bool)
+        counts = np.full(b, n, dtype=np.int64)
+    else:
+        target = recall_target if recall_target is not None \
+            else index.config.recall_target
+        sel_q, qvalid, counts = _aps_probe_counts(index, q, k, target)
+
+    union = np.unique(sel_q[qvalid])
+    u = len(union)
+    u_pad = max(-(-u // u_bucket) * u_bucket, 1)
+    sel = np.concatenate([union, np.full(u_pad - u, union[0],
+                                         dtype=union.dtype)])
+    qmask = np.zeros((b, u_pad), dtype=bool)
+    pos = np.searchsorted(union, sel_q)          # only valid where qvalid
+    rows = np.broadcast_to(np.arange(b)[:, None], sel_q.shape)
+    qmask[rows[qvalid], pos[qvalid]] = True
+    return BatchPlan(sel=sel, qmask=qmask, nprobe=counts, n_real=u)
+
+
+class BatchedSearchExecutor:
+    """Executes planned batches against a device-resident snapshot.
+
+    The snapshot (dense ``(P, S_cap, d)`` + ids + sizes) is cached and
+    rebuilt when the index's mutation fingerprint changes; searches then
+    run one packed union scan per batch.
+    """
+
+    def __init__(self, index: QuakeIndex, impl: str = "auto",
+                 u_bucket: int = 8):
+        self.index = index
+        self.impl = impl
+        self.u_bucket = u_bucket
+        self._snap = None
+        self._key = None
+        self._valid = None       # (P, S_cap) bool, device
+        self._flat_ids = None    # (P*S_cap,) host
+        self._sizes = None       # (P,) host
+
+    def _fingerprint(self):
+        return (self.index.version, self.index.num_partitions,
+                self.index.num_vectors)
+
+    def refresh(self):
+        """Rebuild the device snapshot from the dynamic index."""
+        from .distributed import IndexSnapshot  # late: avoid import cycle
+        self._snap = IndexSnapshot.from_index(self.index)
+        self._valid = self._snap.ids >= 0
+        self._flat_ids = np.asarray(self._snap.ids).reshape(-1)
+        self._sizes = np.asarray(self._snap.sizes)
+        self._key = self._fingerprint()
+        return self._snap
+
+    def snapshot(self):
+        if self._snap is None or self._key != self._fingerprint():
+            self.refresh()
+        return self._snap
+
+    def search(self, queries: np.ndarray, k: int,
+               nprobe: Optional[int] = None,
+               recall_target: Optional[float] = None,
+               impl: Optional[str] = None) -> BatchResult:
+        q = np.ascontiguousarray(queries, dtype=np.float32)
+        if q.ndim == 1:
+            q = q[None, :]
+        snap = self.snapshot()
+        plan = plan_batch(self.index, q, k, nprobe=nprobe,
+                          recall_target=recall_target,
+                          u_bucket=self.u_bucket)
+        dd, flat = ops.scan_selected_topk(
+            jnp.asarray(q), snap.data, self._valid,
+            jnp.asarray(plan.sel.astype(np.int32)),
+            jnp.asarray(plan.qmask), k,
+            metric=self.index.config.metric, impl=impl or self.impl)
+        dd = np.asarray(dd, dtype=np.float64)
+        flat = np.asarray(flat)
+        ids = np.where(flat >= 0,
+                       self._flat_ids[np.maximum(flat, 0)], -1)
+        dd = np.where(dd >= MASK_DIST, np.inf, dd)
+
+        sizes_sel = self._sizes[plan.sel[:plan.n_real]]
+        return BatchResult(
+            ids=ids.astype(np.int64), dists=dd,
+            partitions_scanned=int(plan.n_real),
+            vectors_scanned=int(sizes_sel.sum()),
+            comparisons=int((plan.qmask[:, :plan.n_real].astype(np.int64)
+                             * sizes_sel[None, :]).sum()),
+            nprobe=plan.nprobe)
+
+
+def get_executor(index: QuakeIndex) -> BatchedSearchExecutor:
+    """The index's cached executor (snapshot reuse across calls)."""
+    ex = getattr(index, "_batch_executor", None)
+    if ex is None or ex.index is not index:
+        ex = BatchedSearchExecutor(index)
+        index._batch_executor = ex
+    return ex
 
 
 def batch_search(index: QuakeIndex, queries: np.ndarray, k: int,
                  nprobe: Optional[int] = None,
-                 recall_target: Optional[float] = None) -> BatchResult:
+                 recall_target: Optional[float] = None,
+                 impl: str = "auto") -> BatchResult:
     """Scan-each-partition-once batched search over the dynamic index.
 
-    Partition selection per query uses centroid order with a fixed ``nprobe``
-    (the policy in the paper's Fig. 5 experiment), or, when ``nprobe`` is
-    None, the per-query APS nprobe from a calibration pass over a sample of
-    the batch (cheap adaptive hybrid: APS picks *how many*, the batch
-    executor amortizes *the scanning*).
+    Partition selection per query uses centroid order with a fixed
+    ``nprobe`` (the policy in the paper's Fig. 5 experiment), or, when
+    ``nprobe`` is None, APS-driven per-query probe counts (see
+    ``plan_batch``).  The scan itself is one device-resident packed union
+    scan per batch.
     """
-    q = np.ascontiguousarray(queries, dtype=np.float32)
-    b, d = q.shape
-    lvl0 = index.levels[0]
-    cents = lvl0.centroids
-    p = cents.shape[0]
-
-    if nprobe is None:
-        sample = q[np.linspace(0, b - 1, min(16, b)).astype(int)]
-        probes = [index.search(s, k,
-                               recall_target=recall_target or
-                               index.config.recall_target,
-                               record_stats=False).nprobe[0]
-                  for s in sample]
-        nprobe = int(np.ceil(np.percentile(probes, 90)))
-    nprobe = max(1, min(nprobe, p))
-
-    # ---- route: per-query nprobe nearest centroids (one GEMM) ----
-    if index.config.metric == "l2":
-        cd = (np.sum(q * q, 1)[:, None] + np.sum(cents * cents, 1)[None, :]
-              - 2.0 * (q @ cents.T))
-    else:
-        cd = -(q @ cents.T)
-    sel = np.argpartition(cd, nprobe - 1, axis=1)[:, :nprobe]   # (B, nprobe)
-
-    # ---- invert: partition -> queries ----
-    part_queries: Dict[int, List[int]] = {}
-    flat_parts = sel.ravel()
-    flat_qids = np.repeat(np.arange(b), nprobe)
-    order = np.argsort(flat_parts, kind="stable")
-    fp, fq = flat_parts[order], flat_qids[order]
-    bounds = np.searchsorted(fp, np.arange(p + 1))
-
-    out_d = np.full((b, k), np.inf, dtype=np.float64)
-    out_i = np.full((b, k), -1, dtype=np.int64)
-    parts_scanned = 0
-    vecs_scanned = 0
-
-    # ---- scan each needed partition once, against its query group ----
-    for j in range(p):
-        lo, hi = bounds[j], bounds[j + 1]
-        if lo == hi:
-            continue
-        qids = fq[lo:hi]
-        x = lvl0.vectors[j]
-        s = x.shape[0]
-        if s == 0:
-            continue
-        parts_scanned += 1
-        vecs_scanned += s * len(qids)
-        qs = q[qids]
-        if index.config.metric == "l2":
-            dist = (lvl0.sqnorms[j][None, :] - 2.0 * (qs @ x.T)
-                    + np.sum(qs * qs, 1)[:, None])
-        else:
-            dist = -(qs @ x.T)
-        kk = min(k, s)
-        if s > kk:
-            part = np.argpartition(dist, kk - 1, axis=1)[:, :kk]
-        else:
-            part = np.broadcast_to(np.arange(s), (len(qids), s))
-        pd = np.take_along_axis(dist, part, axis=1)
-        pi = lvl0.ids[j][part]
-        # merge into running top-k rows for these queries
-        md = np.concatenate([out_d[qids], pd], axis=1)
-        mi = np.concatenate([out_i[qids], pi], axis=1)
-        sel2 = np.argpartition(md, k - 1, axis=1)[:, :k]
-        out_d[qids] = np.take_along_axis(md, sel2, axis=1)
-        out_i[qids] = np.take_along_axis(mi, sel2, axis=1)
-
-    # final per-row sort
-    o = np.argsort(out_d, axis=1, kind="stable")
-    return BatchResult(ids=np.take_along_axis(out_i, o, axis=1),
-                       dists=np.take_along_axis(out_d, o, axis=1),
-                       partitions_scanned=parts_scanned,
-                       vectors_scanned=vecs_scanned)
+    return get_executor(index).search(queries, k, nprobe=nprobe,
+                                      recall_target=recall_target, impl=impl)
 
 
 def per_query_search(index: QuakeIndex, queries: np.ndarray, k: int,
-                     nprobe: Optional[int] = None) -> BatchResult:
-    """Baseline: one-at-a-time search (partitions re-scanned per query)."""
-    ids, dists = [], []
-    vecs = 0
-    for q in queries:
-        r = index.search(q, k, nprobe=nprobe, record_stats=False)
-        pad = k - len(r.ids)
-        ids.append(np.pad(r.ids, (0, pad), constant_values=-1))
-        dists.append(np.pad(r.dists, (0, pad), constant_values=np.inf))
+                     nprobe: Optional[int] = None,
+                     impl: str = "auto") -> BatchResult:
+    """Baseline: one-at-a-time search — the B=1 case of the same executor,
+    so partitions are re-scanned per query (Faiss-IVF behaviour) but the
+    code path and kernels are identical to the batched policy."""
+    q = np.ascontiguousarray(queries, dtype=np.float32)
+    ex = get_executor(index)
+    ids, dists, parts, vecs, comps = [], [], 0, 0, 0
+    nps = []
+    for row in q:
+        r = ex.search(row[None, :], k, nprobe=nprobe, impl=impl)
+        ids.append(r.ids[0])
+        dists.append(r.dists[0])
+        parts += r.partitions_scanned
         vecs += r.vectors_scanned
+        comps += r.comparisons
+        nps.append(int(r.nprobe[0]) if r.nprobe is not None else 0)
     return BatchResult(ids=np.stack(ids), dists=np.stack(dists),
-                       vectors_scanned=vecs)
+                       partitions_scanned=parts, vectors_scanned=vecs,
+                       comparisons=comps, nprobe=np.asarray(nps))

@@ -35,6 +35,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from . import pallas_compat
+
 Array = jax.Array
 
 NEG_INF = -1.0e30
@@ -144,10 +146,10 @@ def flash_attention_pallas(q: Array, k: Array, v: Array, *,
             pltpu.VMEM((q_block,), jnp.float32),
             pltpu.VMEM((q_block, d), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
-            dimension_semantics=(pltpu.GridDimensionSemantics.PARALLEL,
-                                 pltpu.GridDimensionSemantics.PARALLEL,
-                                 pltpu.GridDimensionSemantics.ARBITRARY)),
+        compiler_params=pallas_compat.compiler_params(
+            dimension_semantics=(pallas_compat.PARALLEL,
+                                 pallas_compat.PARALLEL,
+                                 pallas_compat.ARBITRARY)),
         interpret=interpret,
         name="flash_attention_fwd",
     )(qf, kf, vf)

@@ -20,6 +20,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from . import pallas_compat
 from .ref import MASK_DIST
 
 Array = jax.Array
@@ -102,9 +103,9 @@ def kmeans_assign_pallas(xs: Array, centroids: Array, aux: Array, *,
             pltpu.VMEM((block_n, 1), jnp.float32),
             pltpu.VMEM((block_n, 1), jnp.int32),
         ],
-        compiler_params=pltpu.CompilerParams(
-            dimension_semantics=(pltpu.GridDimensionSemantics.PARALLEL,
-                                 pltpu.GridDimensionSemantics.ARBITRARY)),
+        compiler_params=pallas_compat.compiler_params(
+            dimension_semantics=(pallas_compat.PARALLEL,
+                                 pallas_compat.ARBITRARY)),
         interpret=interpret,
         name="quake_kmeans_assign",
     )(xs, centroids, aux)

@@ -106,6 +106,28 @@ def _scan_topk_pallas_padded(queries, xs, k, metric, valid, block_q, block_s):
     return dd, ii
 
 
+def pack_union(selected: Array, n_union: int) -> Tuple[Array, Array]:
+    """Pack per-query partition selections into one static union scan plan.
+
+    ``selected`` (B, P) bool — query b wants partition p.  Returns
+    (sel (n_union,) int32 partition ids, qmask (B, n_union) bool) for
+    ``scan_selected_topk``: the union covers every partition any query
+    selected (truncated to ``n_union`` — under read skew hot partitions
+    dedupe across the batch, so a cap below B*nprobe loses little), and
+    ``qmask`` restores per-query probe semantics inside the shared scan.
+
+    This is the packed-scan planning primitive shared by the sharded
+    engine (per shard) and the host-side batched executor
+    (``core.multiquery``): one partition read serves every query in the
+    batch that probes it.
+    """
+    hits = selected.any(axis=0)
+    _, sel = jax.lax.top_k(hits.astype(jnp.float32), n_union)
+    sel = sel.astype(jnp.int32)
+    qmask = jnp.take(selected, sel, axis=1)
+    return sel, qmask
+
+
 def scan_selected_topk(queries: Array, data: Array, valid: Array,
                        sel: Array, qmask: Array, k: int, *,
                        metric: str = "l2", impl: str = "auto",

@@ -37,6 +37,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from . import pallas_compat
 from .ref import MASK_DIST
 
 Array = jax.Array
@@ -207,9 +208,9 @@ def scan_topk_pallas(queries: Array, xs: Array, aux: Array, *, k_pad: int,
             pltpu.VMEM((block_q, k_pad), jnp.float32),
             pltpu.VMEM((block_q, k_pad), jnp.int32),
         ],
-        compiler_params=pltpu.CompilerParams(
-            dimension_semantics=(pltpu.GridDimensionSemantics.PARALLEL,
-                                 pltpu.GridDimensionSemantics.ARBITRARY)),
+        compiler_params=pallas_compat.compiler_params(
+            dimension_semantics=(pallas_compat.PARALLEL,
+                                 pallas_compat.ARBITRARY)),
         interpret=interpret,
         name="quake_scan_topk",
     )(queries, xs, aux)

@@ -34,6 +34,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from . import pallas_compat
 from .ref import MASK_DIST
 from .scan_topk import _is_pow2, bitonic_sort, merge_sorted_topk
 
@@ -109,7 +110,7 @@ def scan_topk_indexed_pallas(queries: Array, data: Array, aux: Array,
     kernel = functools.partial(
         _scan_indexed_kernel, k_pad=k_pad, coef=coef, n_sel=U, n_sub=ns,
         block_s=block_s, s_cap=S)
-    grid_spec = pltpu.PrefetchScalarGridSpec(
+    grid_spec = pallas_compat.prefetch_scalar_grid_spec(
         num_scalar_prefetch=1,
         grid=(nq, U, ns),
         in_specs=[
@@ -136,10 +137,10 @@ def scan_topk_indexed_pallas(queries: Array, data: Array, aux: Array,
             jax.ShapeDtypeStruct((B, k_pad), jnp.float32),
             jax.ShapeDtypeStruct((B, k_pad), jnp.int32),
         ],
-        compiler_params=pltpu.CompilerParams(
-            dimension_semantics=(pltpu.GridDimensionSemantics.PARALLEL,
-                                 pltpu.GridDimensionSemantics.ARBITRARY,
-                                 pltpu.GridDimensionSemantics.ARBITRARY)),
+        compiler_params=pallas_compat.compiler_params(
+            dimension_semantics=(pallas_compat.PARALLEL,
+                                 pallas_compat.ARBITRARY,
+                                 pallas_compat.ARBITRARY)),
         interpret=interpret,
         name="quake_scan_topk_indexed",
     )(sel, queries, data, aux, qmask)
@@ -231,7 +232,7 @@ def scan_topk_indexed_q8_pallas(q_codes: Array, q_scales: Array,
     kernel = functools.partial(
         _scan_indexed_q8_kernel, k_pad=k_pad, coef=coef, n_sel=U, n_sub=ns,
         block_s=block_s, s_cap=S)
-    grid_spec = pltpu.PrefetchScalarGridSpec(
+    grid_spec = pallas_compat.prefetch_scalar_grid_spec(
         num_scalar_prefetch=1,
         grid=(nq, U, ns),
         in_specs=[
@@ -262,10 +263,10 @@ def scan_topk_indexed_q8_pallas(q_codes: Array, q_scales: Array,
             jax.ShapeDtypeStruct((B, k_pad), jnp.float32),
             jax.ShapeDtypeStruct((B, k_pad), jnp.int32),
         ],
-        compiler_params=pltpu.CompilerParams(
-            dimension_semantics=(pltpu.GridDimensionSemantics.PARALLEL,
-                                 pltpu.GridDimensionSemantics.ARBITRARY,
-                                 pltpu.GridDimensionSemantics.ARBITRARY)),
+        compiler_params=pallas_compat.compiler_params(
+            dimension_semantics=(pallas_compat.PARALLEL,
+                                 pallas_compat.ARBITRARY,
+                                 pallas_compat.ARBITRARY)),
         interpret=interpret,
         name="quake_scan_topk_indexed_q8",
     )(sel, q_codes, q_scales, data_codes, data_scales, aux, qc, qmask)

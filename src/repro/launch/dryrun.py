@@ -32,6 +32,7 @@ from typing import Dict, Optional
 
 import jax
 
+from ..compat import cost_analysis_dict
 from ..configs import REGISTRY, get_arch
 from ..roofline.analysis import analyze_compiled, HW_V5E
 from .mesh import describe, make_production_mesh
@@ -48,7 +49,7 @@ def run_cell(arch: str, shape: str, mesh, *, verbose: bool = True) -> Dict:
     t_compile = time.time() - t0
 
     mem = compiled.memory_analysis()
-    cost = compiled.cost_analysis()
+    cost = cost_analysis_dict(compiled)
     result = analyze_compiled(compiled, mesh, arch=arch, shape=shape)
     result.update({
         "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),

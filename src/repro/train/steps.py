@@ -20,6 +20,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from ..compat import shard_map
 from . import optimizer as opt
 
 Array = jax.Array
@@ -117,7 +118,7 @@ def make_compressed_dp_step(loss_fn, opt_cfg: opt.AdamWConfig, mesh: Mesh,
 
     rep = P()
     shard0 = P(dp_axes)  # spec prefix: batch pytree sharded on axis 0
-    mapped = jax.shard_map(
+    mapped = shard_map(
         local_step, mesh=mesh,
         in_specs=(rep, rep, rep, shard0),
         out_specs=(rep, rep, rep, rep), check_vma=False)

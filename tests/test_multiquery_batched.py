@@ -1,0 +1,110 @@
+"""Batched multi-query executor vs the dynamic index (paper §7.4).
+
+The batched path must return the *same* results as per-query
+``QuakeIndex.search`` for a fixed ``nprobe`` (identical probe sets, exact
+scans — only float-accumulation order differs), while scanning each probed
+partition once per batch instead of once per query.
+"""
+import numpy as np
+import pytest
+
+from repro.core import QuakeConfig, QuakeIndex
+from repro.core.multiquery import (batch_search, get_executor, plan_batch,
+                                   per_query_search)
+from repro.data import datasets
+
+
+@pytest.fixture(scope="module")
+def built():
+    ds = datasets.clustered(4000, 16, n_clusters=16, seed=0)
+    idx = QuakeIndex.build(ds.vectors, num_partitions=32, kmeans_iters=4)
+    return ds, idx
+
+
+@pytest.mark.parametrize("impl", ["jnp", "pallas"])
+@pytest.mark.parametrize("b", [1, 16, 64])
+def test_batched_matches_single_query_fixed_nprobe(built, impl, b):
+    ds, idx = built
+    q = datasets.queries_near(ds, b, seed=2)
+    rb = batch_search(idx, q, 10, nprobe=6, impl=impl)
+    assert rb.ids.shape == (b, 10)
+    for i in range(b):
+        r = idx.search(q[i], 10, nprobe=6, record_stats=False)
+        got = rb.ids[i][rb.ids[i] >= 0]
+        assert set(got.tolist()) == set(r.ids.tolist()), i
+        np.testing.assert_allclose(
+            np.sort(rb.dists[i][np.isfinite(rb.dists[i])]),
+            np.sort(r.dists), rtol=1e-3, atol=1e-3)
+
+
+@pytest.mark.parametrize("metric", ["l2", "ip"])
+def test_batched_matches_single_query_metrics(built, metric):
+    ds, _ = built
+    idx = QuakeIndex.build(ds.vectors, num_partitions=24, kmeans_iters=3,
+                           config=QuakeConfig(metric=metric))
+    q = datasets.queries_near(ds, 12, seed=3)
+    rb = batch_search(idx, q, 10, nprobe=5, impl="jnp")
+    for i in range(12):
+        r = idx.search(q[i], 10, nprobe=5, record_stats=False)
+        got = rb.ids[i][rb.ids[i] >= 0]
+        assert set(got.tolist()) == set(r.ids.tolist()), i
+
+
+def test_partition_scan_amortization(built):
+    """On an overlapping batch the union is strictly smaller than B*nprobe
+    and the streamed vector count beats the per-query re-scan total."""
+    ds, idx = built
+    b, nprobe = 64, 8
+    q = datasets.queries_near(ds, b, seed=4)
+    rb = batch_search(idx, q, 10, nprobe=nprobe, impl="jnp")
+    rp = per_query_search(idx, q, 10, nprobe=nprobe, impl="jnp")
+    assert rb.partitions_scanned < b * nprobe
+    assert rb.partitions_scanned <= idx.num_partitions
+    assert rb.vectors_scanned < rp.vectors_scanned
+    # the comparison count (per-query work) equals the baseline's streaming
+    # count — only the memory traffic is amortized, never the math
+    assert rb.comparisons == rp.vectors_scanned
+    # identical results from both paths
+    assert (np.sort(rb.ids, 1) == np.sort(rp.ids, 1)).all()
+
+
+def test_aps_driven_plan_is_per_query(built):
+    ds, idx = built
+    q = datasets.queries_near(ds, 24, seed=5)
+    rb = batch_search(idx, q, 10, recall_target=0.9)
+    assert rb.nprobe is not None and len(rb.nprobe) == 24
+    assert (rb.nprobe >= 1).all()
+    assert len(np.unique(rb.nprobe)) > 1  # adaptive, not one global count
+    gt = ds.ground_truth(q, 10)
+    rec = np.mean([len(set(rb.ids[i].tolist()) & set(gt[i].tolist())) / 10
+                   for i in range(24)])
+    assert rec >= 0.8, rec
+
+
+def test_snapshot_invalidated_on_mutation(built):
+    ds, _ = built
+    idx = QuakeIndex.build(ds.vectors[:2000], num_partitions=16,
+                           kmeans_iters=3)
+    q = datasets.queries_near(ds, 4, seed=6)
+    batch_search(idx, q, 5, nprobe=4)
+    ex = get_executor(idx)
+    key0 = ex._key
+    new_ids = np.arange(5000, 5004)
+    idx.insert(q[:4] * 0.999, new_ids)
+    rb = batch_search(idx, q, 5, nprobe=4)
+    assert ex._key != key0  # snapshot rebuilt
+    hits = set(rb.ids.ravel().tolist()) & set(new_ids.tolist())
+    assert hits  # fresh inserts are visible to the batched path
+
+
+def test_plan_union_padding_is_inert(built):
+    """Union padding duplicates a real partition with an all-False mask —
+    result columns never reference it on behalf of a non-probing query."""
+    ds, idx = built
+    q = datasets.queries_near(ds, 3, seed=7)
+    plan = plan_batch(idx, np.asarray(q, np.float32), 10, nprobe=3,
+                      u_bucket=16)
+    assert len(plan.sel) % 16 == 0
+    assert plan.n_real <= len(plan.sel)
+    assert not plan.qmask[:, plan.n_real:].any()
+    assert (plan.nprobe == 3).all()

@@ -25,6 +25,19 @@ import json
 import time
 
 
+def _merge_results(out_path: str, key: str, value) -> None:
+    """Merge one cell into the shared results JSON."""
+    os.makedirs(os.path.dirname(out_path), exist_ok=True)
+    existing = {}
+    if os.path.exists(out_path):
+        with open(out_path) as f:
+            existing = json.load(f)
+    existing[key] = value
+    with open(out_path, "w") as f:
+        json.dump(existing, f, indent=1)
+    print(f"-> {out_path}")
+
+
 def run(shape: str, variants=None, out_path="results/perf_quake.json"):
     import jax
     from repro.configs.quake_arch import build_quake, FULL, QUAKE_SHAPES
@@ -94,15 +107,7 @@ def run(shape: str, variants=None, out_path="results/perf_quake.json"):
               + (f"  [TPU-native mem {r['tpu_native_t_memory_ms']:.3f}ms]"
                  if "tpu_native_t_memory_ms" in r else ""))
 
-    os.makedirs(os.path.dirname(out_path), exist_ok=True)
-    existing = {}
-    if os.path.exists(out_path):
-        with open(out_path) as f:
-            existing = json.load(f)
-    existing[shape] = results
-    with open(out_path, "w") as f:
-        json.dump(existing, f, indent=1)
-    print(f"-> {out_path}")
+    _merge_results(out_path, shape, results)
     return results
 
 
@@ -143,15 +148,24 @@ def run_multiquery(out_path="results/perf_quake.json", n=20_000, b=256,
           f"{r['vectors_scanned']} vec streamed  vs  single "
           f"{r['qps_single']} qps / {r['vectors_single']} vec "
           f"({r['scan_amortization']}x less scan traffic)")
-    os.makedirs(os.path.dirname(out_path), exist_ok=True)
-    existing = {}
-    if os.path.exists(out_path):
-        with open(out_path) as f:
-            existing = json.load(f)
-    existing["multiquery"] = r
-    with open(out_path, "w") as f:
-        json.dump(existing, f, indent=1)
-    print(f"-> {out_path}")
+    _merge_results(out_path, "multiquery", r)
+    return r
+
+
+def run_streaming(out_path="results/perf_quake.json", n=100_000,
+                  insert_batch=256, steps=5):
+    """Streaming-update cell (paper §8.2 update-latency claim): per-batch
+    snapshot refresh cost, full rebuild vs journal-driven delta patch.
+    Delta refresh must be >=5x cheaper than the full rebuild at N=100k —
+    and scale with the dirty-partition count, not the index size."""
+    from benchmarks.bench_streaming import run as run_stream
+
+    r = run_stream(n=n, insert_batch=insert_batch, steps=steps)
+    # steady-state rows only (a first-seen patch shape pays one compile)
+    print(f"streaming N={n}: delta refresh {r['speedup']}x cheaper than "
+          f"full rebuild ({r['t_delta_refresh_ms_median']}ms vs "
+          f"{r['t_full_rebuild_ms']}ms)")
+    _merge_results(out_path, "streaming", r)
     return r
 
 
@@ -164,9 +178,14 @@ if __name__ == "__main__":
     ap.add_argument("--multiquery", action="store_true",
                     help="batched-vs-single executor comparison instead of "
                          "the lowered serve cells")
+    ap.add_argument("--streaming", action="store_true",
+                    help="streaming-update cell: full-rebuild vs delta-"
+                         "refresh snapshot cost under an insert stream")
     args = ap.parse_args()
     if args.multiquery:
         run_multiquery()
+    elif args.streaming:
+        run_streaming()
     else:
         run(args.shape,
             args.variants.split(",") if args.variants else None)

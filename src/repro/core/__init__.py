@@ -7,8 +7,11 @@
 #   maintenance  — estimate/verify/commit maintenance loop (paper §4.2)
 #   distributed  — mesh-sharded serving engine (paper §6, TPU adaptation)
 #   multiquery   — batched scan-once-per-partition policy (paper §7.4)
+#   journal      — mutation journal: the snapshot invalidation protocol
+#                  (per-partition dirty sets, COW delta refresh, §8.2)
 from .index import QuakeConfig, QuakeIndex, SearchResult  # noqa: F401
+from .journal import Delta, MutationJournal  # noqa: F401
 from .maintenance import Maintainer, MaintenancePolicy  # noqa: F401
 from .cost_model import LatencyModel  # noqa: F401
 from .distributed import (EngineConfig, IndexSnapshot,  # noqa: F401
-                          ShardedQuakeEngine)
+                          ShardedQuakeEngine, SnapshotPatch)

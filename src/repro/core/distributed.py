@@ -36,6 +36,7 @@ parallelism — the 2-D analogue of "threads within a NUMA node".
 from __future__ import annotations
 
 import functools
+import math
 from dataclasses import dataclass
 from typing import Optional, Tuple
 
@@ -55,6 +56,32 @@ Array = jax.Array
 # ---------------------------------------------------------------------------
 # Snapshot
 # ---------------------------------------------------------------------------
+
+# Row-replacement scatters behind apply_delta.  The donated variant
+# updates the operand buffer in place (XLA input-output aliasing): the
+# refresh cost is O(dirty rows), not O(snapshot) — but the donated array
+# is consumed.  Bucket padding in build_patch keeps the set of compiled
+# (shape, dtype) specializations small.
+_scatter_rows = jax.jit(lambda a, sel, u: a.at[sel].set(u))
+_scatter_rows_donated = jax.jit(lambda a, sel, u: a.at[sel].set(u),
+                                donate_argnums=(0,))
+
+
+@dataclass
+class SnapshotPatch:
+    """Host-side replacement rows for a subset of snapshot partitions —
+    the unit of incremental (copy-on-write) refresh.  Built against a fixed
+    slot capacity by ``IndexSnapshot.build_patch``; consumed on device by
+    ``IndexSnapshot.apply_delta`` and by host-side mirrors (executor
+    ``_flat_ids``/``_sizes``)."""
+    rows: np.ndarray        # (R,) int32 partition ids, sorted; the tail
+                            # may duplicate the last row (bucket padding —
+                            # identical updates, inert under scatter)
+    data: np.ndarray        # (R, S_cap, d) float32
+    ids: np.ndarray         # (R, S_cap) int32, -1 on padding
+    centroids: np.ndarray   # (R, d) float32
+    sizes: np.ndarray       # (R,) int32
+
 
 @jax.tree_util.register_dataclass
 @dataclass
@@ -88,30 +115,54 @@ class IndexSnapshot:
         return self.data.shape[2]
 
     @staticmethod
+    def align_capacity(s_cap: int) -> int:
+        """Round a slot capacity up so Pallas scan tiles divide it exactly:
+        next power of two below 512, next multiple of 512 above."""
+        s_cap = max(s_cap, 8)
+        if s_cap <= 512:
+            p2 = 8
+            while p2 < s_cap:
+                p2 *= 2
+            return p2
+        return -(-s_cap // 512) * 512
+
+    @staticmethod
     def from_index(index: QuakeIndex, pad_partitions_to: int = 1,
-                   capacity: Optional[int] = None) -> "IndexSnapshot":
+                   capacity: Optional[int] = None,
+                   headroom: float = 1.0,
+                   allow_truncation: bool = False) -> "IndexSnapshot":
+        """Dense snapshot of the base level.
+
+        ``headroom`` pads the slot capacity beyond the current largest
+        partition (>1.0 leaves slack so subsequent ``apply_delta`` patches
+        rarely force a reshape).  An explicit ``capacity`` smaller than the
+        largest partition raises unless ``allow_truncation=True``; with
+        truncation allowed the recorded ``sizes`` are clamped to what was
+        actually stored, so they always agree with the ``ids >= 0`` mask.
+        """
         lvl0 = index.levels[0]
         p_real = lvl0.num_partitions
         p = ((p_real + pad_partitions_to - 1)
              // pad_partitions_to) * pad_partitions_to
         sizes = np.zeros(p, dtype=np.int32)
         sizes[:p_real] = lvl0.sizes()
-        s_cap = capacity or max(int(sizes.max()), 1)
-        s_cap = max(s_cap, 8)
-        # align capacity so Pallas scan tiles divide it exactly:
-        # next power of two below 512, next multiple of 512 above
-        if s_cap <= 512:
-            p2 = 8
-            while p2 < s_cap:
-                p2 *= 2
-            s_cap = p2
+        if capacity is None:
+            s_cap = max(int(math.ceil(int(sizes.max(initial=0))
+                                      * max(headroom, 1.0))), 1)
         else:
-            s_cap = -(-s_cap // 512) * 512
+            s_cap = capacity
+        s_cap = IndexSnapshot.align_capacity(s_cap)
+        if int(sizes.max(initial=0)) > s_cap and not allow_truncation:
+            raise ValueError(
+                f"IndexSnapshot capacity {s_cap} would truncate a "
+                f"partition of size {int(sizes.max())}; pass "
+                "allow_truncation=True to store a lossy snapshot")
         d = index.dim
         data = np.zeros((p, s_cap, d), dtype=np.float32)
         ids = np.full((p, s_cap), -1, dtype=np.int32)
         for j in range(p_real):
             s = min(int(sizes[j]), s_cap)
+            sizes[j] = s          # recorded size == stored size, always
             data[j, :s] = lvl0.vectors[j][:s]
             ext = lvl0.ids[j][:s]
             if len(ext) and int(ext.max()) > np.iinfo(np.int32).max:
@@ -131,6 +182,96 @@ class IndexSnapshot:
             data=jnp.asarray(data), ids=jnp.asarray(ids),
             centroids=jnp.asarray(cents), sizes=jnp.asarray(sizes),
             beta_table=jnp.asarray(table))
+
+    # ------------------------------------------------------------------
+    # Incremental (copy-on-write) refresh
+    # ------------------------------------------------------------------
+
+    @staticmethod
+    def build_patch(index: QuakeIndex, rows, capacity: int,
+                    bucket: int = 16) -> "SnapshotPatch":
+        """Host-side patch for ``rows`` (level-0 partition ids) against a
+        snapshot of slot capacity ``capacity``.  Raises ``ValueError`` if a
+        row no longer fits — the caller falls back to a full rebuild.
+
+        ``bucket`` floors the padded row count; above it the count rounds
+        to the next power of two (padding duplicates the last row — an
+        identical-update no-op under scatter).  Each distinct patch shape
+        pays one scatter compile per process, so the power-of-two ladder
+        caps that at ~log2(P) compiles total regardless of how the dirty
+        set size drifts across refreshes."""
+        lvl0 = index.levels[0]
+        uniq = sorted({int(j) for j in rows})
+        if uniq and (uniq[0] < 0 or uniq[-1] >= lvl0.num_partitions):
+            raise ValueError(f"patch rows {uniq} outside partition "
+                             f"directory [0, {lvl0.num_partitions})")
+        if uniq and bucket > 1:
+            r_pad = bucket
+            while r_pad < len(uniq):
+                r_pad *= 2
+            uniq = uniq + [uniq[-1]] * (r_pad - len(uniq))
+        rows = np.asarray(uniq, dtype=np.int32)
+        r, d = len(rows), index.dim
+        data = np.zeros((r, capacity, d), dtype=np.float32)
+        ids = np.full((r, capacity), -1, dtype=np.int32)
+        sizes = np.zeros(r, dtype=np.int32)
+        for i, j in enumerate(rows):
+            s = len(lvl0.vectors[j])
+            if s > capacity:
+                raise ValueError(
+                    f"partition {j} (size {s}) exceeds snapshot "
+                    f"capacity {capacity}")
+            ext = lvl0.ids[j]
+            if s and int(ext.max()) > np.iinfo(np.int32).max:
+                raise ValueError(
+                    "IndexSnapshot stores external ids as int32; id "
+                    f"{int(ext.max())} does not fit (partition {j})")
+            data[i, :s] = lvl0.vectors[j]
+            ids[i, :s] = ext
+            sizes[i] = s
+        cents = np.ascontiguousarray(
+            lvl0.centroids[rows], dtype=np.float32) if r else \
+            np.zeros((0, d), dtype=np.float32)
+        return SnapshotPatch(rows=rows, data=data, ids=ids,
+                             centroids=cents, sizes=sizes)
+
+    def apply_delta(self, patch: "SnapshotPatch",
+                    donate: bool = False) -> "IndexSnapshot":
+        """Return a new snapshot with the patch rows replaced on device;
+        only the patch moves host->device.
+
+        ``donate=False`` (true copy-on-write): the previous snapshot stays
+        readable — in-flight readers keep serving from it — at the cost of
+        an O(P*S_cap*d) device-side buffer copy.  ``donate=True`` updates
+        the donated buffers in place (the patch cost is O(dirty rows), the
+        executor steady-state) but *consumes* this snapshot: the caller
+        must own it exclusively, and any handle to it is dead afterwards.
+        """
+        if self.scales is not None:
+            raise ValueError("apply_delta does not support quantized "
+                             "(int8) snapshots; rebuild instead")
+        if len(patch.rows) == 0:
+            return self
+        if int(patch.rows.max()) >= self.num_partitions:
+            raise ValueError("patch rows outside snapshot partition range")
+        if patch.data.shape[1] != self.capacity:
+            raise ValueError(
+                f"patch capacity {patch.data.shape[1]} != snapshot "
+                f"capacity {self.capacity}")
+        sel = jnp.asarray(patch.rows)
+        set_rows = _scatter_rows_donated if donate else _scatter_rows
+        return IndexSnapshot(
+            data=set_rows(self.data, sel,
+                          jnp.asarray(patch.data).astype(self.data.dtype)),
+            ids=set_rows(self.ids, sel,
+                         jnp.asarray(patch.ids).astype(self.ids.dtype)),
+            centroids=set_rows(
+                self.centroids, sel,
+                jnp.asarray(patch.centroids).astype(self.centroids.dtype)),
+            sizes=set_rows(self.sizes, sel,
+                           jnp.asarray(patch.sizes).astype(self.sizes.dtype)),
+            beta_table=self.beta_table,
+            scales=None)
 
     @staticmethod
     def synthetic(p: int, s_cap: int, d: int, seed: int = 0,
@@ -188,6 +329,11 @@ class ShardedQuakeEngine:
             config.batch_axis in mesh.axis_names) else None
         self.n_batch_shards = axis_sizes.get(self.batch_axis, 1) \
             if self.batch_axis else 1
+        # journal-aware sharded snapshot cache (refresh_snapshot)
+        self._snap: Optional[IndexSnapshot] = None
+        self._snap_version = -1
+        self.full_rebuilds = 0
+        self.delta_refreshes = 0
 
     # ---- sharding specs ----
     def snapshot_spec(self) -> IndexSnapshot:
@@ -215,6 +361,50 @@ class ShardedQuakeEngine:
             sizes=jax.device_put(snap.sizes, pa),
             beta_table=jax.device_put(snap.beta_table, rep),
             scales=scales)
+
+    def refresh_snapshot(self, index: QuakeIndex) -> IndexSnapshot:
+        """Cached device-sharded snapshot of the dynamic index, kept
+        coherent through the index's mutation journal (the same
+        invalidation protocol the batched executor uses).  Content deltas
+        confined to known partitions patch only the dirty rows of the
+        resident sharded arrays — no host re-densify, no full transfer;
+        structural changes, int8 storage (rows would need requantizing),
+        capacity overflow, or a trimmed journal re-shard a full rebuild.
+        """
+        if self._snap is not None and self.cfg.storage_dtype != "int8":
+            delta = index.journal.delta_since(self._snap_version)
+            if delta is not None and not delta.structural:
+                lvl0 = index.levels[0]
+                p_real = lvl0.num_partitions
+                dirty = sorted(j for j in delta.dirty if j < p_real)
+                if not dirty:
+                    self._snap_version = index.version
+                    return self._snap
+                cap = self._snap.capacity
+                max_frac = index.config.snapshot_max_dirty_frac
+                if (len(dirty) <= max_frac * max(p_real, 1)
+                        and p_real <= self._snap.num_partitions
+                        and max(len(lvl0.vectors[j]) for j in dirty) <= cap):
+                    try:
+                        patch = IndexSnapshot.build_patch(index, dirty, cap)
+                        # the engine owns its cached sharded snapshot:
+                        # in-place row patch; handles returned from earlier
+                        # refresh_snapshot calls are consumed
+                        self._snap = self._snap.apply_delta(patch,
+                                                            donate=True)
+                    except ValueError:
+                        pass
+                    else:
+                        self._snap_version = index.version
+                        self.delta_refreshes += 1
+                        return self._snap
+        host = IndexSnapshot.from_index(
+            index, pad_partitions_to=self.n_part_shards,
+            headroom=index.config.snapshot_headroom)
+        self._snap = self.shard_snapshot(host)
+        self._snap_version = index.version
+        self.full_rebuilds += 1
+        return self._snap
 
     def pad_queries(self, q: Array) -> Array:
         b = q.shape[0]

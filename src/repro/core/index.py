@@ -33,6 +33,7 @@ from ..kernels import ops
 from . import aps as aps_mod
 from . import geometry, kmeans
 from .cost_model import LatencyModel, PartitionStats
+from .journal import MutationJournal
 
 __all__ = ["QuakeConfig", "QuakeIndex", "Level", "SearchResult"]
 
@@ -67,6 +68,13 @@ class QuakeConfig:
     # --- levels ---
     level_add_threshold: int = 4096     # add top level when N_top exceeds
     level_remove_threshold: int = 64    # drop top level when N_top below
+    # --- snapshot refresh (COW delta path, paper §8.2) ---
+    snapshot_headroom: float = 1.5      # slack factor on snapshot slot
+                                        # capacity so insert deltas rarely
+                                        # force a full reshape/rebuild
+    snapshot_max_dirty_frac: float = 0.5  # delta-refresh only while dirty
+                                        # partitions <= frac * P; beyond
+                                        # that a full rebuild is cheaper
     seed: int = 0
 
 
@@ -120,8 +128,9 @@ class QuakeIndex:
         self.config = config or QuakeConfig()
         self.levels: List[Level] = []
         self.id_map: Dict[int, int] = {}     # external id -> level-0 partition
-        self.version = 0                     # bumped on any data mutation;
-                                             # device snapshot caches key on it
+        self.journal = MutationJournal()     # per-partition dirty sets +
+                                             # structural flags; snapshot
+                                             # caches consume deltas from it
         self._rng = np.random.default_rng(self.config.seed)
         self.geometry_dim = dim if self.config.metric == "l2" else dim + 1
         self._beta_table = geometry.betainc_table(self.geometry_dim)
@@ -186,6 +195,9 @@ class QuakeIndex:
         below.parent = assign.astype(np.int64)
         self.levels.append(Level(centroids=cents, children=children))
         self._aug_extra = [None] * len(self.levels)
+        # upper levels are not part of the base-level snapshot: bump the
+        # clock (planning structures changed) but dirty nothing
+        self.journal.record(reason="level_add")
 
     def remove_top_level(self) -> None:
         """Drop the top level (paper §4.2.1 Remove Level): the level below is
@@ -194,6 +206,7 @@ class QuakeIndex:
         self.levels.pop()
         self.levels[-1].parent = None
         self._aug_extra = [None] * len(self.levels)
+        self.journal.record(reason="level_remove")
 
     # ------------------------------------------------------------------
     # Metric helpers
@@ -439,11 +452,13 @@ class QuakeIndex:
     def insert(self, x: np.ndarray, ids: np.ndarray) -> None:
         x = np.ascontiguousarray(x, dtype=np.float32)
         ids = np.asarray(ids, dtype=np.int64)
-        self.version += 1
+        if x.shape[0] == 0:
+            return
         self._max_norm_sq = max(self._max_norm_sq, float(np.max(
             np.sum(x.astype(np.float64) ** 2, axis=1), initial=0.0)))
         self._aug_extra = [None] * len(self.levels)
         assign = self._route_to_base(x)
+        self.journal.record(dirty=np.unique(assign), reason="insert")
         lvl0 = self.levels[0]
         for j in np.unique(assign):
             sel = assign == j
@@ -458,13 +473,14 @@ class QuakeIndex:
     def delete(self, ids: np.ndarray) -> int:
         """Delete by external id with immediate compaction; returns #removed."""
         ids = np.asarray(ids, dtype=np.int64)
-        self.version += 1
         by_part: Dict[int, list] = {}
         removed = 0
         for ext in ids:
             j = self.id_map.pop(int(ext), None)
             if j is not None:
                 by_part.setdefault(j, []).append(int(ext))
+        if by_part:
+            self.journal.record(dirty=by_part.keys(), reason="delete")
         lvl0 = self.levels[0]
         for j, exts in by_part.items():
             mask = ~np.isin(lvl0.ids[j], np.asarray(exts, dtype=np.int64))
@@ -477,6 +493,13 @@ class QuakeIndex:
     # ------------------------------------------------------------------
     # Introspection
     # ------------------------------------------------------------------
+
+    @property
+    def version(self) -> int:
+        """Monotonic mutation clock, backed by the journal.  Snapshot
+        caches fingerprint on it and ask ``journal.delta_since(v)`` for the
+        cheap (dirty-partition patch) refresh path."""
+        return self.journal.version
 
     @property
     def num_vectors(self) -> int:

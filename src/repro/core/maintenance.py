@@ -124,17 +124,26 @@ class Maintainer:
 
     def run(self, reset_stats: bool = True) -> MaintenanceReport:
         idx = self.index
+        version_before = idx.version
         rep = MaintenanceReport(cost_before=self.total_cost())
         for l in range(len(idx.levels)):
             self._run_level(l, rep)
         self._maybe_adjust_levels(rep)
         rep.cost_after = self.total_cost()
-        idx.version += 1  # invalidate cached snapshots (batched executor)
+        # Snapshot invalidation rides on the journal entries written by the
+        # committed actions themselves (split/merge/refine/level) — a pass
+        # where nothing commits leaves the version clock untouched and no
+        # consumer rebuilds anything.
         if reset_stats:
             for level in idx.levels:
                 level.stats.reset()
         idx.maintenance_log.append(rep.__dict__ | {
-            "partitions": [lv.num_partitions for lv in idx.levels]})
+            "partitions": [lv.num_partitions for lv in idx.levels],
+            "version": idx.version,
+            "journal": [{"version": e.version, "reason": e.reason,
+                         "structural": e.structural,
+                         "dirty": sorted(e.dirty)}
+                        for e in idx.journal.entries_since(version_before)]})
         return rep
 
     # ------------------------------------------------------------------
@@ -249,6 +258,11 @@ class Maintainer:
     def _apply_split(self, l: int, j: int, c2: np.ndarray, a2: np.ndarray
                      ) -> None:
         idx = self.index
+        # base-level splits change the partition directory itself:
+        # structural for snapshot consumers.  Upper-level splits only touch
+        # planning structures — bump the clock, dirty nothing.
+        idx.journal.record(structural=(l == 0),
+                           reason="split" if l == 0 else "split_upper")
         level = idx.levels[l]
         new_j = level.num_partitions
         level.centroids = np.concatenate([level.centroids, c2[1:2]])
@@ -298,6 +312,10 @@ class Maintainer:
         parts = [self._members(l, int(g)) for g in group]
         if sum(len(p[0]) for p in parts) == 0:
             return
+        # contents + centroids of exactly ``group`` change: a delta-
+        # refreshable content mutation at the base level
+        idx.journal.record(dirty=group if l == 0 else None,
+                           reason="refine" if l == 0 else "refine_upper")
         cents, new_parts = kmeans.refine(
             parts, level.centroids[group], iters=cfg.refine_iters)
         level.centroids[group] = cents
@@ -378,6 +396,10 @@ class Maintainer:
     def _apply_merge(self, l: int, j: int, recv: np.ndarray,
                      extra_hits: np.ndarray, recv_ids: np.ndarray) -> None:
         idx = self.index
+        # merges swap-remove a partition: the directory shrinks and the
+        # last partition changes id — structural at the base level
+        idx.journal.record(structural=(l == 0),
+                           reason="merge" if l == 0 else "merge_upper")
         level = idx.levels[l]
         x, ids = self._members(l, j)
         # 1) move members to receivers

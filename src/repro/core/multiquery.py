@@ -30,8 +30,10 @@ the mesh-sharded equivalent for very large batches degenerates to
 ``ShardedQuakeEngine.search_bruteforce``.
 
 The executor serves a cached ``IndexSnapshot`` of the dynamic index
-(copy-on-write semantics, paper §8.2), invalidated by the index's mutation
-``version`` counter.
+(copy-on-write semantics, paper §8.2), kept coherent through the index's
+mutation journal: dirty-partition deltas patch only the touched rows on
+device; structural changes (split/merge/level, capacity overflow) fall
+back to a full rebuild.  See ``docs/snapshot_lifecycle.md``.
 """
 from __future__ import annotations
 
@@ -87,7 +89,7 @@ def _aps_probe_counts(index: QuakeIndex, q: np.ndarray, k: int,
     a *planner* — the radius rho comes from full APS searches on a small
     sample of the batch, then every query picks the smallest probe set whose
     estimated recall clears the target.  Returns (sel (B, n_max), valid
-    (B, n_max), max nprobe)."""
+    (B, n_max), per-query probe counts (B,))."""
     b = q.shape[0]
     p = index.levels[0].num_partitions
     cfg = index.config
@@ -151,6 +153,12 @@ def plan_batch(index: QuakeIndex, q: np.ndarray, k: int,
     b = q.shape[0]
     p = index.levels[0].num_partitions
 
+    if b == 0:
+        # empty batch: one inert pad slot, no query rows
+        return BatchPlan(sel=np.zeros(1, dtype=np.int64),
+                         qmask=np.zeros((0, 1), dtype=bool),
+                         nprobe=np.zeros(0, dtype=np.int64), n_real=0)
+
     if nprobe is not None:
         cd = _centroid_dists(index, q)
         n = int(max(1, min(nprobe, p)))
@@ -180,38 +188,102 @@ def plan_batch(index: QuakeIndex, q: np.ndarray, k: int,
 class BatchedSearchExecutor:
     """Executes planned batches against a device-resident snapshot.
 
-    The snapshot (dense ``(P, S_cap, d)`` + ids + sizes) is cached and
-    rebuilt when the index's mutation fingerprint changes; searches then
-    run one packed union scan per batch.
+    The snapshot (dense ``(P, S_cap, d)`` + ids + sizes) is cached and kept
+    coherent with the dynamic index through its mutation journal: content
+    mutations confined to known partitions (insert/delete/refine) patch
+    only the touched rows on device (``IndexSnapshot.apply_delta``, COW
+    semantics — paper §8.2), while structural changes (split/merge/level),
+    capacity overflow, or a dirty set larger than
+    ``config.snapshot_max_dirty_frac * P`` fall back to a full rebuild.
+    Full rebuilds allocate ``config.snapshot_headroom`` slack capacity so
+    insert deltas rarely force a reshape.  Searches then run one packed
+    union scan per batch.
     """
 
     def __init__(self, index: QuakeIndex, impl: str = "auto",
-                 u_bucket: int = 8):
+                 u_bucket: int = 8, headroom: Optional[float] = None,
+                 max_dirty_frac: Optional[float] = None):
         self.index = index
         self.impl = impl
         self.u_bucket = u_bucket
+        cfg = index.config
+        self.headroom = cfg.snapshot_headroom if headroom is None \
+            else headroom
+        self.max_dirty_frac = cfg.snapshot_max_dirty_frac \
+            if max_dirty_frac is None else max_dirty_frac
         self._snap = None
-        self._key = None
+        self._key = None         # fingerprint the snapshot reflects
         self._valid = None       # (P, S_cap) bool, device
         self._flat_ids = None    # (P*S_cap,) host
         self._sizes = None       # (P,) host
+        self.full_rebuilds = 0   # refresh telemetry (tests / bench)
+        self.delta_refreshes = 0
 
     def _fingerprint(self):
         return (self.index.version, self.index.num_partitions,
                 self.index.num_vectors)
 
     def refresh(self):
-        """Rebuild the device snapshot from the dynamic index."""
+        """Full rebuild of the device snapshot from the dynamic index."""
         from .distributed import IndexSnapshot  # late: avoid import cycle
-        self._snap = IndexSnapshot.from_index(self.index)
+        self._snap = IndexSnapshot.from_index(self.index,
+                                              headroom=self.headroom)
         self._valid = self._snap.ids >= 0
-        self._flat_ids = np.asarray(self._snap.ids).reshape(-1)
-        self._sizes = np.asarray(self._snap.sizes)
+        self._flat_ids = np.array(self._snap.ids).reshape(-1)
+        self._sizes = np.array(self._snap.sizes)
         self._key = self._fingerprint()
+        self.full_rebuilds += 1
         return self._snap
 
+    def _refresh_delta(self, delta) -> bool:
+        """Patch the dirty partition rows in place of a rebuild.  Returns
+        False when the delta is not applicable (structural change, capacity
+        overflow, dirty set too large) — caller falls back to ``refresh``.
+        """
+        from .distributed import IndexSnapshot  # late: avoid import cycle
+        idx = self.index
+        lvl0 = idx.levels[0]
+        p_real = lvl0.num_partitions
+        if delta.structural or p_real > self._snap.num_partitions:
+            return False
+        dirty = sorted(j for j in delta.dirty if j < p_real)
+        if len(dirty) > self.max_dirty_frac * max(p_real, 1):
+            return False
+        if not dirty:
+            # clock moved without base-level content changes (e.g. an
+            # upper-level split): snapshot already coherent
+            self._key = self._fingerprint()
+            return True
+        cap = self._snap.capacity
+        if max(len(lvl0.vectors[j]) for j in dirty) > cap:
+            return False      # a partition outgrew its slack slots
+        try:
+            patch = IndexSnapshot.build_patch(idx, dirty, cap)
+            # donate: the executor owns its cached snapshot exclusively,
+            # so the patch updates the device buffers in place — refresh
+            # cost is O(dirty rows), not O(index)
+            self._snap = self._snap.apply_delta(patch, donate=True)
+        except ValueError:
+            return False
+        from .distributed import _scatter_rows_donated
+        sel = patch.rows
+        self._valid = _scatter_rows_donated(
+            self._valid, jnp.asarray(sel), jnp.asarray(patch.ids >= 0))
+        self._flat_ids.reshape(self._snap.num_partitions, cap)[sel] = \
+            patch.ids
+        self._sizes[sel] = patch.sizes
+        self._key = self._fingerprint()
+        self.delta_refreshes += 1
+        return True
+
     def snapshot(self):
-        if self._snap is None or self._key != self._fingerprint():
+        if self._snap is None:
+            return self.refresh()
+        fp = self._fingerprint()
+        if self._key == fp:
+            return self._snap
+        delta = self.index.journal.delta_since(self._key[0])
+        if delta is None or not self._refresh_delta(delta):
             self.refresh()
         return self._snap
 
@@ -222,6 +294,10 @@ class BatchedSearchExecutor:
         q = np.ascontiguousarray(queries, dtype=np.float32)
         if q.ndim == 1:
             q = q[None, :]
+        if q.shape[0] == 0:
+            return BatchResult(ids=np.zeros((0, k), dtype=np.int64),
+                               dists=np.zeros((0, k), dtype=np.float64),
+                               nprobe=np.zeros(0, dtype=np.int64))
         snap = self.snapshot()
         plan = plan_batch(self.index, q, k, nprobe=nprobe,
                           recall_target=recall_target,
@@ -279,6 +355,10 @@ def per_query_search(index: QuakeIndex, queries: np.ndarray, k: int,
     so partitions are re-scanned per query (Faiss-IVF behaviour) but the
     code path and kernels are identical to the batched policy."""
     q = np.ascontiguousarray(queries, dtype=np.float32)
+    if q.shape[0] == 0:
+        return BatchResult(ids=np.zeros((0, k), dtype=np.int64),
+                           dists=np.zeros((0, k), dtype=np.float64),
+                           nprobe=np.zeros(0, dtype=np.int64))
     ex = get_executor(index)
     ids, dists, parts, vecs, comps = [], [], 0, 0, 0
     nps = []

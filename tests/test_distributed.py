@@ -79,6 +79,30 @@ def test_engine_matches_dynamic_index(snap_and_data):
         assert overlap >= 0.9, (r, overlap)
 
 
+def test_engine_journal_refresh_patches_sharded_snapshot(snap_and_data):
+    """The engine's cached snapshot consumes the mutation journal: an
+    insert patches only the dirty rows (no re-shard), and the patched
+    snapshot serves the fresh vectors."""
+    _, ds = snap_and_data
+    idx = QuakeIndex.build(ds.vectors, num_partitions=32, kmeans_iters=4)
+    eng = ShardedQuakeEngine(_mesh111(), EngineConfig(
+        k=10, nprobe=32, part_axes=("pod", "data")))
+    ss = eng.refresh_snapshot(idx)
+    assert eng.full_rebuilds == 1
+    q = datasets.queries_near(ds, 4, seed=9)
+    new_ids = np.arange(60_000, 60_004)
+    idx.insert(q * 0.999, new_ids)
+    ss2 = eng.refresh_snapshot(idx)
+    assert eng.delta_refreshes == 1 and eng.full_rebuilds == 1
+    assert ss2.capacity == ss.capacity
+    _, i = eng.search_fixed(jnp.asarray(q), ss2)
+    assert set(np.asarray(i).ravel().tolist()) & set(new_ids.tolist())
+    # structural mutation -> full re-shard
+    idx.journal.record(structural=True, reason="test")
+    eng.refresh_snapshot(idx)
+    assert eng.full_rebuilds == 2
+
+
 MULTIDEV_SCRIPT = textwrap.dedent("""
     import numpy as np, jax, jax.numpy as jnp
     from jax.sharding import Mesh, NamedSharding, PartitionSpec as P

@@ -87,6 +87,28 @@ def test_rejection_blocks_bad_actions():
     assert rep.splits == 0 and rep.merges == 0
 
 
+def test_noop_maintenance_does_not_invalidate_snapshots():
+    """Regression: a maintenance pass where zero actions commit must not
+    bump the mutation clock — the batched executor's cached snapshot stays
+    valid and no refresh (full or delta) happens on the next search."""
+    from repro.core.multiquery import batch_search, get_executor
+
+    idx, x, _ = _skewed_index(tau_ns=1e12)     # tau blocks every commit
+    q = x[:4]
+    batch_search(idx, q, 5, nprobe=4)
+    ex = get_executor(idx)
+    v0, key0, rebuilds0 = idx.version, ex._key, ex.full_rebuilds
+    rep = Maintainer(idx).run()
+    assert rep.splits == 0 and rep.merges == 0
+    assert not rep.level_added and not rep.level_removed
+    assert idx.version == v0                   # clock untouched
+    batch_search(idx, q, 5, nprobe=4)
+    assert ex._key == key0
+    assert ex.full_rebuilds == rebuilds0 and ex.delta_refreshes == 0
+    # the maintenance log still records the pass, with an empty journal
+    assert idx.maintenance_log[-1]["journal"] == []
+
+
 def test_no_rejection_policy_commits_tentatives():
     idx, _, _ = _skewed_index()
     pol = MaintenancePolicy(use_rejection=False)

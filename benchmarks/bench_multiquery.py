@@ -1,20 +1,25 @@
-"""Paper Figure 5: multi-query batched execution QPS vs batch size.
+"""Paper Figure 5: multi-query batched execution QPS vs batch size — plus
+the planner/skew/storage-dtype cells for the vectorized batch planner.
 
-The batched policy packs the batch's probe sets into one partition union
-and scans each needed partition once per batch through the device-resident
-executor (``scan_topk_indexed`` kernel); the per-query baseline is the B=1
-case of the same executor, re-scanning per query (Faiss-IVF behaviour).
+Cells (``--cell``, comma list, default ``qps``):
 
-Reported per batch size:
-  * batched vs per-query QPS and the speedup,
-  * ``vectors_scanned`` (vectors streamed from the snapshot) for both
-    paths, plus the naive bound B*nprobe*avg_partition_size — the batched
-    number must sit well below it on an overlapping (skewed) batch,
-  * ``partitions_scanned`` (union size) vs B*nprobe.
+  qps       batched vs per-query QPS across batch sizes (the original
+            Figure 5 analogue) + the pallas interpret-mode proof.
+  planner   plan-time breakdown: the vectorized APS planner
+            (``plan_batch(planner="vectorized")``) vs the per-query loop
+            baseline, with a byte-identical probe-set parity check at a
+            shared calibrated radius, and planner-vs-scan wall-time split.
+  skew      Zipfian query mix (``data/workload.py``): ``union_cap``
+            latency savings at (near-)fixed recall — the read-skew regime
+            where hot partitions dedupe across the batch.
+  dtypes    f32/bf16/int8 batched executor: scanned HBM bytes vs recall
+            (int8 rides ``scan_selected_topk_q8``; ~4x less vector
+            traffic at recall within a point of f32).
 
-``--impl pallas`` runs the packed scan through the Pallas kernel in
-interpret mode — the CPU CI proof that the device path runs end-to-end;
-``jnp`` (default) is the XLA path used for QPS numbers.
+Each cell merges its numbers into ``results/perf_quake.json``
+(``multiquery_planner`` / ``multiquery_skew`` / ``multiquery_dtypes``).
+Assertion flags (``--min-planner-speedup``, ``--max-skew-recall-drop``,
+``--max-dtype-recall-drop``) turn cells into CI regression gates.
 """
 from __future__ import annotations
 
@@ -22,16 +27,34 @@ import time
 
 import numpy as np
 
+from repro.core import multiquery as mq
 from repro.core.multiquery import batch_search, per_query_search
-from repro.data import datasets
+from repro.data import datasets, workload
 
-from .common import Rows, build_index, sift_like
+from .common import Rows, build_index, merge_results, sift_like
+
+OUT_PATH = "results/perf_quake.json"
+
+
+def _recall(ids: np.ndarray, gt: np.ndarray) -> float:
+    k = gt.shape[1]
+    return float(np.mean([len(set(ids[i].tolist()) & set(gt[i].tolist()))
+                          / k for i in range(len(gt))]))
+
+
+def _best_of(fn, repeats=3):
+    best = np.inf
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
 
 
 def run(n=20_000, dim=32, batches=(16, 64, 256), k=10, nprobe=12,
-        seed=0, impl="jnp", verify_pallas=True):
-    ds = sift_like(n, dim, seed)
-    idx = build_index(ds)
+        seed=0, impl="jnp", verify_pallas=True, ds=None, idx=None):
+    ds = ds or sift_like(n, dim, seed)
+    idx = idx or build_index(ds)
     avg_part = n / idx.num_partitions
     rows = Rows()
     for b in batches:
@@ -72,11 +95,234 @@ def run(n=20_000, dim=32, batches=(16, 64, 256), k=10, nprobe=12,
     return rows
 
 
+def run_planner(n=20_000, dim=32, b=128, k=10, target=0.9, seed=0,
+                num_partitions=None, min_speedup=None, ds=None, idx=None):
+    """Planner wall-time: vectorized vs per-query loop (APS mode), with a
+    byte-identical probe-set parity check, plus the plan-vs-scan split of
+    one batched search."""
+    ds = ds or sift_like(n, dim, seed)
+    idx = idx or build_index(ds, num_partitions=num_partitions)
+    q = np.ascontiguousarray(datasets.queries_near(ds, b, seed=6),
+                             np.float32)
+    ex = mq.get_executor(idx)
+    ex.snapshot()                                  # build outside timings
+
+    # parity at a shared calibrated radius + shared centroid pass (the
+    # acceptance bar: the vectorization transform itself is exact)
+    kth = mq._calibrate_kth_loop(idx, q, k, target)
+    geo = mq._centroid_geo_batch(idx, q)
+    s_l, v_l, c_l = mq._aps_probe_counts_loop(idx, q, k, target,
+                                              kth_med=kth, geo=geo)
+    s_v, v_v, c_v = mq._aps_probe_counts_batched(idx, q, k, target,
+                                                 kth_med=kth, geo=geo)
+    assert np.array_equal(s_l, s_v) and np.array_equal(c_l, c_v), \
+        "vectorized planner diverged from the per-query loop"
+    print(f"parity: byte-identical probe sets (B={b}, "
+          f"P={idx.num_partitions}, mean nprobe {c_v.mean():.1f})")
+
+    # end-to-end plan times.  loop = the pre-vectorization planner
+    # (per-query GEMV + argsort + estimate_probs_np, up-to-8 host APS
+    # calibration searches per batch).  vectorized cold = batched arrays +
+    # one batched calibration search; steady = the executor serving path,
+    # where the calibrated radius is cached on the snapshot fingerprint.
+    for planner in ("vectorized", "loop"):               # warm jit shapes
+        mq.plan_batch(idx, q, k, recall_target=target, planner=planner)
+    t_cold = _best_of(lambda: mq.plan_batch(idx, q, k, recall_target=target,
+                                            planner="vectorized"))
+    mq.plan_batch(idx, q, k, recall_target=target,
+                  cache=ex.planner_cache)                        # fill
+    t_vec = _best_of(lambda: mq.plan_batch(idx, q, k, recall_target=target,
+                                           cache=ex.planner_cache,
+                                           cent_norms=ex._cent_norms))
+    t_loop = _best_of(lambda: mq.plan_batch(idx, q, k, recall_target=target,
+                                            planner="loop"))
+    ex.search(q, k, recall_target=target)                # warm scan shape
+    t_total = _best_of(lambda: ex.search(q, k, recall_target=target))
+    t_scan = max(t_total - t_vec, 0.0)
+
+    speedup = t_loop / t_vec
+    r = {"batch": b, "num_partitions": idx.num_partitions, "n": n,
+         "t_plan_loop_ms": round(t_loop * 1e3, 3),
+         "t_plan_vectorized_ms": round(t_vec * 1e3, 3),
+         "t_plan_vectorized_cold_ms": round(t_cold * 1e3, 3),
+         "planner_speedup": round(speedup, 2),
+         "planner_speedup_cold": round(t_loop / t_cold, 2),
+         "t_search_total_ms": round(t_total * 1e3, 3),
+         "t_scan_ms": round(t_scan * 1e3, 3),
+         "plan_frac_of_search": round(t_vec / max(t_total, 1e-12), 3),
+         "parity": "byte-identical"}
+    print(f"planner B={b} P={idx.num_partitions}: loop "
+          f"{r['t_plan_loop_ms']}ms -> vectorized "
+          f"{r['t_plan_vectorized_ms']}ms steady "
+          f"({r['planner_speedup']}x; cold "
+          f"{r['t_plan_vectorized_cold_ms']}ms, "
+          f"{r['planner_speedup_cold']}x); search total "
+          f"{r['t_search_total_ms']}ms "
+          f"(plan {100 * r['plan_frac_of_search']:.0f}%)")
+    merge_results(OUT_PATH, "multiquery_planner", r)
+    if min_speedup is not None:
+        assert speedup >= min_speedup, \
+            f"planner speedup {speedup:.2f}x < required {min_speedup}x"
+    return r
+
+
+def run_skew(n=20_000, dim=32, b=256, k=10, nprobe=16, skew=1.0, seed=0,
+             max_recall_drop=None, ds=None, idx=None):
+    """Read-skew cell: Zipfian query mix; union_cap sheds scan latency at
+    (near-)fixed recall because hot partitions are shared across the
+    batch and the frequency-ranked truncation (with the nearest-partition
+    anchor) drops only rarely-probed tail partitions."""
+    ds = ds or sift_like(n, dim, seed)
+    idx = idx or build_index(ds)
+    wl = workload.readonly_workload(ds, n_ops=1, queries_per_op=b,
+                                    skew=skew, seed=seed + 7)
+    q = wl.operations[0].queries
+    gt = ds.ground_truth(q, k)
+
+    rows = Rows()
+    r_full = batch_search(idx, q, k, nprobe=nprobe)
+    cap_half = max(r_full.partitions_scanned // 2, 1)
+    cap_quarter = max(r_full.partitions_scanned // 4, 1)
+    # dedupe: on tiny unions half and quarter collide into one cap
+    caps = (None,) + tuple(dict.fromkeys((cap_half, cap_quarter)))
+    cells = {}
+    for cap in caps:
+        batch_search(idx, q, k, nprobe=nprobe, union_cap=cap)     # warm
+        t = _best_of(lambda: batch_search(idx, q, k, nprobe=nprobe,
+                                          union_cap=cap))
+        r = batch_search(idx, q, k, nprobe=nprobe, union_cap=cap)
+        rec = _recall(r.ids, gt)
+        name = "uncapped" if cap is None else f"cap{cap}"
+        rows.add(variant=name, union_cap=cap or 0,
+                 partitions_scanned=r.partitions_scanned,
+                 vectors_scanned=r.vectors_scanned,
+                 recall=rec, latency_us=t / b * 1e6,
+                 qps=b / t)
+        cells[name] = {"union_cap": cap, "recall": round(rec, 4),
+                       "partitions_scanned": r.partitions_scanned,
+                       "vectors_scanned": r.vectors_scanned,
+                       "latency_ms": round(t * 1e3, 3)}
+    rows.print_table(
+        f"read-skew union_cap (zipf s={1.0 + skew:.1f}, B={b}, "
+        f"nprobe={nprobe}, P={idx.num_partitions})")
+    base = cells["uncapped"]
+    half = cells[f"cap{cap_half}"]
+    out = {"batch": b, "skew": skew, "nprobe": nprobe, "cells": cells,
+           "latency_saving_at_half_cap": round(
+               base["latency_ms"] / max(half["latency_ms"], 1e-9), 2),
+           "recall_drop_at_half_cap": round(
+               base["recall"] - half["recall"], 4)}
+    print(f"skew: half-union cap -> {out['latency_saving_at_half_cap']}x "
+          f"faster, recall drop {out['recall_drop_at_half_cap']}")
+    merge_results(OUT_PATH, "multiquery_skew", out)
+    if max_recall_drop is not None:
+        assert out["recall_drop_at_half_cap"] <= max_recall_drop, out
+        assert half["latency_ms"] < base["latency_ms"], out
+    return out
+
+
+def _scan_bytes(vectors: int, dim: int, dtype: str, b: int, k: int) -> dict:
+    """Analytic HBM bytes streamed per batch: vector payload (exactly
+    4x/2x smaller for int8/bf16), per-slot metadata (aux ||x||^2 f32;
+    int8 adds per-slot dequant scales), and the int8 path's exact-rerank
+    gather of B*2k f32 rows."""
+    payload = vectors * {"f32": 4 * dim, "bf16": 2 * dim,
+                         "int8": dim}[dtype]
+    meta = vectors * (8 if dtype == "int8" else 4)
+    rerank = b * 2 * k * 4 * dim if dtype == "int8" else 0
+    return {"payload": payload, "total": payload + meta + rerank}
+
+
+def run_dtypes(n=20_000, dim=32, b=128, k=10, nprobe=12, seed=0,
+               max_recall_drop=None, ds=None, idx=None):
+    """Storage-dtype cell: identical probe plan across f32/bf16/int8, so
+    the byte ratio is pure storage compression; recall measured against
+    brute-force ground truth.  int8 scans 2k candidates and re-ranks them
+    exactly (host f32 mirror), which recovers near-f32 recall — the
+    rerank gather is charged to its byte count."""
+    ds = ds or sift_like(n, dim, seed)
+    idx = idx or build_index(ds)
+    q = datasets.queries_near(ds, b, seed=6)
+    gt = ds.ground_truth(q, k)
+
+    rows = Rows()
+    cells = {}
+    for dtype in ("f32", "bf16", "int8"):
+        batch_search(idx, q, k, nprobe=nprobe, storage_dtype=dtype)  # warm
+        t = _best_of(lambda: batch_search(idx, q, k, nprobe=nprobe,
+                                          storage_dtype=dtype))
+        r = batch_search(idx, q, k, nprobe=nprobe, storage_dtype=dtype)
+        rec = _recall(r.ids, gt)
+        nbytes = _scan_bytes(r.vectors_scanned, dim, dtype, b, k)
+        rows.add(variant=dtype, recall=rec,
+                 vectors_scanned=r.vectors_scanned,
+                 payload_bytes=nbytes["payload"],
+                 scan_bytes=nbytes["total"], latency_us=t / b * 1e6)
+        cells[dtype] = {"recall": round(rec, 4),
+                        "payload_bytes": nbytes["payload"],
+                        "scan_bytes": nbytes["total"],
+                        "vectors_scanned": r.vectors_scanned,
+                        "latency_ms": round(t * 1e3, 3)}
+    rows.print_table(
+        f"storage dtypes (B={b}, nprobe={nprobe}, d={dim}) — byte counts "
+        "are the TPU-native HBM stream; interpret-mode CPU latency is not "
+        "traffic-bound")
+    out = {"batch": b, "nprobe": nprobe, "dim": dim, "cells": cells,
+           "int8_payload_reduction": round(
+               cells["f32"]["payload_bytes"]
+               / max(cells["int8"]["payload_bytes"], 1), 2),
+           "int8_bytes_reduction": round(
+               cells["f32"]["scan_bytes"]
+               / max(cells["int8"]["scan_bytes"], 1), 2),
+           "int8_recall_drop": round(
+               cells["f32"]["recall"] - cells["int8"]["recall"], 4)}
+    print(f"dtypes: int8 streams {out['int8_payload_reduction']}x less "
+          f"vector payload ({out['int8_bytes_reduction']}x total bytes "
+          f"incl. metadata+rerank), recall drop {out['int8_recall_drop']}")
+    merge_results(OUT_PATH, "multiquery_dtypes", out)
+    if max_recall_drop is not None:
+        assert out["int8_recall_drop"] <= max_recall_drop, out
+        # the byte model is analytic (vectors * bytes/vec), so the real
+        # regression signals are plan parity across dtypes (a diverging
+        # int8 plan would change what is scanned) and the recall gate
+        assert (cells["int8"]["vectors_scanned"]
+                == cells["f32"]["vectors_scanned"]), out
+        assert cells["f32"]["recall"] - cells["bf16"]["recall"] <= 0.02, out
+    return out
+
+
 if __name__ == "__main__":
     import argparse
     ap = argparse.ArgumentParser()
     ap.add_argument("--impl", default="jnp",
                     choices=["jnp", "pallas", "auto"])
     ap.add_argument("--n", type=int, default=20_000)
+    ap.add_argument("--b", type=int, default=128)
+    ap.add_argument("--num-partitions", type=int, default=None)
+    ap.add_argument("--cell", default="qps",
+                    help="comma list of qps,planner,skew,dtypes")
+    ap.add_argument("--min-planner-speedup", type=float, default=None)
+    ap.add_argument("--max-skew-recall-drop", type=float, default=None)
+    ap.add_argument("--max-dtype-recall-drop", type=float, default=None)
     args = ap.parse_args()
-    run(n=args.n, impl=args.impl)
+    cells = [c.strip() for c in args.cell.split(",") if c.strip()]
+    ds = sift_like(args.n, 32, 0)
+    idx = build_index(ds, num_partitions=args.num_partitions)
+    for cell in cells:
+        if cell == "qps":
+            run(n=args.n, impl=args.impl, ds=ds, idx=idx)
+        elif cell == "planner":
+            run_planner(n=args.n, b=args.b,
+                        num_partitions=args.num_partitions,
+                        min_speedup=args.min_planner_speedup,
+                        ds=ds, idx=idx)
+        elif cell == "skew":
+            run_skew(n=args.n, b=max(args.b, 128),
+                     max_recall_drop=args.max_skew_recall_drop,
+                     ds=ds, idx=idx)
+        elif cell == "dtypes":
+            run_dtypes(n=args.n, b=args.b,
+                       max_recall_drop=args.max_dtype_recall_drop,
+                       ds=ds, idx=idx)
+        else:
+            raise SystemExit(f"unknown cell {cell!r}")

@@ -1,6 +1,7 @@
 """Shared helpers for the paper-table benchmarks."""
 from __future__ import annotations
 
+import json
 import os
 import time
 from contextlib import contextmanager
@@ -13,6 +14,20 @@ from repro.core import QuakeConfig, QuakeIndex
 from repro.data import datasets
 
 RESULTS_DIR = os.environ.get("BENCH_RESULTS", "results")
+
+
+def merge_results(out_path: str, key: str, value) -> None:
+    """Merge one cell into the shared results JSON
+    (``results/perf_quake.json`` by convention)."""
+    os.makedirs(os.path.dirname(out_path) or ".", exist_ok=True)
+    existing = {}
+    if os.path.exists(out_path):
+        with open(out_path) as f:
+            existing = json.load(f)
+    existing[key] = value
+    with open(out_path, "w") as f:
+        json.dump(existing, f, indent=1)
+    print(f"-> {out_path}")
 
 
 def sift_like(n=20_000, dim=32, seed=0):

@@ -21,21 +21,14 @@ import os
 os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
 
 import argparse
-import json
 import time
 
 
 def _merge_results(out_path: str, key: str, value) -> None:
-    """Merge one cell into the shared results JSON."""
-    os.makedirs(os.path.dirname(out_path), exist_ok=True)
-    existing = {}
-    if os.path.exists(out_path):
-        with open(out_path) as f:
-            existing = json.load(f)
-    existing[key] = value
-    with open(out_path, "w") as f:
-        json.dump(existing, f, indent=1)
-    print(f"-> {out_path}")
+    """Merge one cell into the shared results JSON (see common.py; imported
+    lazily so this module can keep setting XLA_FLAGS before jax loads)."""
+    from benchmarks.common import merge_results
+    merge_results(out_path, key, value)
 
 
 def run(shape: str, variants=None, out_path="results/perf_quake.json"):

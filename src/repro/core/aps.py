@@ -84,6 +84,62 @@ def estimate_probs_np(d0_sq: float, di_sq: np.ndarray, cc_dist: np.ndarray,
     return p0, p
 
 
+def estimate_probs_batch(d0_sq, di_sq, cc_dist, rho_sq, table, valid):
+    """``estimate_probs_np`` lifted to ``(B, M)`` candidate arrays — the
+    estimator core of the vectorized batch planner (``multiquery``).
+
+    d0_sq (B,): ||q_b - c0_b||^2; di_sq (B, M): per-candidate squared
+    distances; cc_dist (B, M): ||c_i - c0_b||; rho_sq (B,): per-query
+    radius^2; valid (B, M): candidate mask.  Convention: column 0 of every
+    row holds that query's nearest candidate and is excluded
+    (``valid[:, 0]`` is False) — under that convention each row is
+    bitwise-identical to a per-row ``estimate_probs_np`` call (same
+    pairwise-summation trees), which is what the planner parity tests
+    pin down.  Other mask patterns are handled correctly (every valid
+    column contributes to ``p0``) but only agree with the scalar mirror
+    to float rounding.
+
+    Works unchanged on host numpy arrays (the executor's default) and on
+    jnp arrays (jittable — the device-planner variant); ``table`` is the
+    precomputed beta grid (callables are host-only).
+
+    Returns (p0 (B,), p (B, M)).
+    """
+    xp = np if isinstance(di_sq, np.ndarray) else jnp
+    rho = xp.sqrt(xp.maximum(rho_sq, 1e-30))[:, None]
+    h = (di_sq - d0_sq[:, None]) / (2.0 * xp.maximum(cc_dist, 1e-20))
+    t = xp.clip(h / rho, -1.0, 1.0)
+    x = xp.clip(1.0 - t * t, 0.0, 1.0)
+    if callable(table):
+        if xp is not np:
+            raise TypeError("callable beta tables are host-only; pass the "
+                            "precomputed grid for the jnp path")
+        half = 0.5 * np.asarray(table(x), dtype=np.float64)
+    else:
+        tbl = xp.asarray(table)
+        n = tbl.shape[0]
+        pos = x * (n - 1)
+        itype = np.int64 if xp is np else jnp.int32
+        lo = xp.clip(xp.floor(pos).astype(itype), 0, n - 2)
+        frac = pos - lo
+        half = 0.5 * (tbl[lo] * (1.0 - frac) + tbl[lo + 1] * frac)
+    v = xp.where(t >= 0, half, 1.0 - half)
+    v = xp.where(valid, v, 0.0)
+    total = v.sum(axis=1)
+    ok = total > 0
+    vn = v / xp.where(ok, total, 1.0)[:, None]
+    # p0 = prod over valid candidates.  The tail slice reproduces
+    # estimate_probs_np's compacted vn[valid] summation tree exactly under
+    # the planner convention (column 0 invalid -> its term is an exact
+    # 0.0, an additive identity); adding the column-0 term separately
+    # keeps unconventional masks correct too.
+    log1m = xp.where(valid, xp.log1p(-xp.clip(vn, 0.0, 1.0 - 1e-7)), 0.0)
+    p0 = xp.exp(log1m[:, 1:].sum(axis=1) + log1m[:, 0])
+    p0 = xp.where(ok, p0, 1.0)
+    p = xp.where(ok[:, None], (1.0 - p0)[:, None] * vn, 0.0)
+    return p0, p
+
+
 # ---------------------------------------------------------------------------
 # Host-driven Algorithm 1 (dynamic index path)
 # ---------------------------------------------------------------------------

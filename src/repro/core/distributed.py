@@ -332,6 +332,9 @@ class ShardedQuakeEngine:
         # journal-aware sharded snapshot cache (refresh_snapshot)
         self._snap: Optional[IndexSnapshot] = None
         self._snap_version = -1
+        self._host_sizes: Optional[np.ndarray] = None  # (P,) host mirror
+        self._planner_cache = None   # multiquery.PlannerCache (search_batch)
+        self._planned_fns = {}   # n_union -> jitted planned-batch executor
         self.full_rebuilds = 0
         self.delta_refreshes = 0
 
@@ -395,6 +398,7 @@ class ShardedQuakeEngine:
                     except ValueError:
                         pass
                     else:
+                        self._host_sizes[patch.rows] = patch.sizes
                         self._snap_version = index.version
                         self.delta_refreshes += 1
                         return self._snap
@@ -402,6 +406,7 @@ class ShardedQuakeEngine:
             index, pad_partitions_to=self.n_part_shards,
             headroom=index.config.snapshot_headroom)
         self._snap = self.shard_snapshot(host)
+        self._host_sizes = np.array(host.sizes)
         self._snap_version = index.version
         self.full_rebuilds += 1
         return self._snap
@@ -453,23 +458,21 @@ class ShardedQuakeEngine:
         b = dist.shape[0]
         return dist.reshape(b, -1), bids.reshape(b, -1)
 
-    def _scan_union_topk(self, q: Array, snap: IndexSnapshot, sel: Array,
-                         k: int) -> Tuple[Array, Array]:
-        """Union-deduped scan of per-query selections ``sel`` (B, n):
-        the batch's selected partitions are packed into one static union and
-        each block is scanned once for the whole batch (paper §7.4 policy),
-        preserving per-query probe semantics via a selection mask.
-
-        Returns (dists (B, k), external ids (B, k)) ascending.
+    def _scan_packed(self, q: Array, snap: IndexSnapshot, selected: Array,
+                     k: int, n_union: int,
+                     priority: Optional[Array] = None
+                     ) -> Tuple[Array, Array]:
+        """Packed union scan of a dense ``selected`` (B, P_loc) bool probe
+        matrix: ``pack_union`` (frequency-ranked with an optional anchor
+        ``priority``, so ``n_union`` truncation keeps the partitions most
+        queries probe and never a query's nearest) + one packed top-k scan
+        in the engine's storage dtype.  Returns (dists (B, k), external
+        ids (B, k)) ascending.
         """
         from ..kernels import ops as kops
         cfg = self.cfg
-        b, n_sel = sel.shape
-        p_loc = snap.num_partitions
-        n_union = min(cfg.union_cap or b * n_sel, p_loc)
-        selected = jnp.zeros((b, p_loc), jnp.bool_).at[
-            jnp.arange(b)[:, None], sel].set(True)
-        sel_u, qmask = kops.pack_union(selected, n_union)  # (U,), (B, U)
+        sel_u, qmask = kops.pack_union(selected, n_union,
+                                       priority=priority)  # (U,), (B, U)
         valid = snap.ids >= 0                            # (P_loc, S)
         if snap.scales is not None:                      # int8 residuals
             d, flat = kops.scan_selected_topk_q8(
@@ -484,6 +487,27 @@ class ShardedQuakeEngine:
         ext = jnp.where(flat >= 0,
                         jnp.take(ids_flat, jnp.maximum(flat, 0)), -1)
         return d, ext.astype(jnp.int32)
+
+    def _scan_union_topk(self, q: Array, snap: IndexSnapshot, sel: Array,
+                         k: int) -> Tuple[Array, Array]:
+        """Union-deduped scan of per-query selections ``sel`` (B, n):
+        the batch's selected partitions are packed into one static union and
+        each block is scanned once for the whole batch (paper §7.4 policy),
+        preserving per-query probe semantics via a selection mask.
+
+        Returns (dists (B, k), external ids (B, k)) ascending.
+        """
+        cfg = self.cfg
+        b, n_sel = sel.shape
+        p_loc = snap.num_partitions
+        n_union = min(cfg.union_cap or b * n_sel, p_loc)
+        selected = jnp.zeros((b, p_loc), jnp.bool_).at[
+            jnp.arange(b)[:, None], sel].set(True)
+        # sel arrives best-first (top_k order): column 0 is each query's
+        # nearest local partition — anchor it above the frequency ranking
+        anchor = jnp.zeros((p_loc,), jnp.bool_).at[sel[:, 0]].set(True)
+        return self._scan_packed(q, snap, selected, k, n_union,
+                                 priority=anchor.astype(jnp.int32) * (b + 1))
 
     def _merge_global(self, d_loc: Array, i_loc: Array, k: int
                       ) -> Tuple[Array, Array]:
@@ -662,3 +686,111 @@ class ShardedQuakeEngine:
     @functools.cached_property
     def search_bruteforce(self):
         return jax.jit(self.mapped_fn("brute"))
+
+    # ------------------------------------------------------------------
+    # planner-driven multi-query entry (shares core.multiquery.plan_batch)
+    # ------------------------------------------------------------------
+
+    def _search_planned_local(self, q: Array, snap: IndexSnapshot,
+                              selected: Array, anchor: Array, *,
+                              n_union: int) -> Tuple[Array, Array]:
+        prio = anchor.astype(jnp.int32) * (selected.shape[0] + 1)
+        d_loc, i_loc = self._scan_packed(q, snap, selected, self.cfg.k,
+                                         n_union, priority=prio)
+        return self._merge_global(d_loc, i_loc, self.cfg.k)
+
+    def _planned_fn(self, n_union: int):
+        """Jitted SPMD executor for a planned batch: the (B, P) probe
+        matrix is sharded with the snapshot (batch axis x partition axes),
+        each device packs its local slice of the union (``pack_union``)
+        and scans it once, and the per-round hierarchical merge combines
+        shard-local top-k.  One compile per bucketed local-union size,
+        cached per engine instance (a class-level lru_cache would pin
+        engines and their compiled closures for the process lifetime)."""
+        cached = self._planned_fns.get(n_union)
+        if cached is not None:
+            return cached
+        qspec = self.query_spec()
+        sel_spec = P(self.batch_axis, self.cfg.part_axes) \
+            if self.batch_axis else P(None, self.cfg.part_axes)
+        fn = functools.partial(self._search_planned_local, n_union=n_union)
+        jitted = jax.jit(shard_map(
+            fn, mesh=self.mesh,
+            in_specs=(qspec, self.snapshot_spec(), sel_spec,
+                      P(self.cfg.part_axes)),
+            out_specs=(qspec, qspec), check_vma=False))
+        self._planned_fns[n_union] = jitted
+        return jitted
+
+    def search_batch(self, index: QuakeIndex, queries: np.ndarray,
+                     k: Optional[int] = None,
+                     nprobe: Optional[int] = None,
+                     recall_target: Optional[float] = None,
+                     union_cap: Optional[int] = None):
+        """Multi-query search over the sharded snapshot through the *same*
+        host batch planner as the device-resident executor
+        (``core.multiquery.plan_batch``): per-query probe sets (vectorized
+        APS when ``nprobe`` is None) are planned once against the dynamic
+        index, then scattered into a dense (B, P) probe matrix whose
+        partition axis is sharded with the snapshot — each device packs
+        and scans only its local slice of the batch union.  Returns
+        ``multiquery.BatchResult`` (top-``min(k, cfg.k)`` columns).
+        """
+        from .multiquery import (BatchResult, PlannerCache,  # avoid cycle
+                                 plan_batch)
+        cfg = self.cfg
+        k = cfg.k if k is None else min(k, cfg.k)
+        q = np.ascontiguousarray(queries, dtype=np.float32)
+        if q.ndim == 1:
+            q = q[None, :]
+        b = q.shape[0]
+        if b == 0:
+            return BatchResult(ids=np.zeros((0, k), dtype=np.int64),
+                               dists=np.zeros((0, k), dtype=np.float64),
+                               nprobe=np.zeros(0, dtype=np.int64))
+        snap = self.refresh_snapshot(index)
+        # planner state (centroid norms, calibrated radii) rides the same
+        # fingerprint protocol as the host executor's caches
+        if self._planner_cache is None or \
+                self._planner_cache.index is not index:
+            self._planner_cache = PlannerCache(index)
+        pc = self._planner_cache.ensure_fresh()
+        # cfg.union_cap caps the *plan* (like the host executor), so the
+        # returned stats and effective nprobe reflect what was scanned
+        plan = plan_batch(index, q, k, nprobe=nprobe,
+                          recall_target=recall_target,
+                          union_cap=union_cap if union_cap is not None
+                          else cfg.union_cap,
+                          cent_norms=pc._cent_norms, cache=pc)
+        qp = self.pad_queries(jnp.asarray(q))
+        p_pad = snap.num_partitions
+        # the plan's packed union defines the cap semantics + stats; each
+        # shard re-packs its local slice of it below (different work: the
+        # local union is what the shard's scan grid iterates)
+        sel_cols = plan.sel[:plan.n_real]
+        selected = np.zeros((qp.shape[0], p_pad), dtype=bool)
+        selected[np.ix_(np.arange(b), sel_cols)] = \
+            plan.qmask[:, :plan.n_real]
+        # static per-shard union size: the largest local share of the
+        # batch union, bucketed so recompiles stay rare
+        p_loc = p_pad // self.n_part_shards
+        u_loc = int(np.bincount(sel_cols // p_loc,
+                                minlength=self.n_part_shards).max())
+        u_loc = min(max(-(-max(u_loc, 1) // 8) * 8, 1), p_loc)
+        anchor = np.zeros(p_pad, dtype=bool)
+        anchor[plan.anchor] = True
+        d, ids = self._planned_fn(u_loc)(qp, snap, jnp.asarray(selected),
+                                         jnp.asarray(anchor))
+        d = np.asarray(d, dtype=np.float64)[:b, :k]
+        ids = np.asarray(ids)[:b, :k]
+        d = np.where(d >= MASK_DIST, np.inf, d)
+        ids = np.where(np.isinf(d), -1, ids)
+        sizes = self._host_sizes[sel_cols]   # snapshot-refreshed mirror,
+                                             # not an O(P) host walk
+        return BatchResult(
+            ids=ids.astype(np.int64), dists=d,
+            partitions_scanned=int(plan.n_real),
+            vectors_scanned=int(sizes.sum()),
+            comparisons=int((plan.qmask[:, :plan.n_real].astype(np.int64)
+                             * sizes[None, :]).sum()),
+            nprobe=plan.nprobe)

@@ -75,6 +75,12 @@ class QuakeConfig:
     snapshot_max_dirty_frac: float = 0.5  # delta-refresh only while dirty
                                         # partitions <= frac * P; beyond
                                         # that a full rebuild is cheaper
+    # --- batched executor (multiquery.py) ---
+    union_cap: Optional[int] = None     # max distinct partitions one batch
+                                        # scans (frequency-ranked truncation
+                                        # under read skew; None = unbounded)
+                                        # — the batched-executor mirror of
+                                        # EngineConfig.union_cap
     seed: int = 0
 
 
@@ -399,17 +405,24 @@ class QuakeIndex:
     def search_batch(self, queries: np.ndarray, k: int,
                      nprobe: Optional[int] = None,
                      recall_target: Optional[float] = None,
-                     impl: str = "auto"):
+                     impl: str = "auto",
+                     union_cap: Optional[int] = None,
+                     storage_dtype: Optional[str] = None):
         """Batched multi-query search (paper §7.4) through the
-        device-resident executor: per-query probe sets are planned on the
-        host (APS-driven when ``nprobe`` is None), then every distinct
-        partition in the batch's union is scanned exactly once via the
-        packed ``scan_topk_indexed`` kernel.  Single-query search is the
+        device-resident executor: per-query probe sets are planned by the
+        vectorized batch planner (APS-driven when ``nprobe`` is None),
+        then every distinct partition in the batch's union is scanned
+        exactly once via the packed ``scan_topk_indexed`` kernel.
+        ``union_cap`` bounds the scanned union (frequency-ranked, for
+        read-skewed batches); ``storage_dtype`` ("f32"/"bf16"/"int8")
+        selects the snapshot storage format.  Single-query search is the
         B=1 case of the same path.  Returns ``multiquery.BatchResult``.
         """
         from .multiquery import batch_search  # late: avoid import cycle
         return batch_search(self, queries, k, nprobe=nprobe,
-                            recall_target=recall_target, impl=impl)
+                            recall_target=recall_target, impl=impl,
+                            union_cap=union_cap,
+                            storage_dtype=storage_dtype)
 
     @staticmethod
     def _fixed_scan(cand_geo, scan_fn, k, n_fixed) -> aps_mod.APSResult:

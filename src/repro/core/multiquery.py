@@ -7,39 +7,50 @@ scan every needed partition exactly **once per batch**, amortizing the
 partition read across all queries that probe it.  On TPU this turns B GEMVs
 per partition into one ``(B_p, d) x (d, s)`` GEMM — MXU-shaped work.
 
-Architecture (this module is the host-side control plane; the scan is the
-same packed-scan primitive the sharded engine uses per shard):
+Architecture (see ``docs/batched_execution.md``):
 
-  1. **Plan** (host): per-query probe sets, either a fixed ``nprobe`` (the
-     paper's Fig. 5 policy) or APS-driven per-query counts — the estimator
-     math of ``aps.estimate_probs_np`` run against a radius calibrated on a
-     sample of the batch (APS picks *how many*, the batch executor amortizes
-     *the scanning*).
-  2. **Pack** (host): the batch's probe sets collapse into one partition
-     union + a per-query ``(B, U)`` mask (`kernels.ops.pack_union` is the
-     device-side twin used inside the sharded engine).
+  1. **Plan**: per-query probe sets, either a fixed ``nprobe`` (the paper's
+     Fig. 5 policy) or APS-driven per-query counts.  The APS planner is
+     *vectorized*: one batched centroid-distance + top-``n_consider`` pass
+     over the whole batch (``ops.scan_topk`` on device, or the equivalent
+     host GEMM), the recall estimator run on ``(B, n_consider)`` arrays
+     (``aps.estimate_probs_batch``), and the k-NN radius calibrated with a
+     single batched sample search — no per-query Python loop.  The
+     pre-vectorization loop survives as ``_aps_probe_counts_loop`` (the
+     parity oracle and the bench baseline).
+  2. **Pack**: the batch's probe sets collapse into one partition union +
+     a per-query ``(B, U)`` mask through the device-side
+     ``kernels.ops.pack_union`` primitive (frequency-ranked, so a
+     ``union_cap`` keeps the hottest partitions under read skew — the
+     batched-executor mirror of ``EngineConfig.union_cap``).
   3. **Scan** (device): one call to ``kernels.ops.scan_selected_topk`` —
      the scalar-prefetch ``scan_topk_indexed`` Pallas kernel streams each
      selected partition HBM->VMEM exactly once and folds the running top-k
      in VMEM (interpret mode on CPU CI, Mosaic on TPU; ``impl="jnp"`` is
-     the XLA oracle path).
+     the XLA oracle path).  With ``storage_dtype="bf16"``/``"int8"`` the
+     cached snapshot holds bf16 vectors / int8 IVF residual codes
+     (``quantize_int8_residual``) and the scan streams 2x/4x fewer bytes
+     through ``scan_selected_topk``/``scan_selected_topk_q8``.
 
 Single-query search is the B=1 case of the same executor
 (``per_query_search`` below, and ``QuakeIndex.search_batch`` with one row);
-the mesh-sharded equivalent for very large batches degenerates to
-``ShardedQuakeEngine.search_bruteforce``.
+the mesh-sharded engine shares the same planner through
+``ShardedQuakeEngine.search_batch`` (plan on host, pack+scan per shard).
 
 The executor serves a cached ``IndexSnapshot`` of the dynamic index
 (copy-on-write semantics, paper §8.2), kept coherent through the index's
 mutation journal: dirty-partition deltas patch only the touched rows on
-device; structural changes (split/merge/level, capacity overflow) fall
-back to a full rebuild.  See ``docs/snapshot_lifecycle.md``.
+device; structural changes (split/merge/level, capacity overflow) and int8
+snapshots (rows would need requantizing) fall back to a full rebuild.  See
+``docs/snapshot_lifecycle.md``.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
+import functools
+from dataclasses import dataclass, replace
 from typing import Optional, Tuple
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -47,6 +58,8 @@ from ..kernels import ops
 from ..kernels.ref import MASK_DIST
 from . import aps as aps_mod
 from .index import QuakeIndex
+
+STORAGE_DTYPES = ("f32", "bf16", "int8")
 
 
 @dataclass
@@ -59,50 +72,204 @@ class BatchResult:
     comparisons: int = 0          # query-vector distance evaluations (the
                                   # per-query-loop equivalent of
                                   # vectors_scanned; ratio = amortization)
-    nprobe: Optional[np.ndarray] = None   # (B,) planned probes per query
+    nprobe: Optional[np.ndarray] = None   # (B,) effective probes per query
+                                          # (== planned unless union-capped)
 
 
 @dataclass
 class BatchPlan:
     """Output of the host-side batch planner."""
-    sel: np.ndarray      # (U_pad,) union partition ids (tail entries may
-                         # duplicate sel[0] for tile-count padding)
+    sel: np.ndarray      # (U_pad,) union partition ids, frequency-ranked
+                         # (tail entries duplicate sel[0] for tile-count
+                         # padding and carry all-False masks)
     qmask: np.ndarray    # (B, U_pad) bool — query b probes union slot u
-    nprobe: np.ndarray   # (B,) per-query probe count
-    n_real: int          # distinct real partitions (sel[:n_real] unique)
+    nprobe: np.ndarray   # (B,) effective per-query probe count (probes
+                         # surviving the union cap)
+    n_real: int          # distinct partitions actually scanned
+    planned: Optional[np.ndarray] = None  # (B,) pre-cap planned counts
+    anchor: Optional[np.ndarray] = None   # (B,) each query's nearest
+                                          # partition (cap-proof probes)
 
 
-def _centroid_dists(index: QuakeIndex, q: np.ndarray) -> np.ndarray:
+# ---------------------------------------------------------------------------
+# Centroid passes (shared by the fixed-nprobe and APS planners)
+# ---------------------------------------------------------------------------
+
+def _centroid_dists(index: QuakeIndex, q: np.ndarray,
+                    cent_norms: Optional[np.ndarray] = None) -> np.ndarray:
     """(B, P) level-0 centroid distances in scan-order convention
-    (squared L2, or -score for IP — both rank like the geometry dists)."""
+    (squared L2, or -score for IP — both rank like the geometry dists).
+    ``cent_norms`` is the executor-cached ``||c||^2`` (recomputed only on
+    snapshot refresh, not per call)."""
     cents = index.levels[0].centroids
     if index.config.metric == "l2":
-        return (np.sum(q * q, 1)[:, None] + np.sum(cents * cents, 1)[None, :]
+        if cent_norms is None:
+            cent_norms = np.sum(cents * cents, axis=1)
+        return (np.sum(q * q, 1)[:, None] + cent_norms[None, :]
                 - 2.0 * (q @ cents.T))
     return -(q @ cents.T)
 
 
-def _aps_probe_counts(index: QuakeIndex, q: np.ndarray, k: int,
-                      target: float
-                      ) -> Tuple[np.ndarray, np.ndarray, int]:
-    """APS-driven per-query probe sets: the paper's recall estimator run as
-    a *planner* — the radius rho comes from full APS searches on a small
-    sample of the batch, then every query picks the smallest probe set whose
-    estimated recall clears the target.  Returns (sel (B, n_max), valid
-    (B, n_max), per-query probe counts (B,))."""
-    b = q.shape[0]
-    p = index.levels[0].num_partitions
-    cfg = index.config
-    n_consider = min(max(int(np.ceil(cfg.f_m * p)), cfg.min_candidates), p)
+def _centroid_geo_batch(index: QuakeIndex, q: np.ndarray,
+                        cent_norms: Optional[np.ndarray] = None
+                        ) -> np.ndarray:
+    """(B, P) geometry-space squared centroid distances — the batched
+    mirror of per-query ``index._centroid_geo_dists`` (MIPS-augmented
+    space for IP, so the same cap machinery applies)."""
+    if index.config.metric == "l2":
+        # same expression as the fixed-path keys; one formula to keep
+        # bitwise-consistent with the loop oracle
+        return np.maximum(_centroid_dists(index, q, cent_norms), 0.0)
+    s = q @ index.levels[0].centroids.T
+    return np.maximum(np.sum(q * q, 1)[:, None] + index._max_norm_sq
+                      - 2.0 * s, 0.0)
 
-    # --- calibrate the k-NN radius on a batch sample (full host APS) ---
-    sample = np.linspace(0, b - 1, min(8, b)).astype(int)
+
+# ---------------------------------------------------------------------------
+# Radius calibration
+# ---------------------------------------------------------------------------
+
+def _calib_sample(b: int) -> np.ndarray:
+    return np.unique(np.linspace(0, b - 1, min(8, b)).astype(int))
+
+
+def _calibrate_kth_loop(index: QuakeIndex, q: np.ndarray, k: int,
+                        target: float) -> float:
+    """Legacy calibration: one full host APS search per sample query (the
+    pre-vectorization planner's dominant fixed cost — kept as the bench
+    baseline)."""
     kths = []
-    for s in np.unique(sample):
+    for s in _calib_sample(q.shape[0]):
         r = index.search(q[s], k, recall_target=target, record_stats=False)
         if len(r.dists):
             kths.append(float(r.dists[min(k, len(r.dists)) - 1]))
-    kth_med = float(np.median(kths)) if kths else np.inf
+    return float(np.median(kths)) if kths else np.inf
+
+
+_CALIB_NPROBE = 8   # per-sample probes for radius calibration: the kth
+                    # distance within the 8 nearest partitions; an
+                    # over-estimate of the true kth distance only inflates
+                    # the radius, which makes the planner scan *more* —
+                    # never less — so the approximation is recall-safe
+
+
+def _calibrate_kth_batched(index: QuakeIndex, q: np.ndarray, k: int,
+                           n_consider: int,
+                           cache: Optional[PlannerCache] = None) -> float:
+    """Amortized calibration: ONE batched sample search — every sample row
+    is scanned against the union of the samples' top-``_CALIB_NPROBE``
+    candidate partitions in a single GEMM over the index's resident
+    buffers (no per-sample search loop).  Scanning a neighbour sample's
+    partitions only tightens the estimate."""
+    qs = q[_calib_sample(q.shape[0])]
+    p = index.levels[0].num_partitions
+    # cached norms are only valid while the cache's fingerprint is
+    # current (maintenance refinement moves centroids without changing P)
+    norms = None
+    if cache is not None and cache._key == cache._fingerprint():
+        norms = cache._cent_norms
+    cd = _centroid_dists(index, qs, norms)
+    n_cal = min(n_consider, _CALIB_NPROBE, p)
+    if n_cal < p:
+        probes = np.argpartition(cd, n_cal - 1, axis=1)[:, :n_cal]
+        union = np.unique(probes)
+    else:
+        union = np.arange(p)
+    lvl0 = index.levels[0]
+    xs = [lvl0.vectors[j] for j in union]
+    v = int(sum(len(x) for x in xs))
+    if v == 0:
+        return np.inf
+    x = np.concatenate(xs)                                # (V, d)
+    if index.config.metric == "l2":
+        x2 = np.concatenate([lvl0.sqnorms[j] for j in union])
+        d = (x2[None, :] - 2.0 * (qs @ x.T)
+             + np.sum(qs * qs, 1)[:, None])
+    else:
+        d = -(qs @ x.T)
+    kk = min(k, v)
+    kth = np.partition(d, kk - 1, axis=1)[:, kk - 1]
+    return float(np.median(kth.astype(np.float64)))
+
+
+class PlannerCache:
+    """Snapshot-fingerprinted planner state: cached centroid norms +
+    calibrated APS radii, invalidated by the journal fingerprint.  The
+    one implementation behind both serving paths — the
+    ``BatchedSearchExecutor`` composes one, and the sharded engine's
+    ``search_batch`` keeps its own — so the invalidation key can never
+    diverge between them.
+
+    Cached radii additionally expire after ``radius_ttl`` reuses: on a
+    static index the fingerprint never moves, and a radius calibrated
+    from one batch's sample can go stale if the *query* distribution
+    drifts — the TTL bounds that staleness at ~1 recalibration per
+    ``radius_ttl`` batches (amortized cost stays negligible)."""
+
+    RADIUS_TTL = 64
+
+    def __init__(self, index: QuakeIndex, radius_ttl: int = RADIUS_TTL):
+        self.index = index
+        self.radius_ttl = radius_ttl
+        self._key = None
+        self._cent_norms = None
+        self._kth_cache = {}     # (key, k, target) -> [kth_med, uses]
+
+    def _fingerprint(self):
+        return (self.index.version, self.index.num_partitions,
+                self.index.num_vectors)
+
+    def ensure_fresh(self):
+        fp = self._fingerprint()
+        if self._key != fp:
+            cents = self.index.levels[0].centroids
+            self._cent_norms = np.sum(cents * cents, axis=1)
+            self._kth_cache = {}
+            self._key = fp
+        return self
+
+    def get_radius(self, k: int, target: float) -> Optional[float]:
+        if self._key != self._fingerprint():
+            return None
+        entry = self._kth_cache.get((self._key, k, float(target)))
+        if entry is None or entry[1] >= self.radius_ttl:
+            return None
+        entry[1] += 1
+        return entry[0]
+
+    def put_radius(self, k: int, target: float, kth_med: float) -> None:
+        if self._key == self._fingerprint():
+            self._kth_cache[(self._key, k, float(target))] = [kth_med, 0]
+
+
+# ---------------------------------------------------------------------------
+# APS probe planning: per-query loop (parity oracle) and vectorized
+# ---------------------------------------------------------------------------
+
+def _aps_candidate_budget(index: QuakeIndex) -> int:
+    cfg = index.config
+    p = index.levels[0].num_partitions
+    return min(max(int(np.ceil(cfg.f_m * p)), cfg.min_candidates), p)
+
+
+def _aps_probe_counts_loop(index: QuakeIndex, q: np.ndarray, k: int,
+                           target: float,
+                           kth_med: Optional[float] = None,
+                           geo: Optional[np.ndarray] = None,
+                           ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """The pre-vectorization planner: per-query Python loop (per-query
+    centroid distances over all P, per-query argsort, scalar
+    ``estimate_probs_np``, per-query cc distances) — the parity oracle
+    for ``_aps_probe_counts_batched`` and the wall-time baseline in
+    ``bench_multiquery --cell planner``.  Pass a shared ``geo`` matrix
+    (``_centroid_geo_batch``) to pin parity bitwise — per-query GEMV and
+    batched GEMM round differently.  Returns (sel (B, n_max),
+    valid (B, n_max), per-query probe counts (B,))."""
+    b = q.shape[0]
+    p = index.levels[0].num_partitions
+    n_consider = _aps_candidate_budget(index)
+    if kth_med is None:
+        kth_med = _calibrate_kth_loop(index, q, k, target)
 
     sel = np.zeros((b, n_consider), dtype=np.int64)
     valid = np.zeros((b, n_consider), dtype=bool)
@@ -110,8 +277,9 @@ def _aps_probe_counts(index: QuakeIndex, q: np.ndarray, k: int,
     table = index._beta_table
     for i in range(b):
         qi = q[i]
-        geo, _ = index._centroid_geo_dists(qi, 0, np.arange(p))
-        order = np.argsort(geo, kind="stable")[:n_consider]
+        geo_i = geo[i] if geo is not None else \
+            index._centroid_geo_dists(qi, 0, np.arange(p))[0]
+        order = np.argsort(geo_i, kind="stable")[:n_consider]
         rho_fn = index._rho_sq_from_item_dist(
             float(np.sum(qi.astype(np.float64) ** 2)))
         rho_sq = rho_fn(kth_med) if np.isfinite(kth_med) else np.inf
@@ -123,7 +291,7 @@ def _aps_probe_counts(index: QuakeIndex, q: np.ndarray, k: int,
             vmask = np.ones(len(order), dtype=bool)
             vmask[0] = False
             p0, probs = aps_mod.estimate_probs_np(
-                float(geo[order[0]]), geo[order].astype(np.float64),
+                float(geo_i[order[0]]), geo_i[order].astype(np.float64),
                 cc, rho_sq, table, vmask)
             if p0 >= target:
                 m, probes = 1, order[:1]
@@ -142,14 +310,151 @@ def _aps_probe_counts(index: QuakeIndex, q: np.ndarray, k: int,
     return sel[:, :n_max], valid[:, :n_max], counts
 
 
+def _aps_probe_counts_batched(index: QuakeIndex, q: np.ndarray, k: int,
+                              target: float,
+                              kth_med: Optional[float] = None,
+                              geo: Optional[np.ndarray] = None,
+                              cent_norms: Optional[np.ndarray] = None,
+                              cache: Optional[PlannerCache] = None,
+                              pass_impl: str = "numpy",
+                              ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Vectorized APS planner: the whole batch planned with array ops.
+
+    The centroid pass is either the host batched GEMM (``pass_impl=
+    "numpy"`` — bitwise-parity path with the loop oracle) or one jitted
+    ``ops.scan_topk`` call (``"scan_topk"`` — the device pass; same probe
+    sets up to matmul rounding).  The estimator is
+    ``aps.estimate_probs_batch`` on ``(B, n_consider)`` arrays; the k-NN
+    radius comes from one batched sample search instead of up-to-8 host
+    APS searches.  Same return contract as ``_aps_probe_counts_loop``.
+    """
+    b = q.shape[0]
+    cfg = index.config
+    m = _aps_candidate_budget(index)
+    if kth_med is None:
+        # steady-state serving amortizes calibration across batches: the
+        # planner cache keys the radius on its snapshot fingerprint (with
+        # a reuse TTL against query-distribution drift), re-checking the
+        # fingerprint at lookup so a direct call against a
+        # mutated-but-unrefreshed index never reuses a stale radius
+        if cache is not None:
+            kth_med = cache.get_radius(k, target)
+        if kth_med is None:
+            kth_med = _calibrate_kth_batched(index, q, k, m, cache=cache)
+            if cache is not None:
+                cache.put_radius(k, target, kth_med)
+
+    cents = index.levels[0].centroids
+    if pass_impl == "scan_topk":
+        # one jitted centroid-distance + top-n_consider pass on device
+        cd, order = ops.scan_topk(jnp.asarray(q), jnp.asarray(cents), m,
+                                  metric=cfg.metric, impl="auto")
+        cd = np.asarray(cd, dtype=np.float64)
+        order = np.asarray(order, dtype=np.int64)
+        if cfg.metric == "l2":
+            geo_sel = np.maximum(cd, 0.0)
+        else:   # minimization keys are -score; lift into MIPS geometry
+            q2 = np.sum(q.astype(np.float64) ** 2, axis=1)
+            geo_sel = np.maximum(
+                q2[:, None] + index._max_norm_sq + 2.0 * cd, 0.0)
+    else:
+        if geo is None:
+            geo = _centroid_geo_batch(index, q, cent_norms)
+        order = np.argsort(geo, axis=1, kind="stable")[:, :m]
+        geo_sel = np.take_along_axis(geo, order, axis=1).astype(np.float64)
+
+    # per-query radius in geometry space (same rho map as the loop)
+    q_norm = np.sum(q.astype(np.float64) ** 2, axis=1)
+    if np.isfinite(kth_med):
+        if cfg.metric == "l2":
+            rho_sq = np.full(b, max(float(kth_med), 0.0))
+        else:
+            rho_sq = np.maximum(
+                q_norm + index._max_norm_sq + 2.0 * float(kth_med), 0.0)
+    else:
+        rho_sq = np.full(b, np.inf)
+    fallback = ~np.isfinite(rho_sq) | (rho_sq <= 0) | (m == 1)
+
+    if m > 1:
+        # batched cc distances: ||c_i - c0|| per query in geometry space
+        cg = cents[order].astype(np.float64)              # (B, M, d)
+        d2 = np.sum((cg - cg[:, :1, :]) ** 2, axis=2)
+        if cfg.metric == "ip":
+            e = index._augment_extra(0)[order]            # (B, M)
+            d2 = d2 + (e - e[:, :1]) ** 2
+        cc = np.sqrt(np.maximum(d2, 0.0))
+
+        valid = np.ones((b, m), dtype=bool)
+        valid[:, 0] = False
+        p0, probs = aps_mod.estimate_probs_batch(
+            geo_sel[:, 0], geo_sel, cc, rho_sq, index._beta_table, valid)
+
+        # probability-descending scan order (nearest always first); forcing
+        # the nearest's key to +inf reproduces the loop's stable
+        # argsort-then-drop exactly
+        neg = -probs
+        neg[:, 0] = np.inf
+        desc = np.argsort(neg, axis=1, kind="stable")[:, :m - 1]
+        r_cum = p0[:, None] + np.cumsum(
+            np.take_along_axis(probs, desc, axis=1), axis=1)
+        reached = r_cum >= target
+        extra = np.where(reached.any(axis=1),
+                         np.argmax(reached, axis=1) + 1, m - 1)
+        counts = np.where(p0 >= target, 1, np.minimum(1 + extra, m))
+        seq = np.concatenate(
+            [order[:, :1], np.take_along_axis(order, desc, axis=1)], axis=1)
+    else:
+        counts = np.ones(b, dtype=np.int64)
+        seq = order
+    counts = np.where(fallback, m, counts).astype(np.int64)
+    seq = np.where(fallback[:, None], order, seq)
+
+    n_max = int(counts.max())
+    vmask = np.arange(n_max)[None, :] < counts[:, None]
+    sel = np.where(vmask, seq[:, :n_max], 0).astype(np.int64)
+    return sel, vmask, counts
+
+
+# ---------------------------------------------------------------------------
+# Pack: probe sets -> partition union + per-query mask (device primitive)
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("p", "n_union"))
+def _pack_plan(sel_q, qvalid, nearest, *, p: int, n_union: int):
+    """Scatter per-query probe sets into a (B, P) selection matrix and pack
+    it through the device-side ``pack_union`` primitive.  ``nearest`` (B,)
+    anchors each query's nearest partition above the frequency ranking so
+    a union cap never drops a query's best probe."""
+    b = sel_q.shape[0]
+    rows = jnp.broadcast_to(jnp.arange(b)[:, None], sel_q.shape)
+    selected = jnp.zeros((b, p), jnp.bool_).at[rows, sel_q].max(qvalid)
+    anchor = jnp.zeros((p,), jnp.bool_).at[nearest].set(True)
+    return ops.pack_union(selected, n_union,
+                          priority=anchor.astype(jnp.int32) * (b + 1))
+
+
 def plan_batch(index: QuakeIndex, q: np.ndarray, k: int,
                nprobe: Optional[int] = None,
                recall_target: Optional[float] = None,
-               u_bucket: int = 8) -> BatchPlan:
+               u_bucket: int = 8,
+               union_cap: Optional[int] = None,
+               planner: str = "vectorized",
+               cent_norms: Optional[np.ndarray] = None,
+               cache: Optional[PlannerCache] = None) -> BatchPlan:
     """Plan one batched scan: per-query probe sets -> partition union +
-    per-query mask.  ``u_bucket`` rounds the union size up so the jitted
+    per-query mask.
+
+    ``planner`` selects the APS probe planner: ``"vectorized"`` (default;
+    the batched implementation) or ``"loop"`` (the per-query baseline).
+    ``union_cap`` bounds the number of distinct partitions the batch scans:
+    the union is frequency-ranked (``pack_union`` keeps the partitions most
+    queries probe), so under read skew a cap well below B*nprobe drops only
+    rarely-probed tail partitions — ``BatchPlan.nprobe`` reports the
+    *effective* per-query probes after capping (``planned`` keeps the
+    pre-cap counts).  ``u_bucket`` rounds the union size up so the jitted
     scan sees few distinct shapes (pad slots duplicate a real partition and
-    carry an all-False mask — they add work, never wrong results)."""
+    carry an all-False mask — they add work, never wrong results).
+    """
     b = q.shape[0]
     p = index.levels[0].num_partitions
 
@@ -157,10 +462,11 @@ def plan_batch(index: QuakeIndex, q: np.ndarray, k: int,
         # empty batch: one inert pad slot, no query rows
         return BatchPlan(sel=np.zeros(1, dtype=np.int64),
                          qmask=np.zeros((0, 1), dtype=bool),
-                         nprobe=np.zeros(0, dtype=np.int64), n_real=0)
+                         nprobe=np.zeros(0, dtype=np.int64), n_real=0,
+                         planned=np.zeros(0, dtype=np.int64))
 
     if nprobe is not None:
-        cd = _centroid_dists(index, q)
+        cd = _centroid_dists(index, q, cent_norms)
         n = int(max(1, min(nprobe, p)))
         if n < p:
             sel_q = np.argpartition(cd, n - 1, axis=1)[:, :n]
@@ -168,21 +474,62 @@ def plan_batch(index: QuakeIndex, q: np.ndarray, k: int,
             sel_q = np.broadcast_to(np.arange(p), (b, p)).copy()
         qvalid = np.ones((b, n), dtype=bool)
         counts = np.full(b, n, dtype=np.int64)
+        nearest = np.argmin(cd, axis=1)
     else:
         target = recall_target if recall_target is not None \
             else index.config.recall_target
-        sel_q, qvalid, counts = _aps_probe_counts(index, q, k, target)
+        if planner == "loop":
+            sel_q, qvalid, counts = _aps_probe_counts_loop(
+                index, q, k, target)
+        else:
+            sel_q, qvalid, counts = _aps_probe_counts_batched(
+                index, q, k, target, cent_norms=cent_norms, cache=cache)
+        nearest = sel_q[:, 0]   # APS probe sequences lead with the nearest
 
-    union = np.unique(sel_q[qvalid])
-    u = len(union)
-    u_pad = max(-(-u // u_bucket) * u_bucket, 1)
-    sel = np.concatenate([union, np.full(u_pad - u, union[0],
-                                         dtype=union.dtype)])
-    qmask = np.zeros((b, u_pad), dtype=bool)
-    pos = np.searchsorted(union, sel_q)          # only valid where qvalid
-    rows = np.broadcast_to(np.arange(b)[:, None], sel_q.shape)
-    qmask[rows[qvalid], pos[qvalid]] = True
-    return BatchPlan(sel=sel, qmask=qmask, nprobe=counts, n_real=u)
+    # ---- union + (B, U) mask via the device-side pack primitive ----
+    hit = np.zeros(p, dtype=bool)
+    hit[sel_q[qvalid]] = True
+    n_hits = int(hit.sum())
+    if union_cap:
+        # floor the cap at the distinct-anchor count: the anchor priority
+        # ranks every query's nearest partition first, so with this floor
+        # no query ever loses its whole probe set to the cap (a cap below
+        # the anchor count would otherwise return silent all-miss rows)
+        n_anchor = int(len(np.unique(nearest)))
+        n_real = min(n_hits, max(union_cap, n_anchor))
+    else:
+        n_real = n_hits
+    n_real = max(n_real, 1)
+    u_pad = max(-(-n_real // u_bucket) * u_bucket, 1)
+    n_dev = min(u_pad, p)
+    # bucket the probe-set width too: APS counts.max() varies per batch,
+    # and an unbucketed width would retrace the jitted pack per batch
+    # (pad columns carry qvalid=False — inert under the scatter)
+    n_cols = sel_q.shape[1]
+    c_pad = max(-(-n_cols // u_bucket) * u_bucket, 1)
+    if c_pad > n_cols:
+        sel_q = np.concatenate(
+            [sel_q, np.zeros((b, c_pad - n_cols), dtype=sel_q.dtype)], 1)
+        qvalid = np.concatenate(
+            [qvalid, np.zeros((b, c_pad - n_cols), dtype=bool)], 1)
+    sel_d, qmask_d = _pack_plan(jnp.asarray(sel_q), jnp.asarray(qvalid),
+                                jnp.asarray(nearest), p=p, n_union=n_dev)
+    sel = np.array(sel_d, dtype=np.int64)      # host copies (writable)
+    qmask = np.array(qmask_d)
+    # tail slots (bucket padding, or probes truncated by the cap) are
+    # inert: duplicate a real partition under an all-False mask
+    if n_real < len(sel):
+        sel[n_real:] = sel[0]
+        qmask[:, n_real:] = False
+    if u_pad > n_dev:
+        sel = np.concatenate(
+            [sel, np.full(u_pad - n_dev, sel[0], dtype=sel.dtype)])
+        qmask = np.concatenate(
+            [qmask, np.zeros((b, u_pad - n_dev), dtype=bool)], axis=1)
+    eff = qmask[:, :n_real].sum(axis=1).astype(np.int64)
+    return BatchPlan(sel=sel, qmask=qmask, nprobe=eff, n_real=n_real,
+                     planned=counts, anchor=np.asarray(nearest,
+                                                       dtype=np.int64))
 
 
 class BatchedSearchExecutor:
@@ -198,15 +545,37 @@ class BatchedSearchExecutor:
     Full rebuilds allocate ``config.snapshot_headroom`` slack capacity so
     insert deltas rarely force a reshape.  Searches then run one packed
     union scan per batch.
+
+    ``storage_dtype`` sets the scan storage format (paper §8.2 vector
+    compression): ``"f32"`` (exact), ``"bf16"`` (2x less scan traffic,
+    delta-refresh capable — patches cast on device), or ``"int8"`` (IVF
+    residual SQ8 through ``scan_selected_topk_q8``, 4x less traffic;
+    content deltas would need requantization, so any journal delta forces
+    a full rebuild — the same policy as the sharded engine).
     """
 
     def __init__(self, index: QuakeIndex, impl: str = "auto",
                  u_bucket: int = 8, headroom: Optional[float] = None,
-                 max_dirty_frac: Optional[float] = None):
+                 max_dirty_frac: Optional[float] = None,
+                 storage_dtype: str = "f32",
+                 union_cap: Optional[int] = None,
+                 planner: str = "vectorized",
+                 int8_rerank: bool = True):
+        if storage_dtype not in STORAGE_DTYPES:
+            raise ValueError(f"storage_dtype must be one of "
+                             f"{STORAGE_DTYPES}, got {storage_dtype!r}")
         self.index = index
         self.impl = impl
         self.u_bucket = u_bucket
+        self.storage_dtype = storage_dtype
+        self.planner = planner
+        self.int8_rerank = int8_rerank   # exact re-rank of the int8 scan's
+                                         # top-2k from a host f32 mirror
+                                         # (B*2k row gather — negligible
+                                         # next to the scan)
+        self._host_f32 = None            # (P*S_cap, d) mirror, int8 only
         cfg = index.config
+        self.union_cap = cfg.union_cap if union_cap is None else union_cap
         self.headroom = cfg.snapshot_headroom if headroom is None \
             else headroom
         self.max_dirty_frac = cfg.snapshot_max_dirty_frac \
@@ -216,6 +585,9 @@ class BatchedSearchExecutor:
         self._valid = None       # (P, S_cap) bool, device
         self._flat_ids = None    # (P*S_cap,) host
         self._sizes = None       # (P,) host
+        self.planner_cache = PlannerCache(index)  # centroid norms +
+                                 # calibrated radii, fingerprint-keyed
+                                 # (refreshed with the snapshot)
         self.full_rebuilds = 0   # refresh telemetry (tests / bench)
         self.delta_refreshes = 0
 
@@ -223,14 +595,31 @@ class BatchedSearchExecutor:
         return (self.index.version, self.index.num_partitions,
                 self.index.num_vectors)
 
+    @property
+    def _cent_norms(self):
+        return self.planner_cache._cent_norms
+
+    def _refresh_host_mirrors(self):
+        self.planner_cache.ensure_fresh()
+
     def refresh(self):
         """Full rebuild of the device snapshot from the dynamic index."""
         from .distributed import IndexSnapshot  # late: avoid import cycle
-        self._snap = IndexSnapshot.from_index(self.index,
-                                              headroom=self.headroom)
-        self._valid = self._snap.ids >= 0
-        self._flat_ids = np.array(self._snap.ids).reshape(-1)
-        self._sizes = np.array(self._snap.sizes)
+        snap = IndexSnapshot.from_index(self.index, headroom=self.headroom)
+        self._valid = snap.ids >= 0
+        self._flat_ids = np.array(snap.ids).reshape(-1)
+        self._sizes = np.array(snap.sizes)
+        if self.storage_dtype == "bf16":
+            snap = replace(snap, data=snap.data.astype(jnp.bfloat16))
+        elif self.storage_dtype == "int8":
+            from ..kernels.scan_topk_indexed import quantize_int8_residual
+            if self.int8_rerank:
+                self._host_f32 = np.array(snap.data).reshape(
+                    -1, snap.data.shape[-1])
+            codes, scales = quantize_int8_residual(snap.data, snap.centroids)
+            snap = replace(snap, data=codes, scales=scales)
+        self._snap = snap
+        self._refresh_host_mirrors()
         self._key = self._fingerprint()
         self.full_rebuilds += 1
         return self._snap
@@ -238,9 +627,12 @@ class BatchedSearchExecutor:
     def _refresh_delta(self, delta) -> bool:
         """Patch the dirty partition rows in place of a rebuild.  Returns
         False when the delta is not applicable (structural change, capacity
-        overflow, dirty set too large) — caller falls back to ``refresh``.
+        overflow, dirty set too large, or int8 storage — residual codes
+        would need requantizing) — caller falls back to ``refresh``.
         """
         from .distributed import IndexSnapshot  # late: avoid import cycle
+        if self._snap.scales is not None:
+            return False          # int8: requantize via full rebuild
         idx = self.index
         lvl0 = idx.levels[0]
         p_real = lvl0.num_partitions
@@ -272,9 +664,30 @@ class BatchedSearchExecutor:
         self._flat_ids.reshape(self._snap.num_partitions, cap)[sel] = \
             patch.ids
         self._sizes[sel] = patch.sizes
+        self._refresh_host_mirrors()   # refine deltas can move centroids
         self._key = self._fingerprint()
         self.delta_refreshes += 1
         return True
+
+    def _rerank_exact(self, q: np.ndarray, flat: np.ndarray, k: int
+                      ) -> Tuple[np.ndarray, np.ndarray]:
+        """Exact f32 re-rank of the int8 scan's candidate list: one gather
+        of the (B, 2k) candidate rows from the host mirror + exact
+        distances, then top-k.  Recovers the quantization-induced rank
+        flips near the k-th boundary at negligible extra traffic."""
+        b, k2 = flat.shape
+        d = self._host_f32.shape[1]
+        x = self._host_f32[np.maximum(flat, 0).reshape(-1)]
+        x = x.reshape(b, k2, d)
+        if self.index.config.metric == "l2":
+            diff = x - q[:, None, :]
+            de = np.einsum("bkd,bkd->bk", diff, diff, dtype=np.float64)
+        else:
+            de = -np.einsum("bkd,bd->bk", x, q, dtype=np.float64)
+        de = np.where(flat >= 0, de, np.inf)
+        order = np.argsort(de, axis=1, kind="stable")[:, :k]
+        return (np.take_along_axis(de, order, axis=1),
+                np.take_along_axis(flat, order, axis=1))
 
     def snapshot(self):
         if self._snap is None:
@@ -290,7 +703,8 @@ class BatchedSearchExecutor:
     def search(self, queries: np.ndarray, k: int,
                nprobe: Optional[int] = None,
                recall_target: Optional[float] = None,
-               impl: Optional[str] = None) -> BatchResult:
+               impl: Optional[str] = None,
+               union_cap: Optional[int] = None) -> BatchResult:
         q = np.ascontiguousarray(queries, dtype=np.float32)
         if q.ndim == 1:
             q = q[None, :]
@@ -301,12 +715,28 @@ class BatchedSearchExecutor:
         snap = self.snapshot()
         plan = plan_batch(self.index, q, k, nprobe=nprobe,
                           recall_target=recall_target,
-                          u_bucket=self.u_bucket)
-        dd, flat = ops.scan_selected_topk(
-            jnp.asarray(q), snap.data, self._valid,
-            jnp.asarray(plan.sel.astype(np.int32)),
-            jnp.asarray(plan.qmask), k,
-            metric=self.index.config.metric, impl=impl or self.impl)
+                          u_bucket=self.u_bucket,
+                          union_cap=self.union_cap if union_cap is None
+                          else union_cap,
+                          planner=self.planner,
+                          cent_norms=self._cent_norms,
+                          cache=self.planner_cache)
+        sel_dev = jnp.asarray(plan.sel.astype(np.int32))
+        qmask_dev = jnp.asarray(plan.qmask)
+        if snap.scales is not None:     # int8 residual codes
+            rerank = self.int8_rerank and self._host_f32 is not None
+            k_scan = 2 * k if rerank else k
+            dd, flat = ops.scan_selected_topk_q8(
+                jnp.asarray(q), snap.data, snap.scales, self._valid,
+                sel_dev, qmask_dev, k_scan,
+                metric=self.index.config.metric, centroids=snap.centroids)
+            if rerank:
+                dd, flat = self._rerank_exact(q, np.asarray(flat), k)
+        else:
+            dd, flat = ops.scan_selected_topk(
+                jnp.asarray(q), snap.data, self._valid,
+                sel_dev, qmask_dev, k,
+                metric=self.index.config.metric, impl=impl or self.impl)
         dd = np.asarray(dd, dtype=np.float64)
         flat = np.asarray(flat)
         ids = np.where(flat >= 0,
@@ -323,37 +753,53 @@ class BatchedSearchExecutor:
             nprobe=plan.nprobe)
 
 
-def get_executor(index: QuakeIndex) -> BatchedSearchExecutor:
-    """The index's cached executor (snapshot reuse across calls)."""
-    ex = getattr(index, "_batch_executor", None)
+def get_executor(index: QuakeIndex,
+                 storage_dtype: Optional[str] = None
+                 ) -> BatchedSearchExecutor:
+    """The index's cached executor for ``storage_dtype`` (snapshot reuse
+    across calls; one executor — and one device snapshot — per storage
+    format).  ``None`` means the default f32 executor."""
+    key = storage_dtype or "f32"
+    cache = getattr(index, "_batch_executors", None)
+    if cache is None:
+        cache = index._batch_executors = {}
+    ex = cache.get(key)
     if ex is None or ex.index is not index:
-        ex = BatchedSearchExecutor(index)
-        index._batch_executor = ex
+        # identity guard: a transplanted __dict__ (copy/pickle) carries
+        # the cache but its executors still point at the source index
+        ex = BatchedSearchExecutor(index, storage_dtype=key)
+        cache[key] = ex
     return ex
 
 
 def batch_search(index: QuakeIndex, queries: np.ndarray, k: int,
                  nprobe: Optional[int] = None,
                  recall_target: Optional[float] = None,
-                 impl: str = "auto") -> BatchResult:
+                 impl: str = "auto",
+                 union_cap: Optional[int] = None,
+                 storage_dtype: Optional[str] = None) -> BatchResult:
     """Scan-each-partition-once batched search over the dynamic index.
 
     Partition selection per query uses centroid order with a fixed
     ``nprobe`` (the policy in the paper's Fig. 5 experiment), or, when
     ``nprobe`` is None, APS-driven per-query probe counts (see
     ``plan_batch``).  The scan itself is one device-resident packed union
-    scan per batch.
+    scan per batch; ``storage_dtype`` picks the f32/bf16/int8 snapshot
+    format and ``union_cap`` bounds the scanned union under read skew.
     """
-    return get_executor(index).search(queries, k, nprobe=nprobe,
-                                      recall_target=recall_target, impl=impl)
+    return get_executor(index, storage_dtype).search(
+        queries, k, nprobe=nprobe, recall_target=recall_target, impl=impl,
+        union_cap=union_cap)
 
 
 def per_query_search(index: QuakeIndex, queries: np.ndarray, k: int,
                      nprobe: Optional[int] = None,
+                     recall_target: Optional[float] = None,
                      impl: str = "auto") -> BatchResult:
     """Baseline: one-at-a-time search — the B=1 case of the same executor,
     so partitions are re-scanned per query (Faiss-IVF behaviour) but the
-    code path and kernels are identical to the batched policy."""
+    code path and kernels are identical to the batched policy, including
+    the APS planner when ``recall_target`` drives probe counts."""
     q = np.ascontiguousarray(queries, dtype=np.float32)
     if q.shape[0] == 0:
         return BatchResult(ids=np.zeros((0, k), dtype=np.int64),
@@ -363,7 +809,8 @@ def per_query_search(index: QuakeIndex, queries: np.ndarray, k: int,
     ids, dists, parts, vecs, comps = [], [], 0, 0, 0
     nps = []
     for row in q:
-        r = ex.search(row[None, :], k, nprobe=nprobe, impl=impl)
+        r = ex.search(row[None, :], k, nprobe=nprobe,
+                      recall_target=recall_target, impl=impl)
         ids.append(r.ids[0])
         dists.append(r.dists[0])
         parts += r.partitions_scanned

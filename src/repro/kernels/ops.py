@@ -106,23 +106,41 @@ def _scan_topk_pallas_padded(queries, xs, k, metric, valid, block_q, block_s):
     return dd, ii
 
 
-def pack_union(selected: Array, n_union: int) -> Tuple[Array, Array]:
+def pack_union(selected: Array, n_union: int,
+               priority: Optional[Array] = None) -> Tuple[Array, Array]:
     """Pack per-query partition selections into one static union scan plan.
 
     ``selected`` (B, P) bool — query b wants partition p.  Returns
     (sel (n_union,) int32 partition ids, qmask (B, n_union) bool) for
     ``scan_selected_topk``: the union covers every partition any query
-    selected (truncated to ``n_union`` — under read skew hot partitions
-    dedupe across the batch, so a cap below B*nprobe loses little), and
-    ``qmask`` restores per-query probe semantics inside the shared scan.
+    selected, and ``qmask`` restores per-query probe semantics inside the
+    shared scan.
+
+    The union is **frequency-ranked**: partitions are taken in descending
+    order of how many queries probe them, so when ``n_union`` truncates
+    the union (a ``union_cap`` under read skew — hot partitions dedupe
+    across the batch) the scan keeps the partitions that serve the most
+    queries and drops only the rarely-probed tail.  Uncapped, the ranking
+    is irrelevant (every probed partition gets a slot; surplus slots take
+    unprobed partitions under an all-False mask — inert).
+
+    ``priority`` (P,) int32 is added to the per-partition probe counts
+    before ranking.  Callers use it as the *anchor guarantee*: boosting
+    every partition that is some query's nearest probe by more than B
+    ranks all anchors above all non-anchors, so a cap sheds only
+    non-nearest "insurance" probes and no query loses its best partition
+    (until the cap is smaller than the number of distinct anchors, at
+    which point anchors rank among themselves by frequency).
 
     This is the packed-scan planning primitive shared by the sharded
     engine (per shard) and the host-side batched executor
     (``core.multiquery``): one partition read serves every query in the
     batch that probes it.
     """
-    hits = selected.any(axis=0)
-    _, sel = jax.lax.top_k(hits.astype(jnp.float32), n_union)
+    counts = jnp.sum(selected, axis=0, dtype=jnp.int32)
+    if priority is not None:
+        counts = counts + priority
+    _, sel = jax.lax.top_k(counts, n_union)
     sel = sel.astype(jnp.int32)
     qmask = jnp.take(selected, sel, axis=1)
     return sel, qmask

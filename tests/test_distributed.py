@@ -79,6 +79,67 @@ def test_engine_matches_dynamic_index(snap_and_data):
         assert overlap >= 0.9, (r, overlap)
 
 
+def test_engine_search_batch_shares_planner(snap_and_data):
+    """The sharded multi-query entry runs through core.multiquery's
+    plan_batch: identical results to the host batched executor on a fixed
+    plan, and APS-driven per-query probe counts."""
+    snap, ds = snap_and_data
+    idx = QuakeIndex.build(ds.vectors, num_partitions=32, kmeans_iters=4)
+    eng = ShardedQuakeEngine(_mesh111(), EngineConfig(
+        k=10, part_axes=("pod", "data")))
+    q = datasets.queries_near(ds, 12, seed=4)
+    from repro.core.multiquery import batch_search
+    r_host = batch_search(idx, q, 10, nprobe=6)
+    r_eng = eng.search_batch(idx, q, 10, nprobe=6)
+    assert (np.sort(r_host.ids, 1) == np.sort(r_eng.ids, 1)).all()
+    assert r_eng.partitions_scanned == r_host.partitions_scanned
+    # APS mode: adaptive per-query probe counts through the same planner
+    r_aps = eng.search_batch(idx, q, 10, recall_target=0.9)
+    assert len(np.unique(r_aps.nprobe)) > 1
+    gt = ds.ground_truth(q, 10)
+    rec = np.mean([len(set(r_aps.ids[i].tolist()) & set(gt[i].tolist()))
+                   / 10 for i in range(12)])
+    assert rec >= 0.8, rec
+
+
+def test_engine_search_batch_union_cap_stats_consistent(snap_and_data):
+    """EngineConfig.union_cap caps the plan itself, so the reported stats
+    (partitions_scanned, effective nprobe) reflect what was scanned."""
+    snap, ds = snap_and_data
+    idx = QuakeIndex.build(ds.vectors, num_partitions=32, kmeans_iters=4)
+    eng_full = ShardedQuakeEngine(_mesh111(), EngineConfig(
+        k=10, part_axes=("pod", "data")))
+    r_full = eng_full.search_batch(idx, datasets.queries_near(ds, 16,
+                                                              seed=6),
+                                   10, nprobe=8)
+    cap = max(r_full.partitions_scanned // 2, 1)
+    eng = ShardedQuakeEngine(_mesh111(), EngineConfig(
+        k=10, part_axes=("pod", "data"), union_cap=cap))
+    q = datasets.queries_near(ds, 16, seed=6)
+    r = eng.search_batch(idx, q, 10, nprobe=8)
+    from repro.core.multiquery import plan_batch
+    plan = plan_batch(idx, np.asarray(q, np.float32), 10, nprobe=8,
+                      union_cap=cap)
+    assert r.partitions_scanned == plan.n_real
+    assert r.partitions_scanned <= max(cap, len(np.unique(plan.anchor)))
+    assert (r.nprobe == plan.nprobe).all()
+    assert (r.nprobe >= 1).all() and (r.ids[:, 0] >= 0).all()
+
+
+@pytest.mark.parametrize("dtype", ["bf16", "int8"])
+def test_engine_search_batch_storage_dtypes(snap_and_data, dtype):
+    snap, ds = snap_and_data
+    idx = QuakeIndex.build(ds.vectors, num_partitions=32, kmeans_iters=4)
+    eng = ShardedQuakeEngine(_mesh111(), EngineConfig(
+        k=10, part_axes=("pod", "data"), storage_dtype=dtype))
+    q = datasets.queries_near(ds, 8, seed=5)
+    gt = ds.ground_truth(q, 10)
+    r = eng.search_batch(idx, q, 10, nprobe=8)
+    rec = np.mean([len(set(r.ids[i].tolist()) & set(gt[i].tolist())) / 10
+                   for i in range(8)])
+    assert rec >= 0.8, rec
+
+
 def test_engine_journal_refresh_patches_sharded_snapshot(snap_and_data):
     """The engine's cached snapshot consumes the mutation journal: an
     insert patches only the dirty rows (no re-shard), and the patched
@@ -131,6 +192,13 @@ MULTIDEV_SCRIPT = textwrap.dedent("""
     rec_a = np.mean([len(set(np.asarray(i_a[r]).tolist())
                          & set(gt[r].tolist())) / 10 for r in range(8)])
     assert rec_a >= 0.8, rec_a
+
+    # planner-driven multi-query entry on a real 2x2x2 mesh: the (B, P)
+    # probe matrix shards over batch x partition axes
+    r_b = eng.search_batch(idx, np.asarray(q), 10, nprobe=8)
+    rec_b = np.mean([len(set(r_b.ids[r].tolist())
+                         & set(gt[r].tolist())) / 10 for r in range(8)])
+    assert rec_b >= 0.8, rec_b
 
     # elastic checkpoint: save replicated, restore sharded on a new mesh
     params = {"w": jnp.arange(64, dtype=jnp.float32).reshape(8, 8)}

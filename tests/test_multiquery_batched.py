@@ -111,3 +111,80 @@ def test_plan_union_padding_is_inert(built):
     assert plan.n_real <= len(plan.sel)
     assert not plan.qmask[:, plan.n_real:].any()
     assert (plan.nprobe == 3).all()
+
+
+def test_per_query_search_forwards_recall_target(built):
+    """per_query_search must exercise the APS planner one query at a time
+    — the B=1 case of batch_search with the same recall_target."""
+    ds, idx = built
+    q = datasets.queries_near(ds, 8, seed=8)
+    rp = per_query_search(idx, q, 10, recall_target=0.9)
+    assert rp.nprobe is not None and len(np.unique(rp.nprobe)) > 1
+    for i in range(8):
+        rb = batch_search(idx, q[i], 10, recall_target=0.9)
+        assert set(rp.ids[i].tolist()) == set(rb.ids[0].tolist()), i
+        assert rp.nprobe[i] == rb.nprobe[0], i
+
+
+@pytest.mark.parametrize("dtype,min_overlap", [("bf16", 0.9),
+                                               ("int8", 0.85)])
+def test_storage_dtype_recall_vs_f32_oracle(built, dtype, min_overlap):
+    """Quantized batched paths: recall within quantization tolerance of the
+    f32 oracle, and the masked-slot contract (ids -1 <=> dists inf) holds."""
+    ds, idx = built
+    q = datasets.queries_near(ds, 32, seed=9)
+    gt = ds.ground_truth(q, 10)
+    r32 = batch_search(idx, q, 10, nprobe=6)
+    rq = batch_search(idx, q, 10, nprobe=6, storage_dtype=dtype)
+    assert rq.ids.shape == r32.ids.shape
+    # same probe plan -> identical scan footprint, smaller bytes
+    assert rq.partitions_scanned == r32.partitions_scanned
+    assert rq.vectors_scanned == r32.vectors_scanned
+    overlap = np.mean([len(set(rq.ids[i].tolist())
+                           & set(r32.ids[i].tolist())) / 10
+                       for i in range(32)])
+    assert overlap >= min_overlap, overlap
+    rec32 = np.mean([len(set(r32.ids[i].tolist()) & set(gt[i].tolist()))
+                     / 10 for i in range(32)])
+    recq = np.mean([len(set(rq.ids[i].tolist()) & set(gt[i].tolist()))
+                    / 10 for i in range(32)])
+    assert rec32 - recq <= 0.05, (rec32, recq)
+    # masked-slot contract
+    miss = ~np.isfinite(rq.dists)
+    assert (rq.ids[miss] == -1).all()
+    assert (rq.ids[~miss] >= 0).all()
+    assert np.isfinite(rq.dists[~miss]).all()
+
+
+def test_storage_dtype_refresh_policy(built):
+    """bf16 snapshots take the journal delta path (patches cast on
+    device); int8 snapshots force a full rebuild on any content delta
+    (residual codes would need requantizing) — the sharded engine's
+    policy, mirrored."""
+    ds, _ = built
+    for dtype, want_delta in (("bf16", True), ("int8", False)):
+        idx = QuakeIndex.build(ds.vectors[:2000], num_partitions=16,
+                               kmeans_iters=3)
+        ex = get_executor(idx, dtype)
+        q = datasets.queries_near(ds, 4, seed=10)
+        ex.search(q, 5, nprobe=4)
+        assert ex.full_rebuilds == 1
+        new_ids = np.arange(8000, 8004)
+        idx.insert(q * 0.999, new_ids)
+        r = ex.search(q, 5, nprobe=4)
+        if want_delta:
+            assert ex.delta_refreshes == 1 and ex.full_rebuilds == 1
+        else:
+            assert ex.delta_refreshes == 0 and ex.full_rebuilds == 2
+        # fresh inserts visible through either refresh path
+        assert set(r.ids.ravel().tolist()) & set(new_ids.tolist())
+
+
+def test_executors_cached_per_storage_dtype(built):
+    ds, _ = built
+    idx = QuakeIndex.build(ds.vectors[:2000], num_partitions=16,
+                           kmeans_iters=3)
+    assert get_executor(idx) is get_executor(idx, "f32")
+    assert get_executor(idx, "int8") is get_executor(idx, "int8")
+    assert get_executor(idx, "int8") is not get_executor(idx)
+    assert get_executor(idx, "int8").storage_dtype == "int8"

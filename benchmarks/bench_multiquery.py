@@ -15,6 +15,11 @@ Cells (``--cell``, comma list, default ``qps``):
   dtypes    f32/bf16/int8 batched executor: scanned HBM bytes vs recall
             (int8 rides ``scan_selected_topk_q8``; ~4x less vector
             traffic at recall within a point of f32).
+  earlyexit multi-round early-exit executor (Algorithm 2) vs the
+            fixed-plan scan on a mixed easy/hard batch over a
+            density-heterogeneous dataset: vectors-scanned savings at
+            (near-)equal measured recall, plus the per-round trajectory
+            (scan counts, live-query fractions).
 
 Each cell merges its numbers into ``results/perf_quake.json``
 (``multiquery_planner`` / ``multiquery_skew`` / ``multiquery_dtypes``).
@@ -31,7 +36,8 @@ from repro.core import multiquery as mq
 from repro.core.multiquery import batch_search, per_query_search
 from repro.data import datasets, workload
 
-from .common import Rows, build_index, merge_results, sift_like
+from .common import (Rows, build_index, merge_results, mixed_difficulty,
+                     mixed_queries, round_trajectory, sift_like)
 
 OUT_PATH = "results/perf_quake.json"
 
@@ -113,19 +119,34 @@ def run_planner(n=20_000, dim=32, b=128, k=10, target=0.9, seed=0,
     geo = mq._centroid_geo_batch(idx, q)
     s_l, v_l, c_l = mq._aps_probe_counts_loop(idx, q, k, target,
                                               kth_med=kth, geo=geo)
-    s_v, v_v, c_v = mq._aps_probe_counts_batched(idx, q, k, target,
+    s_v, v_v, c_v, _ = mq._aps_probe_counts_batched(idx, q, k, target,
                                                  kth_med=kth, geo=geo)
     assert np.array_equal(s_l, s_v) and np.array_equal(c_l, c_v), \
         "vectorized planner diverged from the per-query loop"
     print(f"parity: byte-identical probe sets (B={b}, "
           f"P={idx.num_partitions}, mean nprobe {c_v.mean():.1f})")
 
+    # fused single-jit device planner: same probe sets as the host oracle
+    # consuming the same device centroid pass (the selection/estimator
+    # stage is exact; only matmul rounding separates it from the numpy
+    # GEMM pass), with no host round-trip between centroid pass and
+    # probe selection
+    s_d, v_d, c_d, _ = mq._aps_probe_counts_batched(
+        idx, q, k, target, kth_med=kth, pass_impl="scan_topk")
+    s_f, v_f, c_f, _ = mq._aps_probe_counts_fused(idx, q, k, target,
+                                                  kth_med=kth)
+    assert np.array_equal(c_d, c_f) and all(
+        set(s_d[i][v_d[i]].tolist()) == set(s_f[i][v_f[i]].tolist())
+        for i in range(b)), \
+        "fused planner diverged from the host selection oracle"
+    print("fused parity: probe sets match the host oracle exactly")
+
     # end-to-end plan times.  loop = the pre-vectorization planner
     # (per-query GEMV + argsort + estimate_probs_np, up-to-8 host APS
     # calibration searches per batch).  vectorized cold = batched arrays +
     # one batched calibration search; steady = the executor serving path,
     # where the calibrated radius is cached on the snapshot fingerprint.
-    for planner in ("vectorized", "loop"):               # warm jit shapes
+    for planner in ("vectorized", "fused", "loop"):      # warm jit shapes
         mq.plan_batch(idx, q, k, recall_target=target, planner=planner)
     t_cold = _best_of(lambda: mq.plan_batch(idx, q, k, recall_target=target,
                                             planner="vectorized"))
@@ -134,6 +155,10 @@ def run_planner(n=20_000, dim=32, b=128, k=10, target=0.9, seed=0,
     t_vec = _best_of(lambda: mq.plan_batch(idx, q, k, recall_target=target,
                                            cache=ex.planner_cache,
                                            cent_norms=ex._cent_norms))
+    t_fused = _best_of(lambda: mq.plan_batch(idx, q, k,
+                                             recall_target=target,
+                                             planner="fused",
+                                             cache=ex.planner_cache))
     t_loop = _best_of(lambda: mq.plan_batch(idx, q, k, recall_target=target,
                                             planner="loop"))
     ex.search(q, k, recall_target=target)                # warm scan shape
@@ -145,19 +170,24 @@ def run_planner(n=20_000, dim=32, b=128, k=10, target=0.9, seed=0,
          "t_plan_loop_ms": round(t_loop * 1e3, 3),
          "t_plan_vectorized_ms": round(t_vec * 1e3, 3),
          "t_plan_vectorized_cold_ms": round(t_cold * 1e3, 3),
+         "t_plan_fused_ms": round(t_fused * 1e3, 3),
          "planner_speedup": round(speedup, 2),
          "planner_speedup_cold": round(t_loop / t_cold, 2),
+         "planner_speedup_fused": round(t_loop / t_fused, 2),
          "t_search_total_ms": round(t_total * 1e3, 3),
          "t_scan_ms": round(t_scan * 1e3, 3),
          "plan_frac_of_search": round(t_vec / max(t_total, 1e-12), 3),
-         "parity": "byte-identical"}
+         "parity": "byte-identical",
+         "fused_parity": "probe sets exact vs host oracle"}
     print(f"planner B={b} P={idx.num_partitions}: loop "
           f"{r['t_plan_loop_ms']}ms -> vectorized "
           f"{r['t_plan_vectorized_ms']}ms steady "
           f"({r['planner_speedup']}x; cold "
           f"{r['t_plan_vectorized_cold_ms']}ms, "
-          f"{r['planner_speedup_cold']}x); search total "
-          f"{r['t_search_total_ms']}ms "
+          f"{r['planner_speedup_cold']}x); fused single-jit "
+          f"{r['t_plan_fused_ms']}ms ({r['planner_speedup_fused']}x, "
+          "no host sync between centroid pass and selection); "
+          f"search total {r['t_search_total_ms']}ms "
           f"(plan {100 * r['plan_frac_of_search']:.0f}%)")
     merge_results(OUT_PATH, "multiquery_planner", r)
     if min_speedup is not None:
@@ -291,6 +321,68 @@ def run_dtypes(n=20_000, dim=32, b=128, k=10, nprobe=12, seed=0,
     return out
 
 
+def run_earlyexit(n=100_000, dim=32, b=128, k=10, target=0.9, seed=0,
+                  min_savings=None, max_recall_gap=None):
+    """Early-exit cell (Algorithm 2): multi-round executor vs the
+    fixed-plan scan on a mixed easy/hard batch over a
+    density-heterogeneous dataset (``common.mixed_difficulty``) — the
+    per-query-difficulty-spread regime where one batch-calibrated radius
+    systematically overplans the easy half.  Records vectors-scanned
+    savings, recall parity, and the per-round trajectory."""
+    ds, n_easy = mixed_difficulty(n, dim, seed)
+    idx = build_index(ds)
+    q = mixed_queries(ds, n_easy, b, seed=seed + 9)
+    gt = ds.ground_truth(q, k)
+    ex = mq.get_executor(idx)
+
+    ex.search(q, k, recall_target=target, rounds=1)              # warm
+    t_fix = _best_of(lambda: ex.search(q, k, recall_target=target,
+                                       rounds=1))
+    r_fix = ex.search(q, k, recall_target=target, rounds=1)
+    ex.search(q, k, recall_target=target)                        # warm
+    t_ee = _best_of(lambda: ex.search(q, k, recall_target=target))
+    r_ee = ex.search(q, k, recall_target=target)
+
+    rec_fix, rec_ee = _recall(r_fix.ids, gt), _recall(r_ee.ids, gt)
+    savings = 1.0 - r_ee.vectors_scanned / max(r_fix.vectors_scanned, 1)
+    rows = Rows()
+    for name, r, t, rec in (("fixed-plan", r_fix, t_fix, rec_fix),
+                            ("early-exit", r_ee, t_ee, rec_ee)):
+        rows.add(variant=name, recall=rec, rounds=r.rounds,
+                 vectors_scanned=r.vectors_scanned,
+                 comparisons=r.comparisons,
+                 partitions_scanned=r.partitions_scanned,
+                 mean_nprobe=float(r.nprobe.mean()),
+                 latency_us=t / b * 1e6)
+    rows.print_table(
+        f"early-exit rounds vs fixed plan (B={b}, N={n}, "
+        f"P={idx.num_partitions}, target={target}, mixed easy/hard)")
+    out = {"batch": b, "n": n, "num_partitions": idx.num_partitions,
+           "recall_target": target,
+           "recall_fixed": round(rec_fix, 4),
+           "recall_earlyexit": round(rec_ee, 4),
+           "recall_gap": round(rec_fix - rec_ee, 4),
+           "vectors_fixed": int(r_fix.vectors_scanned),
+           "vectors_earlyexit": int(r_ee.vectors_scanned),
+           "vectors_saved_frac": round(savings, 4),
+           "comparisons_fixed": int(r_fix.comparisons),
+           "comparisons_earlyexit": int(r_ee.comparisons),
+           "t_fixed_ms": round(t_fix * 1e3, 3),
+           "t_earlyexit_ms": round(t_ee * 1e3, 3),
+           "trajectory": round_trajectory(r_ee)}
+    print(f"earlyexit: {100 * savings:.1f}% fewer vectors scanned at "
+          f"recall {rec_fix:.4f} -> {rec_ee:.4f} "
+          f"({r_ee.rounds} rounds, live "
+          f"{out['trajectory'].get('round_live_frac')})")
+    merge_results(OUT_PATH, "multiquery_earlyexit", out)
+    if min_savings is not None:
+        assert savings >= min_savings, \
+            f"early-exit saved {savings:.3f} < required {min_savings}"
+    if max_recall_gap is not None:
+        assert abs(rec_fix - rec_ee) <= max_recall_gap, out
+    return out
+
+
 if __name__ == "__main__":
     import argparse
     ap = argparse.ArgumentParser()
@@ -300,10 +392,12 @@ if __name__ == "__main__":
     ap.add_argument("--b", type=int, default=128)
     ap.add_argument("--num-partitions", type=int, default=None)
     ap.add_argument("--cell", default="qps",
-                    help="comma list of qps,planner,skew,dtypes")
+                    help="comma list of qps,planner,skew,dtypes,earlyexit")
     ap.add_argument("--min-planner-speedup", type=float, default=None)
     ap.add_argument("--max-skew-recall-drop", type=float, default=None)
     ap.add_argument("--max-dtype-recall-drop", type=float, default=None)
+    ap.add_argument("--min-earlyexit-savings", type=float, default=None)
+    ap.add_argument("--max-earlyexit-recall-gap", type=float, default=None)
     args = ap.parse_args()
     cells = [c.strip() for c in args.cell.split(",") if c.strip()]
     ds = sift_like(args.n, 32, 0)
@@ -324,5 +418,10 @@ if __name__ == "__main__":
             run_dtypes(n=args.n, b=args.b,
                        max_recall_drop=args.max_dtype_recall_drop,
                        ds=ds, idx=idx)
+        elif cell == "earlyexit":
+            # builds its own density-heterogeneous dataset/index
+            run_earlyexit(n=args.n, b=max(args.b, 64),
+                          min_savings=args.min_earlyexit_savings,
+                          max_recall_gap=args.max_earlyexit_recall_gap)
         else:
             raise SystemExit(f"unknown cell {cell!r}")

@@ -36,6 +36,61 @@ def sift_like(n=20_000, dim=32, seed=0):
                               seed=seed)
 
 
+def mixed_difficulty(n=20_000, dim=32, seed=0, frac_easy=0.7):
+    """Density-heterogeneous dataset for the early-exit cell: tight,
+    moderately separated uniform clusters (easy regime — one partition
+    holds a query's neighbors, but the shared calibrated radius is
+    inflated by the hard half, so the up-front planner overplans them)
+    next to a broad overlapping region (hard regime — neighbors genuinely
+    spread across many partitions).  Returns (dataset, n_easy): rows
+    ``[:n_easy]`` are the tight half.  This is the regime Algorithm 2's
+    per-query early exit is built for — per-query difficulty spread that
+    one batch-wide radius cannot capture."""
+    n_e = int(n * frac_easy)
+    p_est = int(round(np.sqrt(n)))
+    tight = datasets.clustered(
+        n_e, dim, n_clusters=max(int(p_est * frac_easy * 0.85), 8),
+        seed=seed, spread=0.08, center_scale=1.8, power=0.0)
+    broad = datasets.clustered(
+        n - n_e, dim, n_clusters=max((n - n_e) // 2000, 4),
+        seed=seed + 1, spread=3.5, center_scale=6.0)
+    off = np.zeros(dim, np.float32)
+    off[0] = 40.0                      # keep the two regimes apart
+    v = np.concatenate([tight.vectors, broad.vectors + off])
+    cid = np.concatenate([tight.cluster_of,
+                          broad.cluster_of + tight.centers.shape[0]])
+    centers = np.concatenate([tight.centers, broad.centers + off])
+    return datasets.VectorDataset(v, cid, centers, "l2"), n_e
+
+
+def mixed_queries(ds, n_easy: int, b: int, seed=0, noise=0.02):
+    """Half-easy / half-hard query batch over a ``mixed_difficulty``
+    dataset (easy rows first)."""
+    rng = np.random.default_rng(seed)
+    ei = rng.integers(0, n_easy, b // 2)
+    hi = rng.integers(n_easy, ds.n, b - b // 2)
+    base = ds.vectors[np.concatenate([ei, hi])]
+    return (base + rng.normal(size=base.shape).astype(np.float32)
+            * noise).astype(np.float32)
+
+
+def round_trajectory(result) -> dict:
+    """Early-exit shape of a ``multiquery.BatchResult`` for the bench
+    JSON: per-round scan counts and live-query fractions, so the
+    perf trajectory captures *how* the rounds shrank, not just the
+    end-to-end wall time."""
+    out = {"rounds": int(result.rounds)}
+    tr = result.round_trace
+    if tr:
+        b = len(result.ids)
+        out["round_vectors"] = [int(v) for v in tr["round_vectors"]]
+        out["round_partitions"] = [int(v) for v in tr["round_partitions"]]
+        out["round_comparisons"] = [int(v) for v in tr["round_comparisons"]]
+        out["round_live_frac"] = [round(v / max(b, 1), 4)
+                                  for v in tr["round_live"]]
+    return out
+
+
 def build_index(ds, num_partitions=None, **cfg):
     c = QuakeConfig(metric=ds.metric, **cfg)
     return QuakeIndex.build(ds.vectors, config=c,

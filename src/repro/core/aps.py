@@ -140,6 +140,23 @@ def estimate_probs_batch(d0_sq, di_sq, cc_dist, rho_sq, table, valid):
     return p0, p
 
 
+def rho_sq_batch(kth, *, metric: str, q_norm_sq=None, max_norm_sq=None):
+    """Vectorized item-distance -> squared-geometry-radius map: the batched
+    mirror of ``QuakeIndex._rho_sq_from_item_dist`` used by the multi-round
+    batched executor and the fused device planner.
+
+    ``kth`` (B,) is the running k-th item distance in minimization
+    convention (true squared L2, or -score for IP).  For IP the radius
+    lives in the MIPS-augmented space: rho^2 = ||q||^2 + M^2 + 2 * (-s_k).
+    Works on numpy and jnp arrays alike (same xp-dispatch convention as
+    ``estimate_probs_batch``).
+    """
+    xp = np if isinstance(kth, np.ndarray) else jnp
+    if metric == "l2":
+        return xp.maximum(kth, 0.0)
+    return xp.maximum(q_norm_sq + max_norm_sq + 2.0 * kth, 0.0)
+
+
 # ---------------------------------------------------------------------------
 # Host-driven Algorithm 1 (dynamic index path)
 # ---------------------------------------------------------------------------

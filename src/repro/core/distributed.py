@@ -314,6 +314,10 @@ class EngineConfig:
                                      # partitions dedupe across the batch)
     storage_dtype: str = "f32"       # "bf16" halves scan traffic (beyond-
                                      # paper; distances accumulate in f32)
+    rounds: Optional[int] = None     # search_batch early-exit round budget
+                                     # (APS mode): None = as many geometric
+                                     # rounds as the plan needs, 1 = one
+                                     # monolithic fixed-plan scan
 
 
 class ShardedQuakeEngine:
@@ -726,14 +730,22 @@ class ShardedQuakeEngine:
                      k: Optional[int] = None,
                      nprobe: Optional[int] = None,
                      recall_target: Optional[float] = None,
-                     union_cap: Optional[int] = None):
+                     union_cap: Optional[int] = None,
+                     rounds: Optional[int] = None):
         """Multi-query search over the sharded snapshot through the *same*
         host batch planner as the device-resident executor
         (``core.multiquery.plan_batch``): per-query probe sets (vectorized
         APS when ``nprobe`` is None) are planned once against the dynamic
         index, then scattered into a dense (B, P) probe matrix whose
         partition axis is sharded with the snapshot — each device packs
-        and scans only its local slice of the batch union.  Returns
+        and scans only its local slice of the batch union.  APS-planned
+        searches run through the *same* multi-round early-exit loop as
+        the host executor (``multiquery.run_round_loop``): per round only
+        live queries' rows of the probe matrix are populated, so every
+        shard's local pack sees the per-shard slice of the live mask and
+        later rounds shrink with the hard tail (``rounds=1``, pinned
+        ``nprobe``, or a ``union_cap`` — whose truncation is defined on
+        the whole-batch plan — fall back to the one-shot scan).  Returns
         ``multiquery.BatchResult`` (top-``min(k, cfg.k)`` columns).
         """
         from .multiquery import (BatchResult, PlannerCache,  # avoid cycle
@@ -755,12 +767,20 @@ class ShardedQuakeEngine:
                 self._planner_cache.index is not index:
             self._planner_cache = PlannerCache(index)
         pc = self._planner_cache.ensure_fresh()
+        cap = union_cap if union_cap is not None else cfg.union_cap
+        rounds = cfg.rounds if rounds is None else rounds
+        if rounds is not None and rounds < 1:
+            raise ValueError(f"rounds must be >= 1 or None, got {rounds}")
+        if nprobe is None and rounds != 1 and cap is None:
+            target = recall_target if recall_target is not None \
+                else index.config.recall_target
+            return self._search_batch_rounds(index, q, k, target, rounds,
+                                             snap, pc)
         # cfg.union_cap caps the *plan* (like the host executor), so the
         # returned stats and effective nprobe reflect what was scanned
         plan = plan_batch(index, q, k, nprobe=nprobe,
                           recall_target=recall_target,
-                          union_cap=union_cap if union_cap is not None
-                          else cfg.union_cap,
+                          union_cap=cap,
                           cent_norms=pc._cent_norms, cache=pc)
         qp = self.pad_queries(jnp.asarray(q))
         p_pad = snap.num_partitions
@@ -793,4 +813,59 @@ class ShardedQuakeEngine:
             vectors_scanned=int(sizes.sum()),
             comparisons=int((plan.qmask[:, :plan.n_real].astype(np.int64)
                              * sizes[None, :]).sum()),
-            nprobe=plan.nprobe)
+            nprobe=plan.nprobe, recall_estimate=plan.recall_est)
+
+    def _search_batch_rounds(self, index: QuakeIndex, q: np.ndarray,
+                             k: int, target: float,
+                             rounds: Optional[int], snap: IndexSnapshot,
+                             pc):
+        """The engine side of the shared Algorithm-2 round loop: each
+        round scatters only live queries' next probe-sequence window into
+        the sharded (B, P) probe matrix and reuses the jitted planned-
+        batch executor (per-shard ``pack_union`` + packed scan + global
+        merge); the shared driver owns the running top-k, the refined
+        recall estimate, and the live mask."""
+        from .multiquery import (BatchResult, _batch_rho_fn,  # avoid cycle
+                                 plan_rounds, run_round_loop)
+        b = q.shape[0]
+        rplan = plan_rounds(index, q, k, target, cache=pc,
+                            cent_norms=pc._cent_norms)
+        qp = self.pad_queries(jnp.asarray(q))
+        bp = qp.shape[0]
+        p_pad = snap.num_partitions
+        p_loc = p_pad // self.n_part_shards
+
+        rr = np.broadcast_to(np.arange(b)[:, None], rplan.seq.shape)
+
+        def scan_round(take, kept):
+            selected = np.zeros((bp, p_pad), dtype=bool)
+            selected[rr[take], rplan.seq[take]] = True
+            # static per-shard union size: largest local share, bucketed
+            u_loc = int(np.bincount(kept // p_loc,
+                                    minlength=self.n_part_shards).max())
+            u_loc = min(max(-(-max(u_loc, 1) // 8) * 8, 1), p_loc)
+            anchor = np.zeros(p_pad, dtype=bool)   # uncapped: no priority
+            d, ids = self._planned_fn(u_loc)(qp, snap,
+                                             jnp.asarray(selected),
+                                             jnp.asarray(anchor))
+            sizes = self._host_sizes[kept]
+            st = {"partitions": int(len(kept)),
+                  "vectors": int(sizes.sum()),
+                  "comparisons": int(
+                      self._host_sizes[rplan.seq[take]].sum())}
+            return d[:b], ids[:b], st
+
+        td, ti, nprobe, r_est, n_rounds, trace, stats = run_round_loop(
+            rplan, k, target, index._beta_table, _batch_rho_fn(index, q),
+            scan_round, rounds=rounds, k_keep=self.cfg.k)
+        dd = np.asarray(td, dtype=np.float64)[:, :k]
+        ids = np.asarray(ti)[:, :k]
+        dd = np.where(dd >= MASK_DIST, np.inf, dd)
+        ids = np.where(np.isinf(dd), -1, ids)
+        return BatchResult(
+            ids=ids.astype(np.int64), dists=dd,
+            partitions_scanned=stats["partitions"],
+            vectors_scanned=stats["vectors"],
+            comparisons=stats["comparisons"],
+            nprobe=nprobe, recall_estimate=r_est,
+            rounds=n_rounds, round_trace=trace)

@@ -81,6 +81,11 @@ class QuakeConfig:
                                         # under read skew; None = unbounded)
                                         # — the batched-executor mirror of
                                         # EngineConfig.union_cap
+    planner_radius_ttl: int = 64        # batches a calibrated APS radius may
+                                        # be reused for before the planner
+                                        # cache recalibrates (bounds query-
+                                        # distribution-drift staleness; see
+                                        # multiquery.PlannerCache)
     seed: int = 0
 
 
@@ -407,22 +412,28 @@ class QuakeIndex:
                      recall_target: Optional[float] = None,
                      impl: str = "auto",
                      union_cap: Optional[int] = None,
-                     storage_dtype: Optional[str] = None):
+                     storage_dtype: Optional[str] = None,
+                     rounds: Optional[int] = None):
         """Batched multi-query search (paper §7.4) through the
         device-resident executor: per-query probe sets are planned by the
-        vectorized batch planner (APS-driven when ``nprobe`` is None),
-        then every distinct partition in the batch's union is scanned
-        exactly once via the packed ``scan_topk_indexed`` kernel.
-        ``union_cap`` bounds the scanned union (frequency-ranked, for
-        read-skewed batches); ``storage_dtype`` ("f32"/"bf16"/"int8")
-        selects the snapshot storage format.  Single-query search is the
-        B=1 case of the same path.  Returns ``multiquery.BatchResult``.
+        vectorized batch planner (APS-driven when ``nprobe`` is None) and
+        executed as multi-round early-exit probe rounds (paper
+        Algorithm 2): each round scans one packed partition union via the
+        ``scan_topk_indexed`` kernel and queries whose refined recall
+        estimate clears the target drop out of later rounds.  ``rounds``
+        bounds the round budget (1 = single fixed-plan scan; also the
+        shape nprobe-pinned searches always take).  ``union_cap`` bounds
+        each scanned union (frequency-ranked, for read-skewed batches);
+        ``storage_dtype`` ("f32"/"bf16"/"int8") selects the snapshot
+        storage format.  Single-query search is the B=1 case of the same
+        path.  Returns ``multiquery.BatchResult`` — APS-planned results
+        carry per-query ``recall_estimate``s like the per-query path.
         """
         from .multiquery import batch_search  # late: avoid import cycle
         return batch_search(self, queries, k, nprobe=nprobe,
                             recall_target=recall_target, impl=impl,
                             union_cap=union_cap,
-                            storage_dtype=storage_dtype)
+                            storage_dtype=storage_dtype, rounds=rounds)
 
     @staticmethod
     def _fixed_scan(cand_geo, scan_fn, k, n_fixed) -> aps_mod.APSResult:

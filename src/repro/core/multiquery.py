@@ -23,7 +23,7 @@ Architecture (see ``docs/batched_execution.md``):
      ``kernels.ops.pack_union`` primitive (frequency-ranked, so a
      ``union_cap`` keeps the hottest partitions under read skew — the
      batched-executor mirror of ``EngineConfig.union_cap``).
-  3. **Scan** (device): one call to ``kernels.ops.scan_selected_topk`` —
+  3. **Scan** (device): calls to ``kernels.ops.scan_selected_topk`` —
      the scalar-prefetch ``scan_topk_indexed`` Pallas kernel streams each
      selected partition HBM->VMEM exactly once and folds the running top-k
      in VMEM (interpret mode on CPU CI, Mosaic on TPU; ``impl="jnp"`` is
@@ -31,6 +31,18 @@ Architecture (see ``docs/batched_execution.md``):
      cached snapshot holds bf16 vectors / int8 IVF residual codes
      (``quantize_int8_residual``) and the scan streams 2x/4x fewer bytes
      through ``scan_selected_topk``/``scan_selected_topk_q8``.
+  4. **Rounds** (Algorithm 2): APS-planned searches chunk the probe
+     sequences into geometrically growing rounds (``run_round_loop``):
+     each round packs only *live* queries' next probes (plus "union
+     rides" — every not-yet-scanned probe landing in the round's union,
+     so a partition block streams at most once per batch), folds the
+     scan into a device-resident running top-k (``ops.topk_merge``),
+     re-estimates per-query recall from the running k-th distance, and
+     retires queries that cleared the target.  ``rounds=1`` degenerates
+     to the monolithic fixed-plan scan.  The fully-jitted planner
+     variant (``planner="fused"``, ``_fused_plan_probes``) runs centroid
+     pass + estimator + selection in one jit with zero host round-trips
+     in between — the TPU planner path.
 
 Single-query search is the B=1 case of the same executor
 (``per_query_search`` below, and ``QuakeIndex.search_batch`` with one row);
@@ -66,14 +78,27 @@ STORAGE_DTYPES = ("f32", "bf16", "int8")
 class BatchResult:
     ids: np.ndarray        # (B, k) external ids, -1 on misses
     dists: np.ndarray      # (B, k) minimization convention, inf on misses
-    partitions_scanned: int = 0   # distinct partitions streamed (union size)
+    partitions_scanned: int = 0   # partition blocks streamed (union size,
+                                  # summed over rounds on the early-exit path)
     vectors_scanned: int = 0      # vectors streamed from memory: each union
-                                  # partition is read once for the whole batch
+                                  # partition is read once per round it
+                                  # appears in
     comparisons: int = 0          # query-vector distance evaluations (the
                                   # per-query-loop equivalent of
                                   # vectors_scanned; ratio = amortization)
     nprobe: Optional[np.ndarray] = None   # (B,) effective probes per query
-                                          # (== planned unless union-capped)
+                                          # (== planned unless union-capped
+                                          # or the query exited early)
+    recall_estimate: Optional[np.ndarray] = None  # (B,) APS recall estimate
+                                          # (planner cutoff estimate on the
+                                          # fixed-plan path, refined running
+                                          # estimate on the round path; NaN
+                                          # where no radius was available;
+                                          # None for nprobe-pinned searches)
+    rounds: int = 1                       # probe rounds executed
+    round_trace: Optional[dict] = None    # early-exit shape: per-round
+                                          # live-query counts / vectors /
+                                          # partitions / comparisons
 
 
 @dataclass
@@ -89,6 +114,27 @@ class BatchPlan:
     planned: Optional[np.ndarray] = None  # (B,) pre-cap planned counts
     anchor: Optional[np.ndarray] = None   # (B,) each query's nearest
                                           # partition (cap-proof probes)
+    recall_est: Optional[np.ndarray] = None  # (B,) planner recall estimate
+                                          # at the planned cutoff (APS
+                                          # planners only; NaN on fallback
+                                          # rows with no radius)
+
+
+@dataclass
+class RoundPlan:
+    """Per-query probe *sequences* plus the estimator state the multi-round
+    early-exit executor needs to re-score recall between rounds (Algorithm 2
+    semantics for the host path).  All candidate arrays are aligned to the
+    scan order: column 0 is the query's nearest partition, later columns
+    descend by the planner's scan-probability ranking (an order that is
+    invariant under the radius shrinking — cap fractions are monotone in
+    the bisector margin for any rho)."""
+    seq: np.ndarray         # (B, M) candidate partitions in scan order
+    counts: np.ndarray      # (B,) planned probe counts (the fixed-plan
+                            # budget; rounds chunk through seq[:, :count])
+    geo: np.ndarray         # (B, M) seq-aligned geometry-space sq distances
+    cc: np.ndarray          # (B, M) seq-aligned ||c_i - c_0|| distances
+    recall_est: np.ndarray  # (B,) planner estimate at the planned cutoff
 
 
 # ---------------------------------------------------------------------------
@@ -204,16 +250,23 @@ class PlannerCache:
     static index the fingerprint never moves, and a radius calibrated
     from one batch's sample can go stale if the *query* distribution
     drifts — the TTL bounds that staleness at ~1 recalibration per
-    ``radius_ttl`` batches (amortized cost stays negligible)."""
+    ``radius_ttl`` batches (amortized cost stays negligible).  The TTL
+    defaults to ``QuakeConfig.planner_radius_ttl`` so serving stacks tune
+    it in one place (executor and sharded-engine caches both flow through
+    here); an explicit ``radius_ttl`` argument still overrides."""
 
     RADIUS_TTL = 64
 
-    def __init__(self, index: QuakeIndex, radius_ttl: int = RADIUS_TTL):
+    def __init__(self, index: QuakeIndex, radius_ttl: Optional[int] = None):
         self.index = index
+        if radius_ttl is None:
+            radius_ttl = getattr(index.config, "planner_radius_ttl",
+                                 self.RADIUS_TTL)
         self.radius_ttl = radius_ttl
         self._key = None
         self._cent_norms = None
         self._kth_cache = {}     # (key, k, target) -> [kth_med, uses]
+        self._dev = None         # fused-planner device residents
 
     def _fingerprint(self):
         return (self.index.version, self.index.num_partitions,
@@ -225,8 +278,25 @@ class PlannerCache:
             cents = self.index.levels[0].centroids
             self._cent_norms = np.sum(cents * cents, axis=1)
             self._kth_cache = {}
+            self._dev = None
             self._key = fp
         return self
+
+    def device_arrays(self):
+        """(centroids, MIPS augmentation extras, beta table) resident on
+        device for the fused single-jit planner — uploaded once per
+        snapshot fingerprint, not per batch."""
+        if self._key != self._fingerprint() or self._dev is None:
+            self.ensure_fresh()
+            idx = self.index
+            cents = jnp.asarray(idx.levels[0].centroids)
+            if idx.config.metric == "ip":
+                aug = jnp.asarray(
+                    idx._augment_extra(0).astype(np.float32))
+            else:
+                aug = jnp.zeros((cents.shape[0],), jnp.float32)
+            self._dev = (cents, aug, jnp.asarray(idx._beta_table))
+        return self._dev
 
     def get_radius(self, k: int, target: float) -> Optional[float]:
         if self._key != self._fingerprint():
@@ -317,7 +387,7 @@ def _aps_probe_counts_batched(index: QuakeIndex, q: np.ndarray, k: int,
                               cent_norms: Optional[np.ndarray] = None,
                               cache: Optional[PlannerCache] = None,
                               pass_impl: str = "numpy",
-                              ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+                              full: bool = False):
     """Vectorized APS planner: the whole batch planned with array ops.
 
     The centroid pass is either the host batched GEMM (``pass_impl=
@@ -326,7 +396,12 @@ def _aps_probe_counts_batched(index: QuakeIndex, q: np.ndarray, k: int,
     sets up to matmul rounding).  The estimator is
     ``aps.estimate_probs_batch`` on ``(B, n_consider)`` arrays; the k-NN
     radius comes from one batched sample search instead of up-to-8 host
-    APS searches.  Same return contract as ``_aps_probe_counts_loop``.
+    APS searches.  Returns ``_aps_probe_counts_loop``'s (sel, valid,
+    counts) contract plus a fourth element — the per-query recall
+    estimate at the planned cutoff (NaN on no-radius fallback rows).
+    With ``full=True`` it instead returns the :class:`RoundPlan` the
+    multi-round executor consumes (full scan-ordered candidate sequences
+    plus seq-aligned estimator inputs).
     """
     b = q.shape[0]
     cfg = index.config
@@ -403,16 +478,158 @@ def _aps_probe_counts_batched(index: QuakeIndex, q: np.ndarray, k: int,
         counts = np.where(p0 >= target, 1, np.minimum(1 + extra, m))
         seq = np.concatenate(
             [order[:, :1], np.take_along_axis(order, desc, axis=1)], axis=1)
+        r_at = np.take_along_axis(
+            r_cum, np.maximum(counts - 2, 0)[:, None], axis=1)[:, 0]
+        r_est = np.where(counts <= 1, p0, r_at)
     else:
         counts = np.ones(b, dtype=np.int64)
         seq = order
+        r_est = np.full(b, np.nan)
     counts = np.where(fallback, m, counts).astype(np.int64)
     seq = np.where(fallback[:, None], order, seq)
+    r_est = np.where(fallback, np.nan, r_est)
+
+    if full:
+        if m > 1:
+            def _seq_align(a):
+                return np.where(
+                    fallback[:, None], a,
+                    np.concatenate(
+                        [a[:, :1], np.take_along_axis(a, desc, axis=1)],
+                        axis=1))
+            geo_seq = _seq_align(geo_sel)
+            cc_seq = _seq_align(cc)
+        else:
+            geo_seq = geo_sel
+            cc_seq = np.zeros((b, 1))
+        return RoundPlan(seq=seq.astype(np.int64), counts=counts,
+                         geo=geo_seq.astype(np.float64),
+                         cc=cc_seq.astype(np.float64), recall_est=r_est)
 
     n_max = int(counts.max())
     vmask = np.arange(n_max)[None, :] < counts[:, None]
     sel = np.where(vmask, seq[:, :n_max], 0).astype(np.int64)
-    return sel, vmask, counts
+    return sel, vmask, counts, r_est
+
+
+# ---------------------------------------------------------------------------
+# Fused single-jit device planner (TPU planner path)
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("m", "metric"))
+def _fused_plan_probes(q, cents, aug_extra, max_norm_sq, kth_med, table,
+                       target, *, m: int, metric: str):
+    """The whole APS batch planner as ONE jitted function: centroid pass
+    (``ops.scan_topk`` consumed directly on device), geometric beta-table
+    lookup, recall estimation (``aps.estimate_probs_batch`` on jnp
+    arrays) and probe *selection* (probability-descending cumulative
+    cutoff at the recall target, candidate-budget clamping) — no host
+    round-trip anywhere between the centroid pass and the selected probe
+    sets.  The numpy planner (``_aps_probe_counts_batched``) is the
+    parity oracle, exactly as the loop planner is for it.
+
+    Returns (seq (B, M) int32 scan-ordered candidates, counts (B,) int32,
+    recall_est (B,) f32, geo_seq (B, M), cc_seq (B, M)) — everything the
+    round executor needs, still resident on device.
+    """
+    b = q.shape[0]
+    cd, order = ops.scan_topk(q, cents, m, metric=metric, impl="auto")
+    order = order.astype(jnp.int32)
+    if metric == "l2":
+        geo_sel = jnp.maximum(cd, 0.0)
+        rho_sq = jnp.broadcast_to(jnp.maximum(kth_med, 0.0), (b,))
+    else:   # minimization keys are -score; lift into MIPS geometry
+        q2 = jnp.sum(q.astype(jnp.float32) ** 2, axis=1)
+        geo_sel = jnp.maximum(q2[:, None] + max_norm_sq + 2.0 * cd, 0.0)
+        rho_sq = jnp.maximum(q2 + max_norm_sq + 2.0 * kth_med, 0.0)
+    rho_sq = jnp.where(jnp.isfinite(kth_med), rho_sq, jnp.inf)
+    if m == 1:
+        return (order, jnp.ones((b,), jnp.int32),
+                jnp.full((b,), jnp.nan, jnp.float32), geo_sel,
+                jnp.zeros((b, 1), jnp.float32))
+    fallback = ~jnp.isfinite(rho_sq) | (rho_sq <= 0)
+
+    cg = jnp.take(cents, order, axis=0)                   # (B, M, d)
+    d2 = jnp.sum((cg - cg[:, :1, :]) ** 2, axis=2)
+    if metric == "ip":
+        e = jnp.take(aug_extra, order)                    # (B, M)
+        d2 = d2 + (e - e[:, :1]) ** 2
+    cc = jnp.sqrt(jnp.maximum(d2, 0.0))
+
+    valid = jnp.ones((b, m), jnp.bool_).at[:, 0].set(False)
+    p0, probs = aps_mod.estimate_probs_batch(
+        geo_sel[:, 0], geo_sel, cc, rho_sq, table, valid)
+
+    # probability-descending scan order (nearest always first); the +inf
+    # key on the nearest reproduces the numpy argsort-then-drop exactly
+    neg = (-probs).at[:, 0].set(jnp.inf)
+    desc = jnp.argsort(neg, axis=1)[:, :m - 1]            # stable sort
+    r_cum = p0[:, None] + jnp.cumsum(
+        jnp.take_along_axis(probs, desc, axis=1), axis=1)
+    reached = r_cum >= target
+    extra = jnp.where(reached.any(axis=1),
+                      jnp.argmax(reached, axis=1) + 1, m - 1)
+    counts = jnp.where(p0 >= target, 1, jnp.minimum(1 + extra, m))
+    counts = jnp.where(fallback, m, counts).astype(jnp.int32)
+
+    def _seq_align(a):
+        tail = jnp.take_along_axis(a, desc, axis=1)
+        return jnp.where(fallback[:, None], a,
+                         jnp.concatenate([a[:, :1], tail], axis=1))
+    seq = _seq_align(order)
+    geo_seq = _seq_align(geo_sel)
+    cc_seq = _seq_align(cc)
+    r_at = jnp.take_along_axis(
+        r_cum, jnp.maximum(counts - 2, 0)[:, None], axis=1)[:, 0]
+    r_est = jnp.where(counts <= 1, p0, r_at)
+    r_est = jnp.where(fallback, jnp.nan, r_est).astype(jnp.float32)
+    return seq, counts, r_est, geo_seq, cc_seq
+
+
+def _aps_probe_counts_fused(index: QuakeIndex, q: np.ndarray, k: int,
+                            target: float,
+                            kth_med: Optional[float] = None,
+                            cache: Optional[PlannerCache] = None,
+                            full: bool = False):
+    """Host wrapper for the fused device planner: radius calibration and
+    cache lookups stay on host (identical policy to the numpy planner),
+    then one ``_fused_plan_probes`` call plans the whole batch on device.
+    Same return contracts as ``_aps_probe_counts_batched``."""
+    b = q.shape[0]
+    cfg = index.config
+    m = _aps_candidate_budget(index)
+    if kth_med is None:
+        if cache is not None:
+            kth_med = cache.get_radius(k, target)
+        if kth_med is None:
+            kth_med = _calibrate_kth_batched(index, q, k, m, cache=cache)
+            if cache is not None:
+                cache.put_radius(k, target, kth_med)
+    if cache is not None:
+        cents_d, aug_d, table_d = cache.device_arrays()
+    else:
+        cents_d = jnp.asarray(index.levels[0].centroids)
+        aug_d = jnp.asarray(index._augment_extra(0).astype(np.float32)) \
+            if cfg.metric == "ip" else \
+            jnp.zeros((cents_d.shape[0],), jnp.float32)
+        table_d = jnp.asarray(index._beta_table)
+    seq_d, counts_d, r_d, geo_d, cc_d = _fused_plan_probes(
+        jnp.asarray(q), cents_d, aug_d,
+        np.float32(index._max_norm_sq), np.float32(kth_med), table_d,
+        np.float32(target), m=m, metric=cfg.metric)
+
+    counts = np.asarray(counts_d, dtype=np.int64)
+    seq = np.asarray(seq_d, dtype=np.int64)
+    r_est = np.asarray(r_d, dtype=np.float64)
+    if full:
+        return RoundPlan(seq=seq, counts=counts,
+                         geo=np.asarray(geo_d, dtype=np.float64),
+                         cc=np.asarray(cc_d, dtype=np.float64),
+                         recall_est=r_est)
+    n_max = int(counts.max())
+    vmask = np.arange(n_max)[None, :] < counts[:, None]
+    sel = np.where(vmask, seq[:, :n_max], 0).astype(np.int64)
+    return sel, vmask, counts, r_est
 
 
 # ---------------------------------------------------------------------------
@@ -445,7 +662,9 @@ def plan_batch(index: QuakeIndex, q: np.ndarray, k: int,
     per-query mask.
 
     ``planner`` selects the APS probe planner: ``"vectorized"`` (default;
-    the batched implementation) or ``"loop"`` (the per-query baseline).
+    the batched host implementation), ``"fused"`` (the single-jit device
+    planner — centroid pass, estimator and selection in one jitted call)
+    or ``"loop"`` (the per-query baseline).
     ``union_cap`` bounds the number of distinct partitions the batch scans:
     the union is frequency-ranked (``pack_union`` keeps the partitions most
     queries probe), so under read skew a cap well below B*nprobe drops only
@@ -465,6 +684,7 @@ def plan_batch(index: QuakeIndex, q: np.ndarray, k: int,
                          nprobe=np.zeros(0, dtype=np.int64), n_real=0,
                          planned=np.zeros(0, dtype=np.int64))
 
+    r_est = None
     if nprobe is not None:
         cd = _centroid_dists(index, q, cent_norms)
         n = int(max(1, min(nprobe, p)))
@@ -481,8 +701,11 @@ def plan_batch(index: QuakeIndex, q: np.ndarray, k: int,
         if planner == "loop":
             sel_q, qvalid, counts = _aps_probe_counts_loop(
                 index, q, k, target)
+        elif planner == "fused":
+            sel_q, qvalid, counts, r_est = _aps_probe_counts_fused(
+                index, q, k, target, cache=cache)
         else:
-            sel_q, qvalid, counts = _aps_probe_counts_batched(
+            sel_q, qvalid, counts, r_est = _aps_probe_counts_batched(
                 index, q, k, target, cent_norms=cent_norms, cache=cache)
         nearest = sel_q[:, 0]   # APS probe sequences lead with the nearest
 
@@ -527,9 +750,162 @@ def plan_batch(index: QuakeIndex, q: np.ndarray, k: int,
         qmask = np.concatenate(
             [qmask, np.zeros((b, u_pad - n_dev), dtype=bool)], axis=1)
     eff = qmask[:, :n_real].sum(axis=1).astype(np.int64)
+    if r_est is not None:
+        # a cap that truncated a query's probes invalidates its planner
+        # estimate (it was computed at the pre-cap cutoff) — report NaN
+        # rather than overstate the achievable recall
+        r_est = np.where(eff < counts, np.nan, r_est)
     return BatchPlan(sel=sel, qmask=qmask, nprobe=eff, n_real=n_real,
                      planned=counts, anchor=np.asarray(nearest,
-                                                       dtype=np.int64))
+                                                       dtype=np.int64),
+                     recall_est=r_est)
+
+
+# ---------------------------------------------------------------------------
+# Multi-round early-exit execution (Algorithm 2 for the batched host path)
+# ---------------------------------------------------------------------------
+
+def plan_rounds(index: QuakeIndex, q: np.ndarray, k: int, target: float,
+                planner: str = "vectorized",
+                cache: Optional[PlannerCache] = None,
+                cent_norms: Optional[np.ndarray] = None) -> RoundPlan:
+    """APS probe planning for the multi-round executor: full scan-ordered
+    candidate sequences plus the seq-aligned estimator inputs (geometry
+    distances, center-center distances) the round loop re-scores recall
+    with.  ``planner`` is ``"vectorized"`` (host) or ``"fused"`` (the
+    single-jit device planner); the loop baseline has no round form."""
+    if planner == "fused":
+        return _aps_probe_counts_fused(index, q, k, target, cache=cache,
+                                       full=True)
+    return _aps_probe_counts_batched(index, q, k, target,
+                                     cent_norms=cent_norms, cache=cache,
+                                     full=True)
+
+
+def _round_windows(n_max: int, rounds: Optional[int] = None):
+    """Column windows [(c0, c1), ...] chunking a probe list of length
+    ``n_max`` into geometrically growing rounds: single-probe windows
+    while exits are most likely (Algorithm 2 exits concentrate within the
+    first few probes — the per-probe exit checks are what the fixed plan
+    lacks), then doubling windows so the hard tail amortizes dispatch.
+    A ``rounds`` budget merges the tail into the final round, so the
+    windows always cover the full planned list — ``rounds=1`` degenerates
+    to one fixed-plan scan."""
+    wins, c0, w = [], 0, 1
+    while c0 < n_max:
+        wins.append((c0, min(c0 + w, n_max)))
+        c0 += w
+        if len(wins) >= 3:          # probe-at-a-time for probes 1..3
+            w *= 2
+    if rounds is not None and rounds >= 1 and len(wins) > rounds:
+        wins = wins[:rounds - 1] + [(wins[rounds - 1][0], n_max)]
+    return wins
+
+
+def run_round_loop(plan: RoundPlan, k: int, target: float, table,
+                   rho_fn, scan_round, *, rounds: Optional[int] = None,
+                   k_keep: Optional[int] = None):
+    """Algorithm 2 round driver, shared by the host batched executor and
+    the sharded engine's ``search_batch``.
+
+    Each round, every *live* query advances through the next window of
+    its planned probe sequence; the window's partitions form the round's
+    union, and every live query additionally consumes all of its
+    not-yet-scanned probes that happen to land in that union ("union
+    riding": a partition block is streamed at most once per batch — the
+    round decomposition never re-streams what the monolithic scan would
+    read once, so early exit can only shrink the footprint).
+    ``scan_round(take, kept)`` packs and scans the round — ``take``
+    (B, M) marks the probe-sequence cells consumed this round, ``kept``
+    the union partition ids — and returns device ``(dists (B, k_keep),
+    ids (B, k_keep), stats)``.
+
+    The driver owns the device-resident running top-k
+    (``ops.topk_merge``), pulls only the per-query k-th distance each
+    round, re-estimates APS recall from that *running* radius
+    (``aps.estimate_probs_batch`` over the plan's seq-aligned candidates,
+    restricted to the still-live rows), and masks out queries whose
+    estimate cleared the target — later rounds shrink to the hard tail.
+    Queries whose top-k is not yet full never exit (no radius -> keep
+    scanning, the same rule as the sequential Algorithm 1 loop).
+    ``union_cap`` runs never reach this driver: the cap's footprint
+    bound is defined as plan-level truncation, so capped searches take
+    the one-shot fixed-plan scan (a per-round cap would re-bound each
+    round separately and let the batch total exceed the cap).
+
+    Returns (top dists, top ids — both device, ascending — nprobe (B,),
+    recall_est (B,), rounds executed, per-round trace dict, totals).
+    """
+    b, m = plan.seq.shape
+    counts = plan.counts
+    k_keep = k if k_keep is None else k_keep
+    n_max = int(counts.max(initial=1))
+    wins = _round_windows(n_max, rounds)
+    td = jnp.full((b, k_keep), MASK_DIST, jnp.float32)
+    ti = jnp.full((b, k_keep), -1, jnp.int32)
+    live = np.ones(b, dtype=bool)
+    r_est = np.asarray(plan.recall_est, dtype=np.float64).copy()
+    scanned = np.zeros((b, m), dtype=bool)
+    valid = np.ones((b, m), dtype=bool)
+    valid[:, 0] = False
+    cols = np.arange(m)[None, :]
+    within = cols < counts[:, None]
+    p_hi = int(plan.seq.max()) + 1
+    trace = {"round_live": [], "round_partitions": [],
+             "round_vectors": [], "round_comparisons": []}
+    n_rounds = 0
+    for c0, c1 in wins:
+        if not live.any():
+            break
+        avail = live[:, None] & within & ~scanned
+        base = avail & (cols >= c0) & (cols < c1)
+        if not base.any():
+            continue          # window already consumed by riding
+        kept = np.unique(plan.seq[base])
+        in_union = np.zeros(p_hi, dtype=bool)
+        in_union[kept] = True
+        take = avail & in_union[plan.seq]
+        scanned |= take
+        n_rounds += 1
+        trace["round_live"].append(int(live.sum()))
+        d, i, st = scan_round(take, kept)
+        td, ti = ops.topk_merge(td, ti, d, i, k_keep)
+        for key in ("partitions", "vectors", "comparisons"):
+            trace[f"round_{key}"].append(int(st[key]))
+        # refined recall estimate from the *running* k-th distance —
+        # live rows only; exited rows' estimates are frozen
+        rows = np.nonzero(live)[0]
+        kth = np.asarray(td[rows, k - 1], dtype=np.float64)
+        full_heap = kth < MASK_DIST
+        rho_sq = np.where(full_heap, rho_fn(kth, rows), np.inf)
+        p0, probs = aps_mod.estimate_probs_batch(
+            plan.geo[rows, 0], plan.geo[rows], plan.cc[rows], rho_sq,
+            table, valid[rows])
+        r = p0 + np.where(scanned[rows] & valid[rows], probs,
+                          0.0).sum(axis=1)
+        r_est[rows[full_heap]] = r[full_heap]
+        live[rows[full_heap & (r >= target)]] = False
+    stats = {k_: int(np.sum(v)) for k_, v in
+             (("partitions", trace["round_partitions"]),
+              ("vectors", trace["round_vectors"]),
+              ("comparisons", trace["round_comparisons"]))}
+    return (td, ti, scanned.sum(axis=1).astype(np.int64), r_est,
+            n_rounds, trace, stats)
+
+
+def _batch_rho_fn(index: QuakeIndex, q: np.ndarray):
+    """Vectorized kth-item-distance -> squared-geometry-radius map for the
+    round loop (the batched mirror of ``_rho_sq_from_item_dist``).  The
+    returned callable takes (kth, rows) where ``rows`` selects the query
+    rows ``kth`` corresponds to (the driver's live subset)."""
+    if index.config.metric == "l2":
+        return lambda kth, rows=None: aps_mod.rho_sq_batch(kth,
+                                                           metric="l2")
+    qn = np.sum(q.astype(np.float64) ** 2, axis=1)
+    m2 = index._max_norm_sq
+    return lambda kth, rows=None: aps_mod.rho_sq_batch(
+        kth, metric="ip", q_norm_sq=qn if rows is None else qn[rows],
+        max_norm_sq=m2)
 
 
 class BatchedSearchExecutor:
@@ -560,7 +936,8 @@ class BatchedSearchExecutor:
                  storage_dtype: str = "f32",
                  union_cap: Optional[int] = None,
                  planner: str = "vectorized",
-                 int8_rerank: bool = True):
+                 int8_rerank: bool = True,
+                 rounds: Optional[int] = None):
         if storage_dtype not in STORAGE_DTYPES:
             raise ValueError(f"storage_dtype must be one of "
                              f"{STORAGE_DTYPES}, got {storage_dtype!r}")
@@ -569,6 +946,10 @@ class BatchedSearchExecutor:
         self.u_bucket = u_bucket
         self.storage_dtype = storage_dtype
         self.planner = planner
+        self.rounds = rounds     # early-exit round budget for APS-planned
+                                 # searches: None = as many geometric
+                                 # rounds as the plan needs, 1 = the
+                                 # monolithic fixed-plan scan
         self.int8_rerank = int8_rerank   # exact re-rank of the int8 scan's
                                          # top-2k from a host f32 mirror
                                          # (B*2k row gather — negligible
@@ -704,15 +1085,33 @@ class BatchedSearchExecutor:
                nprobe: Optional[int] = None,
                recall_target: Optional[float] = None,
                impl: Optional[str] = None,
-               union_cap: Optional[int] = None) -> BatchResult:
+               union_cap: Optional[int] = None,
+               rounds: Optional[int] = None) -> BatchResult:
         q = np.ascontiguousarray(queries, dtype=np.float32)
         if q.ndim == 1:
             q = q[None, :]
         if q.shape[0] == 0:
             return BatchResult(ids=np.zeros((0, k), dtype=np.int64),
                                dists=np.zeros((0, k), dtype=np.float64),
-                               nprobe=np.zeros(0, dtype=np.int64))
+                               nprobe=np.zeros(0, dtype=np.int64),
+                               recall_estimate=np.zeros(0))
         snap = self.snapshot()
+        rounds = self.rounds if rounds is None else rounds
+        if rounds is not None and rounds < 1:
+            raise ValueError(f"rounds must be >= 1 or None, got {rounds}")
+        cap = self.union_cap if union_cap is None else union_cap
+        # early-exit rounds engage only where APS recall machinery exists:
+        # nprobe-pinned searches have no per-query estimate to exit on,
+        # rounds=1 forces the monolithic fixed-plan scan, the loop
+        # planner has no round (seq-aligned) form, and union_cap runs
+        # keep the one-shot capped plan (the cap's footprint bound is
+        # plan-level; per-round caps would let the batch total exceed it)
+        if nprobe is None and rounds != 1 and self.planner != "loop" \
+                and not cap:
+            target = recall_target if recall_target is not None \
+                else self.index.config.recall_target
+            return self._search_rounds(q, k, target, rounds, impl=impl,
+                                       snap=snap)
         plan = plan_batch(self.index, q, k, nprobe=nprobe,
                           recall_target=recall_target,
                           u_bucket=self.u_bucket,
@@ -750,7 +1149,88 @@ class BatchedSearchExecutor:
             vectors_scanned=int(sizes_sel.sum()),
             comparisons=int((plan.qmask[:, :plan.n_real].astype(np.int64)
                              * sizes_sel[None, :]).sum()),
-            nprobe=plan.nprobe)
+            nprobe=plan.nprobe, recall_estimate=plan.recall_est)
+
+    def _search_rounds(self, q: np.ndarray, k: int, target: float,
+                       rounds: Optional[int],
+                       impl: Optional[str] = None,
+                       snap=None) -> BatchResult:
+        """Multi-round early-exit search (Algorithm 2 semantics): the
+        planned probe sequences are chunked into geometrically growing
+        rounds; each round packs only *live* queries' next probes
+        (``ops.pack_round``), scans them once
+        (``scan_selected_topk``/``_q8``), folds the result into a
+        device-resident running top-k, and the shared round driver
+        re-estimates per-query recall from the running k-th distance —
+        queries that clear the target stop paying for further rounds."""
+        idx = self.index
+        b = q.shape[0]
+        p = idx.levels[0].num_partitions
+        snap = self.snapshot() if snap is None else snap
+        rplan = plan_rounds(idx, q, k, target, planner=self.planner,
+                            cache=self.planner_cache,
+                            cent_norms=self._cent_norms)
+        q_dev = jnp.asarray(q)
+        seq_dev = jnp.asarray(rplan.seq.astype(np.int32))
+        prio0 = jnp.zeros((p,), jnp.int32)   # uncapped: no anchor boost
+        rerank = (snap.scales is not None and self.int8_rerank
+                  and self._host_f32 is not None)
+        k_keep = 2 * k if rerank else k
+        metric = idx.config.metric
+
+        def scan_round(take, kept):
+            n_real = max(len(kept), 1)
+            u_pad = max(-(-n_real // self.u_bucket) * self.u_bucket, 1)
+            n_dev = min(u_pad, p)
+            sel_d, qmask_d = ops.pack_round(
+                seq_dev, jnp.asarray(take), prio0, p=p, n_union=n_dev)
+            sel = np.array(sel_d, dtype=np.int64)   # host copies (writable)
+            qmask = np.array(qmask_d)
+            if n_real < len(sel):        # inert tail (bucket padding)
+                sel[n_real:] = sel[0]
+                qmask[:, n_real:] = False
+            if u_pad > n_dev:
+                sel = np.concatenate(
+                    [sel, np.full(u_pad - n_dev, sel[0], dtype=sel.dtype)])
+                qmask = np.concatenate(
+                    [qmask, np.zeros((b, u_pad - n_dev), dtype=bool)], 1)
+            sizes_sel = self._sizes[sel[:n_real]]
+            st = {"partitions": int(n_real),
+                  "vectors": int(sizes_sel.sum()),
+                  "comparisons": int(
+                      (qmask[:, :n_real].astype(np.int64)
+                       * sizes_sel[None, :]).sum())}
+            sel_dev = jnp.asarray(sel.astype(np.int32))
+            qmask_dev = jnp.asarray(qmask)
+            if snap.scales is not None:
+                d, flat = ops.scan_selected_topk_q8(
+                    q_dev, snap.data, snap.scales, self._valid,
+                    sel_dev, qmask_dev, k_keep, metric=metric,
+                    centroids=snap.centroids)
+            else:
+                d, flat = ops.scan_selected_topk(
+                    q_dev, snap.data, self._valid, sel_dev, qmask_dev,
+                    k_keep, metric=metric, impl=impl or self.impl)
+            return d, flat, st
+
+        td, ti, nprobe, r_est, n_rounds, trace, stats = run_round_loop(
+            rplan, k, target, idx._beta_table, _batch_rho_fn(idx, q),
+            scan_round, rounds=rounds, k_keep=k_keep)
+        if rerank:
+            dd, flat = self._rerank_exact(q, np.asarray(ti), k)
+        else:
+            dd = np.asarray(td, dtype=np.float64)[:, :k]
+            flat = np.asarray(ti)[:, :k]
+        ids = np.where(flat >= 0,
+                       self._flat_ids[np.maximum(flat, 0)], -1)
+        dd = np.where(dd >= MASK_DIST, np.inf, dd)
+        return BatchResult(
+            ids=ids.astype(np.int64), dists=dd,
+            partitions_scanned=stats["partitions"],
+            vectors_scanned=stats["vectors"],
+            comparisons=stats["comparisons"],
+            nprobe=nprobe, recall_estimate=r_est,
+            rounds=n_rounds, round_trace=trace)
 
 
 def get_executor(index: QuakeIndex,
@@ -777,19 +1257,23 @@ def batch_search(index: QuakeIndex, queries: np.ndarray, k: int,
                  recall_target: Optional[float] = None,
                  impl: str = "auto",
                  union_cap: Optional[int] = None,
-                 storage_dtype: Optional[str] = None) -> BatchResult:
+                 storage_dtype: Optional[str] = None,
+                 rounds: Optional[int] = None) -> BatchResult:
     """Scan-each-partition-once batched search over the dynamic index.
 
     Partition selection per query uses centroid order with a fixed
     ``nprobe`` (the policy in the paper's Fig. 5 experiment), or, when
     ``nprobe`` is None, APS-driven per-query probe counts (see
-    ``plan_batch``).  The scan itself is one device-resident packed union
-    scan per batch; ``storage_dtype`` picks the f32/bf16/int8 snapshot
-    format and ``union_cap`` bounds the scanned union under read skew.
+    ``plan_batch``) executed as multi-round early-exit probe rounds
+    (Algorithm 2; ``rounds=1`` forces the monolithic fixed-plan scan).
+    The scan itself is device-resident packed union scans;
+    ``storage_dtype`` picks the f32/bf16/int8 snapshot format and
+    ``union_cap`` bounds the scanned union under read skew (plan-level
+    truncation — capped searches take the one-shot fixed plan).
     """
     return get_executor(index, storage_dtype).search(
         queries, k, nprobe=nprobe, recall_target=recall_target, impl=impl,
-        union_cap=union_cap)
+        union_cap=union_cap, rounds=rounds)
 
 
 def per_query_search(index: QuakeIndex, queries: np.ndarray, k: int,
@@ -807,7 +1291,7 @@ def per_query_search(index: QuakeIndex, queries: np.ndarray, k: int,
                            nprobe=np.zeros(0, dtype=np.int64))
     ex = get_executor(index)
     ids, dists, parts, vecs, comps = [], [], 0, 0, 0
-    nps = []
+    nps, rests, max_rounds = [], [], 1
     for row in q:
         r = ex.search(row[None, :], k, nprobe=nprobe,
                       recall_target=recall_target, impl=impl)
@@ -817,6 +1301,12 @@ def per_query_search(index: QuakeIndex, queries: np.ndarray, k: int,
         vecs += r.vectors_scanned
         comps += r.comparisons
         nps.append(int(r.nprobe[0]) if r.nprobe is not None else 0)
+        rests.append(float(r.recall_estimate[0])
+                     if r.recall_estimate is not None else np.nan)
+        max_rounds = max(max_rounds, r.rounds)
+    rest = np.asarray(rests)
     return BatchResult(ids=np.stack(ids), dists=np.stack(dists),
                        partitions_scanned=parts, vectors_scanned=vecs,
-                       comparisons=comps, nprobe=np.asarray(nps))
+                       comparisons=comps, nprobe=np.asarray(nps),
+                       recall_estimate=None if np.isnan(rest).all()
+                       else rest, rounds=max_rounds)

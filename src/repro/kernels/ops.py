@@ -146,6 +146,36 @@ def pack_union(selected: Array, n_union: int,
     return sel, qmask
 
 
+@functools.partial(jax.jit, static_argnames=("p", "n_union"))
+def pack_round(sel_q: Array, qvalid: Array, priority: Array, *,
+               p: int, n_union: int) -> Tuple[Array, Array]:
+    """Round-aware masked pack: one probe-round's worth of per-query
+    selections -> a packed union scan plan.
+
+    ``sel_q`` (B, W) holds the probe-list columns each query would scan
+    this round; ``qvalid`` (B, W) masks them (False = column past the
+    query's planned count, or the query already met its recall target —
+    the early-exit live mask folds in here, so later rounds rank only
+    *live* demand).  ``priority`` (P,) int32 feeds the anchor guarantee
+    exactly like ``pack_union`` (pass zeros when uncapped).  Returns the
+    same (sel (n_union,), qmask (B, n_union)) contract as ``pack_union``.
+    """
+    b = sel_q.shape[0]
+    rows = jnp.broadcast_to(jnp.arange(b)[:, None], sel_q.shape)
+    selected = jnp.zeros((b, p), jnp.bool_).at[rows, sel_q].max(qvalid)
+    return pack_union(selected, n_union, priority=priority)
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def topk_merge(dists_a: Array, idx_a: Array, dists_b: Array, idx_b: Array,
+               k: int) -> Tuple[Array, Array]:
+    """Device-resident merge of two per-query top-k candidate lists
+    (ascending by distance; misses = MASK_DIST / -1).  The multi-round
+    batched executor folds each round's scan output into its running
+    top-k with this — the accumulator never leaves the device."""
+    return ref.merge_topk(dists_a, idx_a, dists_b, idx_b, k)
+
+
 def scan_selected_topk(queries: Array, data: Array, valid: Array,
                        sel: Array, qmask: Array, k: int, *,
                        metric: str = "l2", impl: str = "auto",

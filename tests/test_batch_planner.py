@@ -113,7 +113,7 @@ def test_vectorized_planner_parity_with_loop(built, metric, b):
     # GEMM round differently, so each impl gets the same matrix)
     s_l, v_l, c_l = mq._aps_probe_counts_loop(idx, q, 10, 0.9, kth_med=kth,
                                               geo=geo)
-    s_b, v_b, c_b = mq._aps_probe_counts_batched(idx, q, 10, 0.9,
+    s_b, v_b, c_b, _ = mq._aps_probe_counts_batched(idx, q, 10, 0.9,
                                                  kth_med=kth, geo=geo)
     np.testing.assert_array_equal(c_l, c_b)
     np.testing.assert_array_equal(v_l, v_b)
@@ -128,7 +128,7 @@ def test_vectorized_planner_parity_infinite_radius(built):
     geo = mq._centroid_geo_batch(idx, q)
     s_l, v_l, c_l = mq._aps_probe_counts_loop(idx, q, 10, 0.9,
                                               kth_med=np.inf, geo=geo)
-    s_b, v_b, c_b = mq._aps_probe_counts_batched(idx, q, 10, 0.9,
+    s_b, v_b, c_b, _ = mq._aps_probe_counts_batched(idx, q, 10, 0.9,
                                                  kth_med=np.inf, geo=geo)
     np.testing.assert_array_equal(c_l, c_b)
     np.testing.assert_array_equal(s_l, s_b)
@@ -141,12 +141,12 @@ def test_device_centroid_pass_close_to_host(built):
     ds, idx = built
     q = datasets.queries_near(ds, 16, seed=13).astype(np.float32)
     kth = mq._calibrate_kth_loop(idx, q, 10, 0.9)
-    s_h, v_h, c_h = mq._aps_probe_counts_batched(idx, q, 10, 0.9,
+    s_h, v_h, c_h, _ = mq._aps_probe_counts_batched(idx, q, 10, 0.9,
                                                  kth_med=kth)
     # and the loop oracle on its own per-query GEMV pass stays equivalent
     s_g, v_g, c_g = mq._aps_probe_counts_loop(idx, q, 10, 0.9, kth_med=kth)
     assert np.mean(c_g == c_h) >= 0.9
-    s_d, v_d, c_d = mq._aps_probe_counts_batched(idx, q, 10, 0.9,
+    s_d, v_d, c_d, _ = mq._aps_probe_counts_batched(idx, q, 10, 0.9,
                                                  kth_med=kth,
                                                  pass_impl="scan_topk")
     jac = []
@@ -306,3 +306,124 @@ def test_executor_norm_cache_invalidated_with_snapshot(built):
     r2 = fresh.search(q, 5, nprobe=4)
     np.testing.assert_array_equal(r1.ids, r2.ids)
     np.testing.assert_array_equal(ex._cent_norms, fresh._cent_norms)
+
+
+# ---------------------------------------------------------------------------
+# fused single-jit device planner
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("metric", ["l2", "ip"])
+def test_fused_planner_matches_host_selection_oracle(built, metric):
+    """The fused single-jit planner must select exactly the probe sets
+    the host (numpy) estimator+selection picks when both consume the same
+    device centroid pass (``pass_impl="scan_topk"``) at a shared
+    calibrated radius — the selection stage itself adds no divergence."""
+    ds, _ = built
+    idx = QuakeIndex.build(ds.vectors, num_partitions=32, kmeans_iters=3,
+                           config=QuakeConfig(metric=metric))
+    q = datasets.queries_near(ds, 16, seed=31).astype(np.float32)
+    kth = mq._calibrate_kth_loop(idx, q, 10, 0.9)
+    s_h, v_h, c_h, r_h = mq._aps_probe_counts_batched(
+        idx, q, 10, 0.9, kth_med=kth, pass_impl="scan_topk")
+    s_f, v_f, c_f, r_f = mq._aps_probe_counts_fused(
+        idx, q, 10, 0.9, kth_med=kth)
+    np.testing.assert_array_equal(c_h, c_f)
+    for i in range(16):
+        assert set(s_h[i][v_h[i]].tolist()) == \
+            set(s_f[i][v_f[i]].tolist()), i
+    np.testing.assert_allclose(r_f, r_h, rtol=5e-3, atol=1e-3)
+
+
+def test_fused_planner_infinite_radius_fallback(built):
+    """No radius -> conservative full candidate scan, like the host."""
+    ds, idx = built
+    q = datasets.queries_near(ds, 5, seed=32).astype(np.float32)
+    s_f, v_f, c_f, r_f = mq._aps_probe_counts_fused(
+        idx, q, 10, 0.9, kth_med=np.inf)
+    assert (c_f == mq._aps_candidate_budget(idx)).all()
+    assert np.isnan(r_f).all()
+
+
+def test_fused_planner_no_host_transfer(built):
+    """The acceptance bar: between the centroid pass and probe selection
+    there is no host round-trip.  With all operands device-resident the
+    whole fused planner runs under a transfer guard that forbids any
+    implicit host<->device transfer."""
+    import jax
+    ds, idx = built
+    q = datasets.queries_near(ds, 8, seed=33).astype(np.float32)
+    m = mq._aps_candidate_budget(idx)
+    cfg = idx.config
+    q_d = jax.device_put(q)
+    cents_d = jax.device_put(idx.levels[0].centroids)
+    aug_d = jax.device_put(np.zeros(idx.num_partitions, np.float32))
+    table_d = jax.device_put(np.asarray(idx._beta_table))
+    mns_d = jax.device_put(np.float32(idx._max_norm_sq))
+    kth_d = jax.device_put(np.float32(3.0))
+    tgt_d = jax.device_put(np.float32(0.9))
+    args = (q_d, cents_d, aug_d, mns_d, kth_d, table_d, tgt_d)
+    mq._fused_plan_probes(*args, m=m, metric=cfg.metric)   # compile
+    with jax.transfer_guard("disallow"):
+        out = mq._fused_plan_probes(*args, m=m, metric=cfg.metric)
+        jax.block_until_ready(out)
+    seq, counts = np.asarray(out[0]), np.asarray(out[1])
+    assert seq.shape == (8, m) and (counts >= 1).all()
+
+
+def test_fused_plan_rounds_close_to_host(built):
+    """plan_rounds(planner="fused") returns the same round plan as the
+    host planner up to float rounding (same calibrated radius)."""
+    ds, idx = built
+    q = datasets.queries_near(ds, 12, seed=34).astype(np.float32)
+    kth = mq._calibrate_kth_loop(idx, q, 10, 0.9)
+    rp_h = mq._aps_probe_counts_batched(idx, q, 10, 0.9, kth_med=kth,
+                                        pass_impl="scan_topk", full=True)
+    rp_f = mq._aps_probe_counts_fused(idx, q, 10, 0.9, kth_med=kth,
+                                      full=True)
+    np.testing.assert_array_equal(rp_h.counts, rp_f.counts)
+    np.testing.assert_array_equal(rp_h.seq[:, 0], rp_f.seq[:, 0])
+    np.testing.assert_allclose(rp_f.geo, rp_h.geo, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(rp_f.cc, rp_h.cc, rtol=1e-4, atol=1e-4)
+
+
+def test_fused_executor_end_to_end(built):
+    """BatchedSearchExecutor(planner="fused"): the device planner drives
+    the round executor end to end at equivalent recall."""
+    ds, idx = built
+    q = datasets.queries_near(ds, 16, seed=35)
+    gt = ds.ground_truth(q, 10)
+    def rec(r):
+        return np.mean([len(set(r.ids[i].tolist()) & set(gt[i].tolist()))
+                        / 10 for i in range(16)])
+    ex_f = mq.BatchedSearchExecutor(idx, planner="fused")
+    ex_v = mq.BatchedSearchExecutor(idx)
+    r_f = ex_f.search(q, 10, recall_target=0.9)
+    r_v = ex_v.search(q, 10, recall_target=0.9)
+    assert r_f.rounds >= 1 and r_f.recall_estimate is not None
+    assert rec(r_f) >= 0.8
+    assert abs(rec(r_f) - rec(r_v)) <= 0.1
+
+
+# ---------------------------------------------------------------------------
+# PlannerCache radius TTL through QuakeConfig
+# ---------------------------------------------------------------------------
+
+def test_planner_radius_ttl_from_config(built):
+    ds, _ = built
+    idx = QuakeIndex.build(ds.vectors[:2000], num_partitions=16,
+                           kmeans_iters=3,
+                           config=QuakeConfig(planner_radius_ttl=1))
+    cache = mq.PlannerCache(idx).ensure_fresh()
+    assert cache.radius_ttl == 1
+    cache.put_radius(10, 0.9, 2.5)
+    assert cache.get_radius(10, 0.9) == 2.5     # first reuse
+    assert cache.get_radius(10, 0.9) is None    # TTL expired
+    # executor and sharded-engine caches inherit the config value
+    ex = mq.get_executor(idx)
+    assert ex.planner_cache.radius_ttl == 1
+    # explicit argument still overrides
+    assert mq.PlannerCache(idx, radius_ttl=7).radius_ttl == 7
+    # default stays the class default when the config is untouched
+    idx2 = QuakeIndex.build(ds.vectors[:2000], num_partitions=16,
+                            kmeans_iters=3)
+    assert mq.PlannerCache(idx2).radius_ttl == mq.PlannerCache.RADIUS_TTL

@@ -245,3 +245,37 @@ def test_multidevice_subprocess():
                          capture_output=True, text=True, timeout=900)
     assert out.returncode == 0, out.stderr[-3000:]
     assert "MULTIDEV_OK" in out.stdout
+
+
+def test_engine_search_batch_earlyexit_rounds(snap_and_data):
+    """APS-driven engine search_batch runs the same multi-round
+    early-exit loop as the host executor: footprint never above the
+    rounds=1 fixed plan, per-query recall estimates populated, live
+    counts non-increasing, and recall equivalent to the host round
+    path."""
+    snap, ds = snap_and_data
+    idx = QuakeIndex.build(ds.vectors, num_partitions=32, kmeans_iters=4)
+    eng = ShardedQuakeEngine(_mesh111(), EngineConfig(
+        k=10, part_axes=("pod", "data")))
+    q = datasets.queries_near(ds, 16, seed=8)
+    r_fix = eng.search_batch(idx, q, 10, recall_target=0.9, rounds=1)
+    assert r_fix.rounds == 1 and r_fix.recall_estimate is not None
+    r_ee = eng.search_batch(idx, q, 10, recall_target=0.9)
+    assert r_ee.vectors_scanned <= r_fix.vectors_scanned
+    assert r_ee.comparisons <= r_fix.comparisons
+    assert r_ee.recall_estimate is not None
+    tr = r_ee.round_trace
+    assert tr is not None and len(tr["round_live"]) == r_ee.rounds
+    assert all(a >= b for a, b in zip(tr["round_live"],
+                                      tr["round_live"][1:]))
+    gt = ds.ground_truth(q, 10)
+    def rec(r):
+        return np.mean([len(set(r.ids[i].tolist()) & set(gt[i].tolist()))
+                        / 10 for i in range(16)])
+    assert rec(r_ee) >= 0.8
+    from repro.core.multiquery import batch_search
+    r_host = batch_search(idx, q, 10, recall_target=0.9)
+    assert abs(rec(r_ee) - rec(r_host)) <= 0.1
+    # a union cap (plan-level truncation) falls back to the one-shot path
+    r_cap = eng.search_batch(idx, q, 10, recall_target=0.9, union_cap=8)
+    assert r_cap.rounds == 1

@@ -188,3 +188,195 @@ def test_executors_cached_per_storage_dtype(built):
     assert get_executor(idx, "int8") is get_executor(idx, "int8")
     assert get_executor(idx, "int8") is not get_executor(idx)
     assert get_executor(idx, "int8").storage_dtype == "int8"
+
+
+# ---------------------------------------------------------------------------
+# Multi-round early-exit executor (Algorithm 2)
+# ---------------------------------------------------------------------------
+
+def _recall_of(ids, gt):
+    k = gt.shape[1]
+    return np.mean([len(set(ids[i].tolist()) & set(gt[i].tolist())) / k
+                    for i in range(len(gt))])
+
+
+def test_rounds1_is_fixed_plan(built):
+    """rounds=1 forces the monolithic fixed-plan scan: one round, no
+    trace, stats identical to the packed plan, and byte-identical results
+    across repeated calls (the pre-round-executor behaviour)."""
+    ds, idx = built
+    q = datasets.queries_near(ds, 16, seed=21)
+    ex = get_executor(idx)
+    r1 = ex.search(q, 10, recall_target=0.9, rounds=1)
+    r2 = ex.search(q, 10, recall_target=0.9, rounds=1)
+    assert r1.rounds == 1 and r1.round_trace is None
+    np.testing.assert_array_equal(r1.ids, r2.ids)
+    np.testing.assert_array_equal(r1.dists, r2.dists)
+    plan = plan_batch(idx, np.asarray(q, np.float32), 10,
+                      recall_target=0.9, cache=ex.planner_cache,
+                      cent_norms=ex._cent_norms)
+    assert r1.partitions_scanned == plan.n_real
+    np.testing.assert_array_equal(r1.nprobe, plan.nprobe)
+
+
+def test_earlyexit_subset_of_fixed_plan(built):
+    """The round path scans a per-query *prefix* of the fixed plan under
+    union riding, so: never more streamed vectors, per-rank distances
+    dominate the fixed path's, and queries that never exited early get
+    exactly the fixed-plan result."""
+    ds, idx = built
+    q = datasets.queries_near(ds, 24, seed=22)
+    ex = get_executor(idx)
+    r_fix = ex.search(q, 10, recall_target=0.9, rounds=1)
+    r_ee = ex.search(q, 10, recall_target=0.9)
+    assert r_ee.vectors_scanned <= r_fix.vectors_scanned
+    assert r_ee.comparisons <= r_fix.comparisons
+    assert (r_ee.nprobe <= r_fix.nprobe).all()
+    d_fix = np.where(np.isfinite(r_fix.dists), r_fix.dists, np.inf)
+    d_ee = np.where(np.isfinite(r_ee.dists), r_ee.dists, np.inf)
+    assert (d_ee >= d_fix - 1e-6).all()
+    full = r_ee.nprobe >= r_fix.nprobe       # scanned the whole plan
+    assert full.any()
+    for i in np.nonzero(full)[0]:
+        assert set(r_ee.ids[i].tolist()) == set(r_fix.ids[i].tolist()), i
+
+
+def test_earlyexit_monotone_round_budget(built):
+    """More rounds = more exit opportunities: scanned vectors and
+    comparisons are non-increasing in the round budget, and recall stays
+    within a narrow band of the fixed plan's."""
+    ds, idx = built
+    q = datasets.queries_near(ds, 24, seed=23)
+    gt = ds.ground_truth(q, 10)
+    ex = get_executor(idx)
+    vecs, comps, recs = [], [], []
+    for rounds in (1, 2, 3, None):
+        r = ex.search(q, 10, recall_target=0.9, rounds=rounds)
+        vecs.append(r.vectors_scanned)
+        comps.append(r.comparisons)
+        recs.append(_recall_of(r.ids, gt))
+    assert all(a >= b for a, b in zip(vecs, vecs[1:])), vecs
+    assert all(a >= b for a, b in zip(comps, comps[1:])), comps
+    assert min(recs) >= 0.8
+    assert recs[0] - recs[-1] <= 0.05, recs
+
+
+def test_earlyexit_trace_and_recall_estimate(built):
+    """APS-planned batched results must carry the per-query recall
+    estimate (the satellite contract for QuakeIndex.search_batch) and the
+    per-round trace; exited queries report estimates above the target."""
+    ds, idx = built
+    q = datasets.queries_near(ds, 24, seed=24)
+    r = idx.search_batch(q, 10, recall_target=0.9)
+    assert r.recall_estimate is not None and len(r.recall_estimate) == 24
+    tr = r.round_trace
+    assert tr is not None and len(tr["round_live"]) == r.rounds
+    assert tr["round_live"][0] == 24
+    assert all(a >= b for a, b in zip(tr["round_live"], tr["round_live"][1:]))
+    exited = r.nprobe < np.asarray(
+        plan_batch(idx, np.asarray(q, np.float32), 10, recall_target=0.9,
+                   ).planned)
+    assert (r.recall_estimate[exited] >= 0.9 - 1e-9).all()
+    # nprobe-pinned searches have no estimator: no estimate, one round
+    rp = idx.search_batch(q, 10, nprobe=4)
+    assert rp.recall_estimate is None and rp.rounds == 1
+
+
+@pytest.mark.parametrize("dtype", ["bf16", "int8"])
+def test_earlyexit_storage_dtypes(built, dtype):
+    """The round path runs all storage dtypes: recall within quantization
+    tolerance of the f32 round path, footprint never above the fixed
+    plan, and the masked-slot contract holds."""
+    ds, idx = built
+    q = datasets.queries_near(ds, 24, seed=25)
+    gt = ds.ground_truth(q, 10)
+    r32 = batch_search(idx, q, 10, recall_target=0.9)
+    rq = batch_search(idx, q, 10, recall_target=0.9, storage_dtype=dtype)
+    rq_fix = batch_search(idx, q, 10, recall_target=0.9,
+                          storage_dtype=dtype, rounds=1)
+    assert rq.vectors_scanned <= rq_fix.vectors_scanned
+    assert _recall_of(r32.ids, gt) - _recall_of(rq.ids, gt) <= 0.06
+    miss = ~np.isfinite(rq.dists)
+    assert (rq.ids[miss] == -1).all() and (rq.ids[~miss] >= 0).all()
+
+
+def test_earlyexit_snapshot_refresh_interaction(built):
+    """Early-exit searches ride the same journal-driven snapshot
+    coherence: bf16 refreshes through the delta path, int8 full-rebuilds
+    on any content delta, and fresh inserts are visible to the round
+    path either way."""
+    ds, _ = built
+    for dtype, want_delta in (("bf16", True), ("int8", False)):
+        idx = QuakeIndex.build(ds.vectors[:2000], num_partitions=16,
+                               kmeans_iters=3)
+        ex = get_executor(idx, dtype)
+        q = datasets.queries_near(ds, 6, seed=26)
+        r0 = ex.search(q, 5, recall_target=0.9)
+        assert r0.rounds >= 1 and ex.full_rebuilds == 1
+        new_ids = np.arange(9000, 9006)
+        idx.insert(q * 0.999, new_ids)
+        r = ex.search(q, 5, recall_target=0.9)
+        if want_delta:
+            assert ex.delta_refreshes == 1 and ex.full_rebuilds == 1
+        else:
+            assert ex.delta_refreshes == 0 and ex.full_rebuilds == 2
+        assert set(r.ids.ravel().tolist()) & set(new_ids.tolist())
+
+
+def test_earlyexit_union_cap_falls_back_to_fixed_plan(built):
+    """union_cap's footprint bound is plan-level truncation, so capped
+    searches keep the one-shot capped plan (a per-round cap would let
+    the batch total exceed the cap): one round, total partitions within
+    the anchor-floored cap, every query keeps a hit, and truncated
+    queries report no (NaN) planner recall estimate."""
+    ds, idx = built
+    q = datasets.queries_near(ds, 32, seed=27)
+    ex = get_executor(idx)
+    r = ex.search(q, 10, recall_target=0.9, union_cap=6)
+    assert r.rounds == 1 and r.round_trace is None
+    plan = plan_batch(idx, np.asarray(q, np.float32), 10,
+                      recall_target=0.9, union_cap=6,
+                      cache=ex.planner_cache, cent_norms=ex._cent_norms)
+    anchors = len(np.unique(plan.anchor))
+    assert r.partitions_scanned <= max(6, anchors)
+    assert (r.ids[:, 0] >= 0).all()
+    assert np.isfinite(r.dists[:, 0]).all()
+    truncated = plan.nprobe < plan.planned
+    assert truncated.any(), "cap did not truncate; tighten the setup"
+    assert np.isnan(plan.recall_est[truncated]).all()
+    assert np.isfinite(plan.recall_est[~truncated]).all()
+
+
+def test_rounds_budget_validation(built):
+    ds, idx = built
+    q = datasets.queries_near(ds, 4, seed=29)
+    with pytest.raises(ValueError):
+        get_executor(idx).search(q, 10, recall_target=0.9, rounds=0)
+
+
+def test_earlyexit_b1_matches_per_query(built):
+    """B=1 round search is per_query_search's unit of work: identical
+    results and probe counts, and the recall estimate survives the
+    per-query aggregation."""
+    ds, idx = built
+    q = datasets.queries_near(ds, 6, seed=28)
+    rp = per_query_search(idx, q, 10, recall_target=0.9)
+    assert rp.recall_estimate is not None
+    for i in range(6):
+        rb = batch_search(idx, q[i], 10, recall_target=0.9)
+        assert set(rp.ids[i].tolist()) == set(rb.ids[0].tolist()), i
+        assert rp.nprobe[i] == rb.nprobe[0], i
+
+
+def test_round_windows_cover_and_budget():
+    from repro.core.multiquery import _round_windows
+    for n_max in (1, 2, 5, 17, 32):
+        for rounds in (None, 1, 2, 3, 10):
+            wins = _round_windows(n_max, rounds)
+            # contiguous, non-overlapping, full coverage
+            assert wins[0][0] == 0 and wins[-1][1] == n_max
+            for (a0, a1), (b0, b1) in zip(wins, wins[1:]):
+                assert a1 == b0 and a0 < a1
+            if rounds is not None:
+                assert len(wins) <= rounds or len(wins) == 1
+    assert _round_windows(32, 1) == [(0, 32)]

@@ -1,0 +1,150 @@
+"""Serving-runtime cell: ServingRuntime vs the per-op replay baseline.
+
+Replays the workload generator's skewed read-write mix twice over
+identically built indexes:
+
+  baseline   the legacy ``launch/serve.py`` loop — one host APS search per
+             query, a full maintenance pass after every operation.
+  runtime    ``core/serving.py`` — micro-batched queries through the
+             batched executor with cross-batch union riding, the
+             journal-invalidated result cache, and drift-triggered
+             maintenance.
+
+Reports end-to-end query throughput (total queries / serving wall time,
+ground-truth work excluded for both sides), mean recall against the
+incremental brute-force ground truth, p50/p99 per-query latency (queue
+wait included for the runtime — that *is* its serving latency), riding
+and cache telemetry, and the maintenance histories.  ``results/
+perf_quake.json`` gets the cell under ``"serving"``; the assertion flags
+(``--min-throughput-ratio``, ``--max-recall-gap``) make it the CI gate:
+the runtime must clear 1.5x baseline throughput within a point of
+recall on the skewed smoke mix.
+"""
+from __future__ import annotations
+
+import argparse
+
+import numpy as np
+
+from repro.core import QuakeConfig, ServingConfig
+from repro.data import datasets, workload
+from repro.launch.serve import replay_per_op, replay_runtime
+
+from .common import merge_results
+
+OUT_PATH = "results/perf_quake.json"
+
+
+def skewed_mix(n=20_000, dim=32, n_ops=24, queries_per_op=256,
+               vectors_per_op=500, read_fraction=0.75, query_skew=1.2,
+               write_skew=0.6, delete_fraction=0.2, seed=0):
+    """The generator's skewed read-write mix (paper §7.1 regime: Zipfian
+    reads over hot clusters + clustered writes) — the serving cell's
+    workload."""
+    ds = datasets.clustered(n, dim, n_clusters=max(n // 500, 16), seed=seed)
+    return workload.generate(ds, workload.WorkloadConfig(
+        n_operations=n_ops, vectors_per_op=vectors_per_op,
+        read_fraction=read_fraction, delete_fraction=delete_fraction,
+        query_skew=query_skew, write_skew=write_skew,
+        queries_per_op=queries_per_op, seed=seed),
+        initial_fraction=0.5)
+
+
+def run(n=20_000, dim=32, n_ops=24, queries_per_op=256, k=10, target=0.9,
+        seed=0, flush_size=64, rounds=2, cache_bits=16, cache_tol=None,
+        min_throughput_ratio=None, max_recall_gap=None,
+        out_path=OUT_PATH, verbose=False):
+    wl = skewed_mix(n=n, dim=dim, n_ops=n_ops,
+                    queries_per_op=queries_per_op, seed=seed)
+    cfg = QuakeConfig(metric=wl.dataset.metric, recall_target=target)
+    if cache_tol is None:
+        # tolerance scaled to the generator's query jitter (0.05 per dim):
+        # same-base repeats land within ~2 * 0.05 * sqrt(2 d); distinct
+        # bases are far outside it
+        cache_tol = 0.2 * float(np.sqrt(dim))
+    common = dict(
+        k=k, recall_target=target, rounds=rounds, flush_size=flush_size,
+        interleave_rounds=0,     # accumulate the op's batches, run the
+                                 # rounds co-active at drain: maximal
+                                 # cross-batch riding and O(1) scan shapes
+        b_bucket=64,
+        maint_min_ops=6, maint_dirty_frac=0.5)
+    # the gated config serves exactly: cache keyed on exact query bytes
+    # (only byte-identical repeats hit), so its recall is the runtime's
+    # own, not the cache approximation's
+    scfg = ServingConfig(cache_entries=8192, cache_bits=0, cache_tol=0.0,
+                         **common)
+    # the approximate-cache variant (QVCache regime: LSH key + exemplar
+    # tolerance) is reported alongside, ungated — it trades a bounded
+    # recall slice for cache-hit throughput
+    scfg_approx = ServingConfig(cache_entries=8192, cache_bits=cache_bits,
+                                cache_tol=cache_tol, **common)
+
+    print(f"== serving cell: N={n} ops={n_ops} q/op={queries_per_op} "
+          f"skew={wl.config.query_skew} ==")
+    base = replay_per_op(wl, cfg, k, verbose=verbose, settle=True)
+    print(f"baseline  per-op: {base['qps']:>8} qps  "
+          f"recall={base['mean_recall']}  p99={base['p99_latency_us']}us")
+    run_ = replay_runtime(wl, cfg, scfg, verbose=verbose, warm=True,
+                          settle=True)
+    print(f"runtime serving: {run_['qps']:>8} qps  "
+          f"recall={run_['mean_recall']}  p99={run_['p99_latency_us']}us  "
+          f"riding_savings={run_['riding_savings']}  "
+          f"maint={run_['maintenance_runs']} "
+          f"({','.join(run_['maintenance_reasons']) or 'none'})")
+    run_c = replay_runtime(wl, cfg, scfg_approx, verbose=verbose, warm=True,
+                           settle=True)
+    print(f"runtime +approx cache: {run_c['qps']:>8} qps  "
+          f"recall={run_c['mean_recall']}  "
+          f"cache_hits={run_c['cache_hits']}")
+
+    ratio = run_["qps"] / max(base["qps"], 1e-9)
+    gap = base["mean_recall"] - run_["mean_recall"]
+    out = {"n": n, "dim": dim, "n_ops": n_ops,
+           "queries_per_op": queries_per_op, "recall_target": target,
+           "query_skew": wl.config.query_skew,
+           "baseline": base, "runtime": run_,
+           "runtime_approx_cache": run_c,
+           "throughput_ratio": round(ratio, 2),
+           "recall_gap": round(gap, 4),
+           "approx_cache_speedup": round(
+               run_c["qps"] / max(run_["qps"], 1e-9), 2),
+           "approx_cache_recall_cost": round(
+               run_["mean_recall"] - run_c["mean_recall"], 4)}
+    print(f"serving: runtime {ratio:.2f}x baseline throughput, "
+          f"recall gap {gap:+.4f}; approx cache "
+          f"{out['approx_cache_speedup']}x more at "
+          f"{out['approx_cache_recall_cost']} recall cost")
+    merge_results(out_path, "serving", out)
+    if min_throughput_ratio is not None:
+        assert ratio >= min_throughput_ratio, \
+            (f"serving runtime {ratio:.2f}x < required "
+             f"{min_throughput_ratio}x baseline throughput")
+    if max_recall_gap is not None:
+        assert gap <= max_recall_gap, \
+            f"serving recall gap {gap:.4f} > allowed {max_recall_gap}"
+    return out
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=20_000)
+    ap.add_argument("--dim", type=int, default=32)
+    ap.add_argument("--ops", type=int, default=24)
+    ap.add_argument("--queries-per-op", type=int, default=256)
+    ap.add_argument("--k", type=int, default=10)
+    ap.add_argument("--target", type=float, default=0.9)
+    ap.add_argument("--rounds", type=int, default=2)  # == run()'s default,
+    # so the CI gate and perf_quake --serving record the same config
+    ap.add_argument("--flush-size", type=int, default=64)
+    ap.add_argument("--cache-bits", type=int, default=16)
+    ap.add_argument("--min-throughput-ratio", type=float, default=None)
+    ap.add_argument("--max-recall-gap", type=float, default=None)
+    ap.add_argument("--verbose", action="store_true")
+    args = ap.parse_args()
+    run(n=args.n, dim=args.dim, n_ops=args.ops,
+        queries_per_op=args.queries_per_op, k=args.k, target=args.target,
+        rounds=args.rounds, flush_size=args.flush_size,
+        cache_bits=args.cache_bits,
+        min_throughput_ratio=args.min_throughput_ratio,
+        max_recall_gap=args.max_recall_gap, verbose=args.verbose)

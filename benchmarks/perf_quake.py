@@ -162,6 +162,22 @@ def run_streaming(out_path="results/perf_quake.json", n=100_000,
     return r
 
 
+def run_serving(out_path="results/perf_quake.json", n=20_000, n_ops=24,
+                queries_per_op=256):
+    """Serving-runtime cell (the online system of paper §3): the
+    micro-batching / riding / caching / drift-maintenance runtime vs the
+    per-op replay baseline on the generator's skewed read-write mix.
+    The runtime must hold >=1.5x baseline query throughput within a
+    point of recall (locally ~3x at smoke N=20k)."""
+    from benchmarks.bench_serving import run as run_serve
+
+    r = run_serve(n=n, n_ops=n_ops, queries_per_op=queries_per_op,
+                  out_path=out_path)
+    print(f"serving N={n}: runtime {r['throughput_ratio']}x baseline "
+          f"qps at recall gap {r['recall_gap']}")
+    return r
+
+
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--shape", default="serve_fixed_1k",
@@ -174,11 +190,16 @@ if __name__ == "__main__":
     ap.add_argument("--streaming", action="store_true",
                     help="streaming-update cell: full-rebuild vs delta-"
                          "refresh snapshot cost under an insert stream")
+    ap.add_argument("--serving", action="store_true",
+                    help="serving-runtime cell: ServingRuntime vs the "
+                         "per-op replay baseline on the skewed mix")
     args = ap.parse_args()
     if args.multiquery:
         run_multiquery()
     elif args.streaming:
         run_streaming()
+    elif args.serving:
+        run_serving()
     else:
         run(args.shape,
             args.variants.split(",") if args.variants else None)

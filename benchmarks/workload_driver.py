@@ -20,7 +20,7 @@ import numpy as np
 from repro.core import (LatencyModel, Maintainer, MaintenancePolicy,
                         QuakeConfig, QuakeIndex)
 from repro.core import kmeans
-from repro.data.workload import Workload
+from repro.data.workload import IncrementalGroundTruth, Workload
 
 
 @dataclass
@@ -121,30 +121,22 @@ def replay(wl: Workload, method: str, k: int = 10, target: float = 0.9,
                                     use_rejection=False))
 
     trace = Trace(method=method)
-    resident = {int(i) for i in wl.initial_ids}
-    x_all = ds.vectors
+    gt_inc = IncrementalGroundTruth(ds, wl.initial_ids)
 
     for t, op in enumerate(wl.operations):
         if op.kind == "insert":
             t0 = time.perf_counter()
             index.insert(op.vectors, op.ids)
             trace.update_s += time.perf_counter() - t0
-            resident.update(int(i) for i in op.ids)
+            gt_inc.insert(op.ids)
         elif op.kind == "delete":
             t0 = time.perf_counter()
             index.delete(op.ids)
             trace.update_s += time.perf_counter() - t0
-            resident.difference_update(int(i) for i in op.ids)
+            gt_inc.delete(op.ids)
         else:
-            res = np.asarray(sorted(resident))
-            x_res = x_all[res]
             qs = op.queries
-            if ds.metric == "l2":
-                d = (np.sum(x_res ** 2, 1)[None, :]
-                     - 2.0 * qs @ x_res.T)
-            else:
-                d = -(qs @ x_res.T)
-            gt = res[np.argpartition(d, k - 1, axis=1)[:, :k]]
+            gt = gt_inc.topk(qs, k)
             t0 = time.perf_counter()
             for i in range(len(qs)):
                 r = index.search(qs[i], k, recall_target=target)

@@ -9,9 +9,15 @@
 #   multiquery   — batched scan-once-per-partition policy (paper §7.4)
 #   journal      — mutation journal: the snapshot invalidation protocol
 #                  (per-partition dirty sets, COW delta refresh, §8.2)
+#   serving      — online serving runtime: micro-batching queue,
+#                  cross-batch union riding, result cache,
+#                  drift-triggered maintenance (§3's online loop)
 from .index import QuakeConfig, QuakeIndex, SearchResult  # noqa: F401
 from .journal import Delta, MutationJournal  # noqa: F401
 from .maintenance import Maintainer, MaintenancePolicy  # noqa: F401
 from .cost_model import LatencyModel  # noqa: F401
 from .distributed import (EngineConfig, IndexSnapshot,  # noqa: F401
                           ShardedQuakeEngine, SnapshotPatch)
+from .serving import (MaintenanceScheduler, MaintenanceTriggers,  # noqa: F401
+                      QueryResult, ResultCache, ServingConfig,
+                      ServingRuntime)

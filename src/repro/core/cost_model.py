@@ -98,6 +98,18 @@ class PartitionStats:
         self.hits[scanned] += 1
         self.window += 1
 
+    def record_batch(self, parts: np.ndarray, counts: np.ndarray,
+                     n_queries: int) -> None:
+        """Batched Stage-0 update from a packed multi-query scan:
+        ``counts[i]`` queries scanned partition ``parts[i]`` and the scan
+        served ``n_queries`` queries in total.  Equivalent to ``record``
+        called once per query with that query's scanned set — this is how
+        the serving runtime feeds served-batch access frequencies back
+        into the maintenance cost model, which the batched executor path
+        otherwise bypasses."""
+        self.hits[parts] += np.asarray(counts, dtype=np.float64)
+        self.window += int(n_queries)
+
     def access_freq(self, n: int, default: float = 0.0) -> np.ndarray:
         """A_lj in [0,1]; ``default`` is used before any query arrives."""
         self.ensure(n)

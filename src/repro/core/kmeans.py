@@ -121,9 +121,24 @@ def split_two(x: np.ndarray, iters: int = 8, seed: int = 0
     return c, a
 
 
+_ASSIGN_HOST_MAX = 1 << 22   # n*p below this: host GEMM path
+
+
 def assign(x: np.ndarray, centroids: np.ndarray,
            impl: str = "auto") -> np.ndarray:
-    """Nearest-centroid assignment via the fused kernel."""
+    """Nearest-centroid assignment via the fused kernel.
+
+    Maintenance-sized problems (merge verifies, refine reassignment,
+    insert routing — arbitrary, constantly changing (n, p) shapes) take
+    a host GEMM instead: the jitted kernel would pay a fresh XLA compile
+    for nearly every novel shape, which dominates the maintenance pass
+    wall time on CPU.  Large builds still go through the kernel."""
+    if (impl == "auto" and not ops._on_tpu()
+            and x.shape[0] * centroids.shape[0] <= _ASSIGN_HOST_MAX):
+        xs = np.asarray(x, dtype=np.float32)
+        c = np.asarray(centroids, dtype=np.float32)
+        d = np.sum(c * c, axis=1)[None, :] - 2.0 * (xs @ c.T)
+        return np.argmin(d, axis=1).astype(np.int32)
     a, _ = ops.kmeans_assign(jnp.asarray(x, jnp.float32),
                              jnp.asarray(centroids, jnp.float32), impl=impl)
     return np.asarray(a)

@@ -937,13 +937,21 @@ class BatchedSearchExecutor:
                  union_cap: Optional[int] = None,
                  planner: str = "vectorized",
                  int8_rerank: bool = True,
-                 rounds: Optional[int] = None):
+                 rounds: Optional[int] = None,
+                 part_bucket: int = 1):
         if storage_dtype not in STORAGE_DTYPES:
             raise ValueError(f"storage_dtype must be one of "
                              f"{STORAGE_DTYPES}, got {storage_dtype!r}")
         self.index = index
         self.impl = impl
         self.u_bucket = u_bucket
+        self.part_bucket = max(part_bucket, 1)  # snapshot partition-count
+                                 # rounding: a maintenance split/merge that
+                                 # stays within the bucket keeps every
+                                 # (P, S_cap, d) scan operand shape — and
+                                 # therefore every compiled scan — alive
+                                 # across the rebuild (serving runtimes
+                                 # set 32; 1 = exact count)
         self.storage_dtype = storage_dtype
         self.planner = planner
         self.rounds = rounds     # early-exit round budget for APS-planned
@@ -984,9 +992,38 @@ class BatchedSearchExecutor:
         self.planner_cache.ensure_fresh()
 
     def refresh(self):
-        """Full rebuild of the device snapshot from the dynamic index."""
+        """Full rebuild of the device snapshot from the dynamic index.
+
+        The slot capacity is *sticky*: a rebuild never shrinks it below
+        the previous snapshot's (a maintenance split that halves the
+        largest partition would otherwise halve ``S_cap`` and invalidate
+        every compiled scan shape, only for the next insert wave to grow
+        it back).  Monotone capacity costs padded slack rows — which the
+        headroom policy already accepts — and keeps the ``(P, S_cap, d)``
+        operand shape, and therefore the compiled scans, alive across
+        maintenance epochs."""
+        import math as _math
         from .distributed import IndexSnapshot  # late: avoid import cycle
-        snap = IndexSnapshot.from_index(self.index, headroom=self.headroom)
+        lvl0 = self.index.levels[0]
+        max_sz = int(max((len(v) for v in lvl0.vectors), default=0))
+        cap = max(int(_math.ceil(max_sz * max(self.headroom, 1.0))), 1)
+        if self._snap is not None:
+            cap = max(cap, int(self._snap.capacity))
+        pad_to = self.part_bucket
+        if self.part_bucket > 1:
+            # partition padding is sticky too, with 25% growth slack, so
+            # a handful of maintenance splits never crosses the pad
+            # boundary and re-shapes the scan operands
+            pad_to = (-(-int(lvl0.num_partitions * 1.25)
+                        // self.part_bucket) * self.part_bucket)
+            if self._snap is not None:
+                pad_to = max(pad_to, int(self._snap.num_partitions))
+            # from_index treats pad_partitions_to as a rounding multiple:
+            # the absolute-target usage here is only sound while the
+            # target covers the live count (ceil(p/pad_to) == 1)
+            pad_to = max(pad_to, lvl0.num_partitions)
+        snap = IndexSnapshot.from_index(self.index, capacity=cap,
+                                        pad_partitions_to=pad_to)
         self._valid = snap.ids >= 0
         self._flat_ids = np.array(snap.ids).reshape(-1)
         self._sizes = np.array(snap.sizes)
@@ -1151,6 +1188,75 @@ class BatchedSearchExecutor:
                              * sizes_sel[None, :]).sum()),
             nprobe=plan.nprobe, recall_estimate=plan.recall_est)
 
+    def scan_probe_round(self, q_dev, seq_dev, take: np.ndarray,
+                         kept: np.ndarray, k_keep: int, snap=None,
+                         impl: Optional[str] = None,
+                         u_pow2: bool = False):
+        """One packed partition-union scan for a probe round over an
+        arbitrary query row set: ``q_dev`` (B, d) queries, ``seq_dev``
+        (B, M) scan-ordered candidate partitions, ``take`` (B, M) bool
+        marking the probe-sequence cells consumed this round, ``kept``
+        the round's distinct union partition ids.  Packs through
+        ``ops.pack_round`` (bucketed union width) and scans the snapshot
+        once; returns device ``(dists (B, k_keep), flat idx (B, k_keep),
+        stats)`` in ``run_round_loop``'s ``scan_round`` contract.
+
+        This is the scan primitive both round drivers share: the
+        fixed-membership per-batch loop (``_search_rounds``) and the
+        serving scheduler's cross-batch riding rounds
+        (``core/serving.py``), where the active row set changes between
+        rounds as queued batches join mid-flight.  ``u_pow2`` switches
+        the union padding from linear ``u_bucket`` steps to a geometric
+        ladder (``u_bucket * 2^i``) — serving rounds see wildly varying
+        union sizes, and the ladder bounds the distinct compiled scan
+        shapes at log cost instead of linear.
+        """
+        snap = self.snapshot() if snap is None else snap
+        b = q_dev.shape[0]
+        # pack against the snapshot's (padded) partition count: stable
+        # across rebuilds when part_bucket > 1, so the jitted pack
+        # survives maintenance epochs
+        p = max(self.index.levels[0].num_partitions,
+                int(snap.num_partitions))
+        prio0 = jnp.zeros((p,), jnp.int32)   # uncapped: no anchor boost
+        n_real = max(len(kept), 1)
+        u_pad = max(-(-n_real // self.u_bucket) * self.u_bucket, 1)
+        if u_pow2:
+            u_pad = self.u_bucket * ops._next_pow2(
+                -(-n_real // self.u_bucket))
+        n_dev = min(u_pad, p)
+        sel_d, qmask_d = ops.pack_round(
+            seq_dev, jnp.asarray(take), prio0, p=p, n_union=n_dev)
+        sel = np.array(sel_d, dtype=np.int64)   # host copies (writable)
+        qmask = np.array(qmask_d)
+        if n_real < len(sel):        # inert tail (bucket padding)
+            sel[n_real:] = sel[0]
+            qmask[:, n_real:] = False
+        if u_pad > n_dev:
+            sel = np.concatenate(
+                [sel, np.full(u_pad - n_dev, sel[0], dtype=sel.dtype)])
+            qmask = np.concatenate(
+                [qmask, np.zeros((b, u_pad - n_dev), dtype=bool)], 1)
+        sizes_sel = self._sizes[sel[:n_real]]
+        st = {"partitions": int(n_real),
+              "vectors": int(sizes_sel.sum()),
+              "comparisons": int(
+                  (qmask[:, :n_real].astype(np.int64)
+                   * sizes_sel[None, :]).sum())}
+        sel_dev = jnp.asarray(sel.astype(np.int32))
+        qmask_dev = jnp.asarray(qmask)
+        if snap.scales is not None:
+            d, flat = ops.scan_selected_topk_q8(
+                q_dev, snap.data, snap.scales, self._valid,
+                sel_dev, qmask_dev, k_keep,
+                metric=self.index.config.metric, centroids=snap.centroids)
+        else:
+            d, flat = ops.scan_selected_topk(
+                q_dev, snap.data, self._valid, sel_dev, qmask_dev,
+                k_keep, metric=self.index.config.metric,
+                impl=impl or self.impl)
+        return d, flat, st
+
     def _search_rounds(self, q: np.ndarray, k: int, target: float,
                        rounds: Optional[int],
                        impl: Optional[str] = None,
@@ -1164,54 +1270,19 @@ class BatchedSearchExecutor:
         re-estimates per-query recall from the running k-th distance —
         queries that clear the target stop paying for further rounds."""
         idx = self.index
-        b = q.shape[0]
-        p = idx.levels[0].num_partitions
         snap = self.snapshot() if snap is None else snap
         rplan = plan_rounds(idx, q, k, target, planner=self.planner,
                             cache=self.planner_cache,
                             cent_norms=self._cent_norms)
         q_dev = jnp.asarray(q)
         seq_dev = jnp.asarray(rplan.seq.astype(np.int32))
-        prio0 = jnp.zeros((p,), jnp.int32)   # uncapped: no anchor boost
         rerank = (snap.scales is not None and self.int8_rerank
                   and self._host_f32 is not None)
         k_keep = 2 * k if rerank else k
-        metric = idx.config.metric
 
         def scan_round(take, kept):
-            n_real = max(len(kept), 1)
-            u_pad = max(-(-n_real // self.u_bucket) * self.u_bucket, 1)
-            n_dev = min(u_pad, p)
-            sel_d, qmask_d = ops.pack_round(
-                seq_dev, jnp.asarray(take), prio0, p=p, n_union=n_dev)
-            sel = np.array(sel_d, dtype=np.int64)   # host copies (writable)
-            qmask = np.array(qmask_d)
-            if n_real < len(sel):        # inert tail (bucket padding)
-                sel[n_real:] = sel[0]
-                qmask[:, n_real:] = False
-            if u_pad > n_dev:
-                sel = np.concatenate(
-                    [sel, np.full(u_pad - n_dev, sel[0], dtype=sel.dtype)])
-                qmask = np.concatenate(
-                    [qmask, np.zeros((b, u_pad - n_dev), dtype=bool)], 1)
-            sizes_sel = self._sizes[sel[:n_real]]
-            st = {"partitions": int(n_real),
-                  "vectors": int(sizes_sel.sum()),
-                  "comparisons": int(
-                      (qmask[:, :n_real].astype(np.int64)
-                       * sizes_sel[None, :]).sum())}
-            sel_dev = jnp.asarray(sel.astype(np.int32))
-            qmask_dev = jnp.asarray(qmask)
-            if snap.scales is not None:
-                d, flat = ops.scan_selected_topk_q8(
-                    q_dev, snap.data, snap.scales, self._valid,
-                    sel_dev, qmask_dev, k_keep, metric=metric,
-                    centroids=snap.centroids)
-            else:
-                d, flat = ops.scan_selected_topk(
-                    q_dev, snap.data, self._valid, sel_dev, qmask_dev,
-                    k_keep, metric=metric, impl=impl or self.impl)
-            return d, flat, st
+            return self.scan_probe_round(q_dev, seq_dev, take, kept,
+                                         k_keep, snap=snap, impl=impl)
 
         td, ti, nprobe, r_est, n_rounds, trace, stats = run_round_loop(
             rplan, k, target, idx._beta_table, _batch_rho_fn(idx, q),

@@ -1,0 +1,1025 @@
+"""Online serving runtime: micro-batching queue, cross-batch union riding,
+query-aware result caching, drift-triggered maintenance (paper §3's
+continuously running serving loop, made a first-class subsystem).
+
+The paper's headline numbers come from an *online* system that interleaves
+skewed queries, updates and cost-model maintenance.  The pieces below turn
+the batched executor (``core/multiquery.py``) into that system:
+
+  * **Micro-batching queue** — single queries and query batches are
+    admitted into a bounded queue and coalesced into executor batches
+    (size- or deadline-triggered flush, explicit ``flush``/``drain`` for
+    replay drivers).  Coalescing only changes *when* work runs,
+    never what a query scans: plans are per-query and the calibrated APS
+    radius is pinned per snapshot fingerprint by a deterministic
+    resident-sample calibration (``calibrate_radius_resident``), so the
+    same operation stream yields the same results under any flush timing
+    — top-k id sets exactly, distances to scan-arithmetic (f32)
+    rounding (the coalescing-determinism contract; ``docs/serving.md``).
+  * **Cross-batch union riding** — the :class:`RoundScheduler`
+    generalizes ``run_round_loop``'s live-mask/union machinery to a
+    *changing* query population: queries admitted while earlier batches
+    are mid-rounds join the next round, and every round's partition
+    union is shared across all in-flight batches — when a newcomer's
+    planned probes overlap partitions an in-flight plan is about to
+    stream, the partition block streams once and serves both.  Within
+    one co-admitted group a partition streams at most once (the same
+    guarantee ``run_round_loop`` gives one batch), and the streamed
+    footprint never exceeds the union of the per-batch fixed plans (the
+    riding-footprint invariant, asserted in ``tests/test_serving.py``).
+  * **Query-aware result cache** — :class:`ResultCache` keys normalized
+    queries by sign-LSH code (or exact bytes), verifies hits against the
+    stored exemplar within a tolerance, and invalidates per partition
+    from the index's mutation journal: an entry remembers its planned
+    probe footprint, and any journal delta dirtying one of those
+    partitions (or any structural change) drops it — the QVCache policy
+    on top of the PR 2 invalidation protocol.
+  * **Drift-triggered maintenance** — :class:`MaintenanceScheduler`
+    replaces run-after-every-op with triggers: journal dirty mass,
+    cost-model drift, and access-histogram shift over the served-batch
+    access frequencies the scheduler feeds back into
+    ``PartitionStats`` (Stage 0) — the batched scan path otherwise
+    bypasses the statistics the cost model plans with.
+
+``ServingRuntime`` composes the four and is what ``launch/serve.py`` and
+``benchmarks/bench_serving.py`` drive.
+"""
+from __future__ import annotations
+
+import time
+from collections import OrderedDict
+from dataclasses import dataclass
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from ..kernels.ref import MASK_DIST
+from . import aps as aps_mod
+from . import multiquery as mq
+from .cost_model import LatencyModel
+from .index import QuakeIndex
+from .maintenance import Maintainer, MaintenanceReport
+
+__all__ = ["ServingConfig", "ServingRuntime", "QueryResult", "ResultCache",
+           "MaintenanceScheduler", "MaintenanceTriggers", "RoundScheduler",
+           "calibrate_radius_resident"]
+
+
+@dataclass
+class ServingConfig:
+    """Knobs for one :class:`ServingRuntime`."""
+    k: int = 10
+    recall_target: Optional[float] = None  # None -> index.config.recall_target
+    rounds: Optional[int] = None       # per-query probe-round budget
+                                       # (None = as many geometric rounds
+                                       # as the plan needs)
+    early_exit: bool = False           # retire queries whose refined APS
+                                       # estimate clears the target before
+                                       # their plan is exhausted.  Scans
+                                       # less, but exit points depend on
+                                       # what rode alongside — trades the
+                                       # strict coalescing-determinism
+                                       # contract for footprint savings.
+    flush_size: int = 64               # queued queries that force a flush
+    flush_deadline: Optional[float] = None  # seconds the oldest queued
+                                       # query may wait before an
+                                       # admission forces a flush (None =
+                                       # size-triggered / explicit only)
+    interleave_rounds: int = 1         # scheduler rounds run per flush (the
+                                       # in-flight window newcomers ride)
+    b_bucket: int = 16                 # active-row padding bucket (bounds
+                                       # distinct jitted scan shapes)
+    storage_dtype: str = "f32"         # executor snapshot format
+    impl: str = "auto"                 # scan kernel implementation
+    planner: str = "vectorized"        # APS batch planner variant
+    scan_backend: str = "auto"         # "device": packed snapshot scans
+                                       # (scan_probe_round — the TPU
+                                       # path); "host": per-partition
+                                       # GEMMs over the index's ragged
+                                       # buffers (the CPU fast path —
+                                       # write barriers freeze the index
+                                       # within an epoch, so the live
+                                       # buffers are snapshot-coherent);
+                                       # "auto" picks host off-TPU
+    # --- result cache (0 entries disables) ---
+    cache_entries: int = 0
+    cache_bits: int = 0                # sign-LSH key bits; 0 = exact bytes
+    cache_tol: float = 0.0             # exemplar L2 tolerance.  0 = exact
+                                       # query match only (preserves the
+                                       # coalescing-determinism contract:
+                                       # an identical repeat always maps
+                                       # to the same result).  > 0 serves
+                                       # *near*-duplicates the exemplar's
+                                       # top-k — whether the exemplar
+                                       # completed before the repeat
+                                       # arrived depends on flush timing,
+                                       # so approximate caching, like
+                                       # early_exit, trades the strict
+                                       # determinism contract away
+    cache_seed: int = 0
+    record_stats: bool = True          # feed served access frequencies
+                                       # into PartitionStats (off for
+                                       # warm-up / shadow runtimes)
+    # --- maintenance triggers ---
+    maint_min_ops: int = 4
+    maint_dirty_frac: float = 0.25
+    maint_cost_drift: float = 0.15
+    maint_access_shift: float = 0.6
+    maint_max_ops: Optional[int] = 64
+
+
+@dataclass
+class QueryResult:
+    """Per-query serving outcome (the single-row mirror of
+    ``multiquery.BatchResult``)."""
+    ids: np.ndarray                 # (k,) external ids, -1 on misses
+    dists: np.ndarray               # (k,) minimization convention
+    nprobe: int = 0                 # partitions this query consumed
+    recall_estimate: float = np.nan
+    rounds: int = 0                 # scan rounds the query took cells in
+    from_cache: bool = False
+    latency_s: float = 0.0          # submit -> result wall time
+
+
+def calibrate_radius_resident(index: QuakeIndex, k: int,
+                              n_sample: int = 8) -> float:
+    """Deterministic, query-independent APS radius calibration: sample
+    resident vectors (first row of up to ``n_sample`` evenly spaced
+    non-empty partitions) as pseudo-queries and run the batched
+    calibration search.  Unlike the planner's default batch-sample
+    calibration, the result depends only on index state — so per-query
+    plans (and therefore served results) are invariant under how the
+    serving queue happened to coalesce the batch that triggered the
+    calibration."""
+    lvl0 = index.levels[0]
+    sizes = lvl0.sizes()
+    nz = np.nonzero(sizes)[0]
+    if len(nz) == 0:
+        return np.inf
+    pick = nz[np.unique(np.linspace(0, len(nz) - 1,
+                                    min(n_sample, len(nz))).astype(int))]
+    qs = np.stack([lvl0.vectors[int(j)][0] for j in pick]).astype(np.float32)
+    # resident vectors match themselves at distance 0 (rank 1), which
+    # would bias the k-th distance low and make the planner underprobe —
+    # calibrate past rank k+1 (the unbiased k-th for a query *near* but
+    # not identical to a stored vector), with extra slack ranks: a
+    # modestly inflated radius only makes the planner scan more, never
+    # less, which is the recall-safe side of the approximation
+    return mq._calibrate_kth_batched(index, qs, k + 1 + max(1, k // 2),
+                                     mq._aps_candidate_budget(index))
+
+
+# ---------------------------------------------------------------------------
+# Query-aware result cache (QVCache-style, journal-invalidated)
+# ---------------------------------------------------------------------------
+
+class ResultCache:
+    """LRU top-k result cache keyed by normalized-query code.
+
+    ``bits > 0`` keys queries by the sign pattern of ``bits`` fixed random
+    projections (nearby queries collide, so Zipf-popular queries with
+    per-request jitter still hit); ``bits == 0`` keys by exact query
+    bytes.  A key collision alone never serves a result: the hit must
+    also be within ``tol`` L2 distance of the stored exemplar query
+    (``tol == 0`` = identical queries only), and the served result is
+    the exemplar's — approximate for ``tol > 0`` in exactly the way ANN
+    serving already is.
+
+    Every entry remembers the **planned probe footprint** of the search
+    that produced it.  Invalidation is driven by the index's mutation
+    journal: ``invalidate_partitions(dirty)`` drops every entry whose
+    footprint intersects the dirty set (content changes outside an
+    entry's footprint cannot change what that entry's plan would have
+    scanned — inserts and deletes move no centroids, so the probe set
+    over an unchanged directory is unchanged), and any structural delta
+    clears the cache (partition ids are re-assigned by split/merge
+    swap-remove, so footprints stop meaning anything).
+    """
+
+    def __init__(self, max_entries: int = 4096, bits: int = 0,
+                 tol: float = 0.0, seed: int = 0):
+        self.max_entries = max_entries
+        self.bits = bits
+        self.tol = float(tol)
+        self._seed = seed
+        self._proj: Optional[np.ndarray] = None
+        self._store: "OrderedDict[int, dict]" = OrderedDict()  # eid -> entry
+        self._by_key: Dict[bytes, List[int]] = {}
+        self._by_part: Dict[int, set] = {}
+        self._next_eid = 0
+        self.hits = 0
+        self.misses = 0
+        self.invalidated = 0
+
+    def __len__(self) -> int:
+        return len(self._store)
+
+    def _key(self, q: np.ndarray) -> bytes:
+        if self.bits <= 0:
+            return q.tobytes()
+        if self._proj is None or self._proj.shape[1] != q.shape[0]:
+            rng = np.random.default_rng(self._seed)
+            self._proj = rng.normal(
+                size=(self.bits, q.shape[0])).astype(np.float32)
+        return np.packbits(self._proj @ q >= 0.0).tobytes()
+
+    def get(self, q: np.ndarray, k: int) -> Optional[dict]:
+        q = np.ascontiguousarray(q, dtype=np.float32)
+        best, best_d = None, np.inf
+        for eid in self._by_key.get(self._key(q), ()):
+            e = self._store[eid]
+            if e["k"] != k:
+                continue
+            d = float(np.linalg.norm(q - e["q"]))
+            if d <= self.tol and d < best_d:
+                best, best_d = e, d
+        if best is None:
+            self.misses += 1
+            return None
+        self._store.move_to_end(best["eid"])
+        self.hits += 1
+        return best
+
+    def put(self, q: np.ndarray, k: int, ids: np.ndarray, dists: np.ndarray,
+            footprint: np.ndarray, nprobe: int = 0,
+            recall_estimate: float = np.nan) -> None:
+        if self.max_entries <= 0:
+            return
+        q = np.ascontiguousarray(q, dtype=np.float32)
+        key = self._key(q)
+        eid = self._next_eid
+        self._next_eid += 1
+        fp = np.unique(np.asarray(footprint, dtype=np.int64))
+        self._store[eid] = {
+            "eid": eid, "key": key, "k": k, "q": q.copy(),
+            "ids": np.asarray(ids).copy(), "dists": np.asarray(dists).copy(),
+            "footprint": fp, "nprobe": int(nprobe),
+            "recall_estimate": float(recall_estimate)}
+        self._by_key.setdefault(key, []).append(eid)
+        for p in fp:
+            self._by_part.setdefault(int(p), set()).add(eid)
+        while len(self._store) > self.max_entries:
+            old_eid, old_entry = self._store.popitem(last=False)  # LRU
+            self._unlink(old_eid, old_entry)
+
+    def _unlink(self, eid: int, entry: dict) -> None:
+        eids = self._by_key.get(entry["key"], [])
+        if eid in eids:
+            eids.remove(eid)
+            if not eids:
+                del self._by_key[entry["key"]]
+        for p in entry["footprint"]:
+            s = self._by_part.get(int(p))
+            if s is not None:
+                s.discard(eid)
+                if not s:
+                    del self._by_part[int(p)]
+
+    def _remove(self, eid: int) -> None:
+        entry = self._store.pop(eid, None)
+        if entry is not None:
+            self._unlink(eid, entry)
+
+    def invalidate_partitions(self, dirty: Iterable[int]) -> int:
+        """Drop every entry whose planned footprint touches ``dirty``."""
+        doomed: set = set()
+        for p in dirty:
+            doomed |= self._by_part.get(int(p), set())
+        for eid in doomed:
+            self._remove(eid)
+        self.invalidated += len(doomed)
+        return len(doomed)
+
+    def clear(self) -> None:
+        self.invalidated += len(self._store)
+        self._store.clear()
+        self._by_key.clear()
+        self._by_part.clear()
+
+
+# ---------------------------------------------------------------------------
+# Drift-triggered maintenance scheduling
+# ---------------------------------------------------------------------------
+
+@dataclass
+class MaintenanceTriggers:
+    """When the serving loop should pay for a maintenance pass.
+
+    ``min_ops`` rate-limits passes; beyond it a pass runs when any drift
+    signal fires: the journal's folded dirty mass since the last pass
+    (``dirty_frac`` of the partition directory — the Incremental-IVF
+    decoupling of maintenance cadence from the op stream), the
+    cost-model estimate moving by ``cost_drift`` relative to the cost at
+    the last pass (Eq. 2 over current sizes and served access
+    frequencies), or the served access histogram shifting by
+    ``access_shift`` total-variation distance (read-skew drift: the same
+    partitions, differently hot).  ``max_ops`` forces a pass regardless
+    — the backstop that bounds how stale statistics can get."""
+    min_ops: int = 4
+    dirty_frac: float = 0.25
+    cost_drift: float = 0.15
+    access_shift: float = 0.6
+    max_ops: Optional[int] = 64
+
+
+class MaintenanceScheduler:
+    """Replaces run-after-every-op with drift triggers over the journal,
+    the cost model, and the served access histogram."""
+
+    def __init__(self, maintainer: Maintainer,
+                 triggers: Optional[MaintenanceTriggers] = None):
+        self.maintainer = maintainer
+        self.index = maintainer.index
+        self.triggers = triggers or MaintenanceTriggers()
+        self.ops_since = 0
+        self.history: List[dict] = []
+        self._rebaseline()
+
+    def _freq_vector(self) -> np.ndarray:
+        lvl0 = self.index.levels[0]
+        return lvl0.stats.access_freq(lvl0.num_partitions,
+                                      self.index.config.default_access_freq)
+
+    def _rebaseline(self) -> None:
+        self._last_version = self.index.version
+        self._last_cost = self.maintainer.total_cost()
+        self._last_freqs = self._freq_vector().copy()
+        self.ops_since = 0
+
+    def note_op(self, n: int = 1) -> None:
+        self.ops_since += n
+
+    def due(self) -> Optional[str]:
+        """Trigger that fired, or None.  Cheap: one journal fold, one
+        O(P) cost evaluation, one O(P) histogram distance."""
+        t = self.triggers
+        if self.ops_since < t.min_ops:
+            return None
+        if t.max_ops is not None and self.ops_since >= t.max_ops:
+            return "op_budget"
+        delta = self.index.journal.delta_since(self._last_version)
+        if delta is None:
+            return "journal_trimmed"
+        if delta.structural:
+            return "structural"
+        p = max(self.index.num_partitions, 1)
+        if len(delta.dirty) >= t.dirty_frac * p:
+            return "dirty_mass"
+        cost = self.maintainer.total_cost()
+        if abs(cost - self._last_cost) >= t.cost_drift * max(self._last_cost,
+                                                             1e-9):
+            return "cost_drift"
+        f, g = self._freq_vector(), self._last_freqs
+        m = min(len(f), len(g))
+        fs, gs = float(f[:m].sum()), float(g[:m].sum())
+        if m and fs > 0 and gs > 0:
+            shift = 0.5 * float(np.abs(f[:m] / fs - g[:m] / gs).sum())
+            if shift >= t.access_shift:
+                return "access_shift"
+        return None
+
+    def run_if_due(self, force: bool = False) -> Optional[MaintenanceReport]:
+        reason = "forced" if force else self.due()
+        if reason is None:
+            return None
+        rep = self.maintainer.run()
+        self.history.append({
+            "reason": reason, "ops_since": self.ops_since,
+            "splits": rep.splits, "merges": rep.merges,
+            "cost_before": round(rep.cost_before, 1),
+            "cost_after": round(rep.cost_after, 1)})
+        self._rebaseline()
+        return rep
+
+
+# ---------------------------------------------------------------------------
+# Host scan backend (CPU fast path for the riding rounds)
+# ---------------------------------------------------------------------------
+
+def host_scan_round(index: QuakeIndex, q: np.ndarray, seq: np.ndarray,
+                    take: np.ndarray, kept: np.ndarray, k_keep: int,
+                    q_norm_sq: Optional[np.ndarray] = None):
+    """One riding round scanned on host: for every union partition, one
+    BLAS GEMM over exactly the queries that take it and exactly the rows
+    it holds — the ragged-buffer mirror of the packed device scan, with
+    no padded-slot compute (the index docstring's rationale for the
+    ``numpy`` backend: per-partition scans are tiny on CPU and device
+    dispatch would dominate).  Serving write barriers freeze the index
+    within a scheduler epoch, so scanning the live buffers is coherent
+    with the plan.  The partition is still streamed/computed once for
+    all riders — the amortization the round union exists for.
+
+    Returns (dists (B, k_keep), ids (B, k_keep) **external** ids, stats)
+    with MASK_DIST / -1 padding — same conventions as the device scan
+    except ids are already external (no flat-index indirection).
+    """
+    lvl0 = index.levels[0]
+    b = q.shape[0]
+    metric = index.config.metric
+    if metric == "l2" and q_norm_sq is None:
+        q_norm_sq = np.sum(q.astype(np.float64) ** 2, axis=1)
+    cand_d: List[List[np.ndarray]] = [[] for _ in range(b)]
+    cand_i: List[List[np.ndarray]] = [[] for _ in range(b)]
+    vectors = comparisons = 0
+    # one pass over the taken cells groups query rows by partition —
+    # O(nnz log nnz) instead of a full (B, M) mask scan per partition
+    rr, cc = np.nonzero(take)
+    if len(rr):
+        parts = seq[rr, cc]
+        order = np.argsort(parts, kind="stable")
+        rr, parts = rr[order], parts[order]
+        bounds = np.nonzero(np.diff(parts))[0] + 1
+        starts = np.concatenate([np.zeros(1, dtype=np.int64), bounds])
+        groups = dict(zip(parts[starts].tolist(), np.split(rr, bounds)))
+    else:
+        groups = {}
+    for j in kept:
+        j = int(j)
+        rows = groups.get(j, ())
+        x = lvl0.vectors[j]
+        s = x.shape[0]
+        vectors += s
+        if s == 0 or len(rows) == 0:
+            continue
+        comparisons += s * len(rows)
+        qj = q[rows]
+        if metric == "l2":
+            d = (lvl0.sqnorms[j][None, :].astype(np.float64)
+                 - 2.0 * (qj @ x.T) + q_norm_sq[rows][:, None])
+        else:
+            d = -(qj @ x.T).astype(np.float64)
+        kk = min(k_keep, s)
+        if kk < s:
+            part = np.argpartition(d, kk - 1, axis=1)[:, :kk]
+            dd = np.take_along_axis(d, part, axis=1)
+            ii = lvl0.ids[j][part]
+        else:
+            dd, ii = d, np.broadcast_to(lvl0.ids[j], d.shape)
+        for r, row in enumerate(rows):
+            cand_d[row].append(dd[r])
+            cand_i[row].append(ii[r])
+    out_d = np.full((b, k_keep), MASK_DIST, dtype=np.float64)
+    out_i = np.full((b, k_keep), -1, dtype=np.int64)
+    for row in range(b):
+        if not cand_d[row]:
+            continue
+        d = np.concatenate(cand_d[row])
+        i = np.concatenate(cand_i[row])
+        kk = min(k_keep, len(d))
+        sel = np.argpartition(d, kk - 1)[:kk] if kk < len(d) \
+            else np.arange(len(d))
+        out_d[row, :kk] = d[sel]
+        out_i[row, :kk] = i[sel]
+    order = np.argsort(out_d, axis=1, kind="stable")
+    out_d = np.take_along_axis(out_d, order, axis=1)
+    out_i = np.take_along_axis(out_i, order, axis=1)
+    st = {"partitions": int(len(kept)), "vectors": int(vectors),
+          "comparisons": int(comparisons)}
+    return out_d, out_i, st
+
+
+# ---------------------------------------------------------------------------
+# Cross-batch riding round scheduler
+# ---------------------------------------------------------------------------
+
+@dataclass
+class _Pending:
+    """One in-flight query's round state (the per-row decomposition of
+    ``run_round_loop``'s batch arrays, so membership can change)."""
+    qid: int
+    q: np.ndarray              # (d,)
+    q_norm_sq: float
+    seq: np.ndarray            # (M,) scan-ordered candidate partitions
+    count: int                 # planned probe budget (fixed-plan cells)
+    geo: np.ndarray            # (M,) seq-aligned geometry distances
+    cc: np.ndarray             # (M,) seq-aligned center-center distances
+    wins: List[Tuple[int, int]]
+    win_ptr: int
+    scanned: np.ndarray        # (M,) bool — cells consumed so far
+    r_est: float
+    td: np.ndarray             # (k_keep,) running top distances
+    ti: np.ndarray             # (k_keep,) running top flat indices
+    t_submit: float
+    batch: int                 # admission group (riding accounting)
+    rounds: int = 0            # rounds this query took cells in
+
+
+class RoundScheduler:
+    """Cross-batch generalization of ``run_round_loop``: drives probe
+    rounds over a query population that *changes between rounds*.
+
+    Queries join via :meth:`admit` (planned against the executor's
+    current snapshot); each :meth:`step` takes every in-flight query's
+    next probe window, forms one shared partition union, lets every
+    query additionally consume all of its not-yet-scanned probes landing
+    in that union (union riding, now across admission groups), scans the
+    union once (``BatchedSearchExecutor.scan_probe_round``), folds the
+    result into per-query running top-k state, and retires queries whose
+    plan is exhausted — or, with ``early_exit``, whose refined APS
+    estimate cleared the target.
+
+    Invariants (asserted by ``tests/test_serving.py``):
+      * footprint: partitions streamed across all rounds ⊆ the union of
+        the admitted batches' fixed plans (riding consumes planned cells
+        early; it never adds partitions a plan didn't contain);
+      * co-admitted amortization: while no new group is admitted
+        mid-flight, a partition block streams at most once — exactly
+        ``run_round_loop``'s per-batch guarantee, extended to every
+        batch coalesced into the group.
+
+    With ``early_exit=False`` every query consumes exactly its fixed
+    plan, so results are independent of how admission interleaved with
+    rounds — the runtime's coalescing-determinism contract.
+    """
+
+    def __init__(self, executor: "mq.BatchedSearchExecutor", k: int,
+                 target: float, rounds: Optional[int] = None,
+                 early_exit: bool = False, b_bucket: int = 16,
+                 record_stats: bool = True, scan_backend: str = "auto"):
+        self.ex = executor
+        self.index = executor.index
+        self.k = k
+        self.target = target
+        self.round_budget = rounds
+        self.early_exit = early_exit
+        self.b_bucket = max(b_bucket, 1)
+        self.record_stats = record_stats
+        if scan_backend == "auto":
+            import jax
+            scan_backend = ("device" if jax.default_backend() == "tpu"
+                            else "host")
+        if scan_backend not in ("host", "device"):
+            raise ValueError(f"scan_backend must be host/device/auto, "
+                             f"got {scan_backend!r}")
+        self.scan_backend = scan_backend
+        self.active: List[_Pending] = []
+        self.done: List[tuple] = []     # (qid, QueryResult, q, footprint)
+        self._epoch_key = None
+        self._snap = None
+        self._m: Optional[int] = None
+        self._k_keep = k
+        self._rerank = False
+        self._batches = 0
+        # riding / invariant telemetry
+        self.rounds_run = 0
+        self.round_streams: List[np.ndarray] = []   # kept ids per round
+        self.plan_footprints: List[np.ndarray] = [] # per admitted batch
+        self.partitions_streamed = 0
+        self.vectors_streamed = 0
+        self.comparisons = 0
+
+    # -- admission -----------------------------------------------------
+
+    def admit(self, queries: np.ndarray, qids: Sequence[int],
+              t_submit: Optional[Sequence[float]] = None) -> None:
+        """Plan one coalesced batch and add its queries to the in-flight
+        population.  All admissions between drains must see the same
+        snapshot fingerprint (writes barrier through the runtime)."""
+        q = np.ascontiguousarray(queries, dtype=np.float32)
+        if q.ndim == 1:
+            q = q[None, :]
+        b = q.shape[0]
+        if b == 0:
+            return
+        if self.scan_backend == "host":
+            # no device snapshot: rounds scan the live ragged buffers,
+            # which the runtime's write barriers freeze within an epoch
+            self.ex.planner_cache.ensure_fresh()
+            snap = None
+        else:
+            snap = self.ex.snapshot()
+        fp = self.ex._fingerprint()
+        if self.active and fp != self._epoch_key:
+            raise RuntimeError(
+                "snapshot changed under in-flight queries; drain() before "
+                "mutating the index (the runtime's write barrier does this)")
+        self._epoch_key = fp
+        self._snap = snap
+        self._rerank = (snap is not None and snap.scales is not None
+                        and self.ex.int8_rerank
+                        and self.ex._host_f32 is not None)
+        self._k_keep = 2 * self.k if self._rerank else self.k
+        rplan = mq.plan_rounds(self.index, q, self.k, self.target,
+                               planner=self.ex.planner,
+                               cache=self.ex.planner_cache,
+                               cent_norms=self.ex._cent_norms)
+        m = rplan.seq.shape[1]
+        if self._m is None or not self.active:
+            self._m = m
+        assert m == self._m, (m, self._m)
+        now = time.perf_counter()
+        ts = t_submit if t_submit is not None else [now] * b
+        qn = np.sum(q.astype(np.float64) ** 2, axis=1)
+        batch_id = self._batches
+        self._batches += 1
+        for i in range(b):
+            count = int(rplan.counts[i])
+            self.active.append(_Pending(
+                qid=int(qids[i]), q=q[i], q_norm_sq=float(qn[i]),
+                seq=rplan.seq[i], count=count,
+                geo=rplan.geo[i], cc=rplan.cc[i],
+                wins=mq._round_windows(count, self.round_budget),
+                win_ptr=0, scanned=np.zeros(m, dtype=bool),
+                r_est=float(rplan.recall_est[i]),
+                td=np.full(self._k_keep, MASK_DIST, dtype=np.float64),
+                ti=np.full(self._k_keep, -1, dtype=np.int64),
+                t_submit=float(ts[i]), batch=batch_id))
+        self.plan_footprints.append(
+            np.unique(np.concatenate(
+                [rplan.seq[i][:int(rplan.counts[i])] for i in range(b)])))
+        if self.record_stats:
+            lvl0 = self.index.levels[0]
+            lvl0.stats.ensure(lvl0.num_partitions)
+            lvl0.stats.record_batch(np.zeros(0, np.int64),
+                                    np.zeros(0), b)
+
+    # -- rounds --------------------------------------------------------
+
+    def step(self) -> bool:
+        """Run one shared probe round.  Returns False once nothing is in
+        flight (all queries retired)."""
+        rows = self.active
+        if not rows:
+            return False
+        b = len(rows)
+        m = self._m
+        seq_mat = np.stack([pq.seq for pq in rows])
+        scanned = np.stack([pq.scanned for pq in rows])
+        counts = np.asarray([pq.count for pq in rows])
+        cols = np.arange(m)[None, :]
+        within = cols < counts[:, None]
+        avail = within & ~scanned
+
+        base = np.zeros((b, m), dtype=bool)
+        for i, pq in enumerate(rows):
+            # advance past windows that riding already consumed
+            while pq.win_ptr < len(pq.wins):
+                c0, c1 = pq.wins[pq.win_ptr]
+                if avail[i, c0:c1].any():
+                    base[i, c0:c1] = avail[i, c0:c1]
+                    break
+                pq.win_ptr += 1
+        if not base.any():
+            self._retire(rows, np.ones(b, dtype=bool), scanned, within)
+            return bool(self.active)
+
+        kept = np.unique(seq_mat[base])
+        p = self.index.levels[0].num_partitions
+        in_union = np.zeros(max(int(seq_mat.max()) + 1, p), dtype=bool)
+        in_union[kept] = True
+        take = avail & in_union[seq_mat]
+        scanned |= take
+
+        q_mat = np.stack([pq.q for pq in rows])
+        if self.scan_backend == "host":
+            d, flat, st = host_scan_round(
+                self.index, q_mat, seq_mat, take, kept, self._k_keep,
+                q_norm_sq=np.asarray([pq.q_norm_sq for pq in rows]))
+        else:
+            # pad the active rows on a geometric ladder (b_bucket * 2^i)
+            # so the jitted scan sees O(log B) distinct (B, M) shapes as
+            # the in-flight population grows/shrinks; pad rows carry
+            # take=False (inert under the scan mask)
+            b_pad = self.b_bucket
+            while b_pad < b:
+                b_pad *= 2
+            q_pad = q_mat
+            if b_pad > b:
+                q_pad = np.concatenate(
+                    [q_mat,
+                     np.zeros((b_pad - b, q_mat.shape[1]), np.float32)])
+                seq_pad = np.concatenate(
+                    [seq_mat, np.zeros((b_pad - b, m), seq_mat.dtype)])
+                take_pad = np.concatenate(
+                    [take, np.zeros((b_pad - b, m), bool)])
+            else:
+                seq_pad, take_pad = seq_mat, take
+            d, flat, st = self.ex.scan_probe_round(
+                jnp.asarray(q_pad), jnp.asarray(seq_pad.astype(np.int32)),
+                take_pad, kept, self._k_keep, snap=self._snap, u_pow2=True)
+            d = np.asarray(d, dtype=np.float64)[:b]
+            flat = np.asarray(flat, dtype=np.int64)[:b]
+
+        # fold into per-query running top-k (host side: rows churn)
+        td = np.stack([pq.td for pq in rows])
+        ti = np.stack([pq.ti for pq in rows])
+        cat_d = np.concatenate([td, d], axis=1)
+        cat_i = np.concatenate([ti, flat], axis=1)
+        order = np.argsort(cat_d, axis=1, kind="stable")[:, :self._k_keep]
+        td = np.take_along_axis(cat_d, order, axis=1)
+        ti = np.take_along_axis(cat_i, order, axis=1)
+
+        took = take.any(axis=1)
+        for i, pq in enumerate(rows):
+            pq.scanned = scanned[i]
+            pq.td = td[i]
+            pq.ti = ti[i]
+            pq.rounds += int(took[i])
+
+        self.rounds_run += 1
+        self.round_streams.append(kept)
+        self.partitions_streamed += st["partitions"]
+        self.vectors_streamed += st["vectors"]
+        self.comparisons += st["comparisons"]
+        if self.record_stats:
+            parts, cnts = np.unique(seq_mat[take], return_counts=True)
+            lvl0 = self.index.levels[0]
+            lvl0.stats.ensure(lvl0.num_partitions)
+            lvl0.stats.record_batch(parts, cnts, 0)
+
+        finished = ~(within & ~scanned).any(axis=1)
+        if self.early_exit:
+            kth = td[:, self.k - 1]
+            full = kth < MASK_DIST
+            if self.index.config.metric == "l2":
+                rho_sq = aps_mod.rho_sq_batch(kth, metric="l2")
+            else:
+                qn = np.asarray([pq.q_norm_sq for pq in rows])
+                rho_sq = aps_mod.rho_sq_batch(
+                    kth, metric="ip", q_norm_sq=qn,
+                    max_norm_sq=self.index._max_norm_sq)
+            rho_sq = np.where(full, rho_sq, np.inf)
+            geo_mat = np.stack([pq.geo for pq in rows])
+            cc_mat = np.stack([pq.cc for pq in rows])
+            valid = np.ones((b, m), dtype=bool)
+            valid[:, 0] = False
+            p0, probs = aps_mod.estimate_probs_batch(
+                geo_mat[:, 0], geo_mat, cc_mat, rho_sq,
+                self.index._beta_table, valid)
+            r = p0 + np.where(scanned & valid, probs, 0.0).sum(axis=1)
+            for i, pq in enumerate(rows):
+                if full[i]:
+                    pq.r_est = float(r[i])
+            finished |= full & (r >= self.target)
+        self._retire(rows, finished, scanned, within)
+        return True
+
+    def _retire(self, rows: List[_Pending], finished: np.ndarray,
+                scanned: np.ndarray, within: np.ndarray) -> None:
+        idxs = np.nonzero(finished)[0]
+        if len(idxs):
+            now = time.perf_counter()
+            td = np.stack([rows[i].td for i in idxs])
+            ti = np.stack([rows[i].ti for i in idxs])
+            if self._rerank:
+                qd = np.stack([rows[i].q for i in idxs])
+                dd, flat = self.ex._rerank_exact(qd, ti, self.k)
+            else:
+                dd, flat = td[:, :self.k], ti[:, :self.k]
+            if self.scan_backend == "host":
+                ids = flat        # host rounds carry external ids directly
+            else:
+                ids = np.where(flat >= 0,
+                               self.ex._flat_ids[np.maximum(flat, 0)], -1)
+            dd = np.where(dd >= MASK_DIST, np.inf, dd)
+            for row, i in enumerate(idxs):
+                pq = rows[i]
+                res = QueryResult(
+                    ids=ids[row].astype(np.int64), dists=dd[row],
+                    nprobe=int((scanned[i] & within[i]).sum()),
+                    recall_estimate=pq.r_est, rounds=pq.rounds,
+                    latency_s=now - pq.t_submit)
+                self.done.append((pq.qid, res, pq.q,
+                                  pq.seq[:pq.count]))
+        self.active = [pq for i, pq in enumerate(rows) if not finished[i]]
+
+    def drain(self) -> None:
+        while self.step():
+            pass
+
+    def epoch_footprint(self) -> np.ndarray:
+        """Distinct partitions streamed so far (invariant telemetry)."""
+        if not self.round_streams:
+            return np.zeros(0, dtype=np.int64)
+        return np.unique(np.concatenate(self.round_streams))
+
+
+# ---------------------------------------------------------------------------
+# The runtime
+# ---------------------------------------------------------------------------
+
+class ServingRuntime:
+    """Admission queue + riding scheduler + result cache + drift-triggered
+    maintenance over one dynamic :class:`QuakeIndex`.
+
+    Queries enter through :meth:`submit_query` / :meth:`submit_batch` and
+    complete asynchronously (``flush_size`` admissions force a flush, and
+    each flush advances in-flight rounds by ``interleave_rounds`` — the
+    window newly queued batches ride).  Writes are barriers: they drain
+    the in-flight population, mutate the index, invalidate cache entries
+    through the journal delta, and give the maintenance scheduler a
+    chance to run.  :meth:`drain` completes everything in flight;
+    :meth:`result` returns a query's :class:`QueryResult`.
+    """
+
+    def __init__(self, index: QuakeIndex,
+                 config: Optional[ServingConfig] = None,
+                 maintainer: Optional[Maintainer] = None,
+                 lam: Optional[LatencyModel] = None):
+        self.index = index
+        self.cfg = config or ServingConfig()
+        self.target = (self.cfg.recall_target
+                       if self.cfg.recall_target is not None
+                       else index.config.recall_target)
+        self.executor = mq.BatchedSearchExecutor(
+            index, impl=self.cfg.impl, storage_dtype=self.cfg.storage_dtype,
+            planner=self.cfg.planner, rounds=self.cfg.rounds,
+            part_bucket=32)   # shape-stable snapshots across maintenance
+        self.cache = (ResultCache(self.cfg.cache_entries,
+                                  bits=self.cfg.cache_bits,
+                                  tol=self.cfg.cache_tol,
+                                  seed=self.cfg.cache_seed)
+                      if self.cfg.cache_entries > 0 else None)
+        self.maintenance = MaintenanceScheduler(
+            maintainer or Maintainer(index, lam
+                                     or LatencyModel(dim=index.dim)),
+            MaintenanceTriggers(
+                min_ops=self.cfg.maint_min_ops,
+                dirty_frac=self.cfg.maint_dirty_frac,
+                cost_drift=self.cfg.maint_cost_drift,
+                access_shift=self.cfg.maint_access_shift,
+                max_ops=self.cfg.maint_max_ops))
+        self.scheduler = RoundScheduler(
+            self.executor, self.cfg.k, self.target,
+            rounds=self.cfg.rounds, early_exit=self.cfg.early_exit,
+            b_bucket=self.cfg.b_bucket,
+            record_stats=self.cfg.record_stats,
+            scan_backend=self.cfg.scan_backend)
+        self._queue: List[Tuple[int, np.ndarray, float]] = []
+        self._maintaining = False
+        self._next_qid = 0
+        self.results: Dict[int, QueryResult] = {}
+        self._cache_version = index.version
+        self.queries_submitted = 0
+        self.cache_hits = 0
+        self.write_ops = 0
+
+    # -- admission -----------------------------------------------------
+
+    def submit_query(self, q: np.ndarray) -> int:
+        """Admit one query; returns its ticket (qid)."""
+        q = np.ascontiguousarray(q, dtype=np.float32).reshape(-1)
+        qid = self._next_qid
+        self._next_qid += 1
+        self.queries_submitted += 1
+        if self.cache is not None:
+            if self.index.version != self._cache_version:
+                self._invalidate_cache()   # index mutated out-of-band
+            t0 = time.perf_counter()
+            hit = self.cache.get(q, self.cfg.k)
+            if hit is not None:
+                self.cache_hits += 1
+                self.results[qid] = QueryResult(
+                    ids=hit["ids"].copy(), dists=hit["dists"].copy(),
+                    nprobe=hit["nprobe"],
+                    recall_estimate=hit["recall_estimate"],
+                    from_cache=True,
+                    latency_s=time.perf_counter() - t0)
+                return qid
+        self._queue.append((qid, q, time.perf_counter()))
+        if len(self._queue) >= self.cfg.flush_size or (
+                self.cfg.flush_deadline is not None
+                and time.perf_counter() - self._queue[0][2]
+                >= self.cfg.flush_deadline):
+            self.flush()
+        return qid
+
+    def submit_batch(self, queries: np.ndarray) -> List[int]:
+        """Admit a query batch (one qid per row)."""
+        q = np.ascontiguousarray(queries, dtype=np.float32)
+        if q.ndim == 1:
+            q = q[None, :]
+        return [self.submit_query(q[i]) for i in range(q.shape[0])]
+
+    # -- scheduling ----------------------------------------------------
+
+    def _ensure_radius(self) -> None:
+        """Pin the APS radius for the current snapshot fingerprint with
+        the deterministic resident-sample calibration, so batch planning
+        never calibrates from whatever queries happened to coalesce."""
+        cache = self.executor.planner_cache.ensure_fresh()
+        if cache.get_radius(self.cfg.k, self.target) is None:
+            cache.put_radius(self.cfg.k, self.target,
+                             calibrate_radius_resident(self.index,
+                                                       self.cfg.k))
+
+    def flush(self) -> None:
+        """Coalesce the queue into one executor batch, admit it to the
+        riding scheduler, and advance in-flight rounds."""
+        if self._queue:
+            if (self.scheduler.active
+                    and self.executor._fingerprint()
+                    != self.scheduler._epoch_key):
+                self.scheduler.drain()     # out-of-band mutation barrier
+            self._ensure_radius()
+            qids = [t[0] for t in self._queue]
+            qs = np.stack([t[1] for t in self._queue])
+            ts = [t[2] for t in self._queue]
+            self._queue.clear()
+            self.scheduler.admit(qs, qids, ts)
+            self.maintenance.note_op()
+        for _ in range(max(self.cfg.interleave_rounds, 0)):
+            if not self.scheduler.step():
+                break
+        self._collect()
+
+    def drain(self) -> None:
+        """Flush the queue and run rounds until nothing is in flight.
+        Drains are also where read-only streams get their maintenance
+        check: without it the access-shift trigger (read-skew drift) and
+        the op-budget backstop could only ever fire on a write barrier."""
+        self.flush()
+        self.scheduler.drain()
+        self._collect()
+        self.maybe_maintain()
+
+    def _collect(self) -> None:
+        for qid, res, q, footprint in self.scheduler.done:
+            self.results[qid] = res
+            if self.cache is not None:
+                self.cache.put(q, self.cfg.k, res.ids, res.dists, footprint,
+                               nprobe=res.nprobe,
+                               recall_estimate=res.recall_estimate)
+        self.scheduler.done.clear()
+
+    def result(self, qid: int) -> Optional[QueryResult]:
+        """The query's result, or None while it is still in flight."""
+        return self.results.get(qid)
+
+    # -- writes (barriers) --------------------------------------------
+
+    def submit_insert(self, x: np.ndarray, ids: np.ndarray) -> None:
+        self.drain()
+        self.index.insert(x, ids)
+        self._after_write()
+
+    def submit_delete(self, ids: np.ndarray) -> int:
+        self.drain()
+        removed = self.index.delete(ids)
+        self._after_write()
+        return removed
+
+    def _after_write(self) -> None:
+        self.write_ops += 1
+        self._invalidate_cache()
+        self.maintenance.note_op()
+        self.maybe_maintain()
+
+    def _invalidate_cache(self) -> None:
+        if self.cache is None:
+            self._cache_version = self.index.version
+            return
+        delta = self.index.journal.delta_since(self._cache_version)
+        if delta is None or delta.structural:
+            self.cache.clear()
+        elif delta.dirty:
+            self.cache.invalidate_partitions(delta.dirty)
+        self._cache_version = self.index.version
+
+    def maybe_maintain(self, force: bool = False
+                       ) -> Optional[MaintenanceReport]:
+        """Run a maintenance pass if a drift trigger fired (or forced).
+        In-flight work is drained first (maintenance is a barrier);
+        maintenance mutations then invalidate the cache through the same
+        journal path as writes."""
+        if self._maintaining:
+            return None
+        if not force and self.maintenance.due() is None:
+            return None
+        self._maintaining = True     # drain() re-enters maybe_maintain
+        try:
+            self.drain()
+            rep = self.maintenance.run_if_due(force=force)
+        finally:
+            self._maintaining = False
+        if rep is not None:
+            self._invalidate_cache()
+        return rep
+
+    # -- telemetry -----------------------------------------------------
+
+    def stats(self) -> dict:
+        sch = self.scheduler
+        planned = (int(sum(len(f) for f in sch.plan_footprints))
+                   if sch.plan_footprints else 0)
+        return {
+            "queries_submitted": self.queries_submitted,
+            "queries_completed": len(self.results),
+            "cache_hits": self.cache_hits,
+            "cache_entries": len(self.cache) if self.cache else 0,
+            "cache_invalidated": self.cache.invalidated if self.cache else 0,
+            "write_ops": self.write_ops,
+            "rounds_run": sch.rounds_run,
+            "admitted_batches": sch._batches,
+            "partitions_streamed": sch.partitions_streamed,
+            "partitions_planned": planned,
+            "riding_savings": round(
+                1.0 - sch.partitions_streamed / planned, 4)
+            if planned else 0.0,
+            "vectors_streamed": sch.vectors_streamed,
+            "comparisons": sch.comparisons,
+            "maintenance_runs": len(self.maintenance.history),
+            "maintenance_reasons": [h["reason"]
+                                    for h in self.maintenance.history],
+        }

@@ -62,6 +62,85 @@ class Workload:
         return np.asarray(sorted(alive), dtype=np.int64)
 
 
+class IncrementalGroundTruth:
+    """Brute-force top-k ground truth over the *resident* subset of a
+    dataset, maintained incrementally across a workload replay.
+
+    The per-op replay loops used to rebuild the sorted resident-id array
+    and re-slice the ``(N_res, d)`` matrix from scratch before every
+    query op — an O(N) re-materialization on top of the unavoidable
+    O(B*N_res) GEMM.  This helper tracks inserts/deletes as set edits and
+    materializes the resident matrix (plus cached squared norms for L2)
+    lazily, only when a query op actually arrives after a membership
+    change.  Shared by ``launch/serve.py``, ``benchmarks/bench_serving.py``
+    and ``benchmarks/workload_driver.py``.
+    """
+
+    def __init__(self, ds: VectorDataset,
+                 initial_ids: Optional[np.ndarray] = None):
+        self.ds = ds
+        self._resident = set() if initial_ids is None else \
+            {int(i) for i in initial_ids}
+        self._dirty = True
+        self._ids: Optional[np.ndarray] = None      # sorted resident ids
+        self._x: Optional[np.ndarray] = None        # (N_res, d) view
+        self._x2: Optional[np.ndarray] = None       # cached ||x||^2 (l2)
+
+    @property
+    def resident_ids(self) -> np.ndarray:
+        self._materialize()
+        return self._ids
+
+    def insert(self, ids: np.ndarray) -> None:
+        self._resident.update(int(i) for i in np.asarray(ids).ravel())
+        self._dirty = True
+
+    def delete(self, ids: np.ndarray) -> None:
+        self._resident.difference_update(
+            int(i) for i in np.asarray(ids).ravel())
+        self._dirty = True
+
+    def apply(self, op: "Operation") -> None:
+        """Fold one workload operation's membership effect."""
+        if op.kind == "insert":
+            self.insert(op.ids)
+        elif op.kind == "delete":
+            self.delete(op.ids)
+
+    def _materialize(self) -> None:
+        if not self._dirty:
+            return
+        self._ids = np.asarray(sorted(self._resident), dtype=np.int64)
+        self._x = self.ds.vectors[self._ids]
+        self._x2 = (np.sum(self._x.astype(np.float64) ** 2, axis=1)
+                    if self.ds.metric == "l2" else None)
+        self._dirty = False
+
+    def topk(self, queries: np.ndarray, k: int) -> np.ndarray:
+        """(B, k) external-id ground truth for ``queries`` against the
+        current resident set (exact, brute force)."""
+        self._materialize()
+        q = np.asarray(queries, dtype=np.float32)
+        if q.ndim == 1:
+            q = q[None, :]
+        if len(self._ids) == 0:
+            return np.full((q.shape[0], k), -1, dtype=np.int64)
+        if self.ds.metric == "l2":
+            d = self._x2[None, :] - 2.0 * (q @ self._x.T)
+        else:
+            d = -(q @ self._x.T)
+        kk = min(k, d.shape[1])
+        part = np.argpartition(d, kk - 1, axis=1)[:, :kk]
+        order = np.take_along_axis(d, part, axis=1).argsort(
+            axis=1, kind="stable")
+        idx = np.take_along_axis(part, order, axis=1)
+        out = self._ids[idx]
+        if kk < k:
+            out = np.concatenate(
+                [out, np.full((q.shape[0], k - kk), -1, np.int64)], axis=1)
+        return out
+
+
 def generate(ds: VectorDataset, cfg: WorkloadConfig,
              initial_fraction: float = 0.3) -> Workload:
     """Build a workload over ``ds``: a fraction of vectors resident up front,

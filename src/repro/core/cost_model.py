@@ -62,10 +62,18 @@ def profile(dim: int, k: int = 100,
             sizes=(64, 256, 1024, 4096, 16384),
             repeats: int = 5, seed: int = 0) -> LatencyModel:
     """Offline profiling of the real scan path (paper §4.1 'measured through
-    offline profiling').  Times the jitted scan_topk on this host."""
+    offline profiling').  Times the jitted scan_topk on this host.
+
+    Warm-up is compile-counted, not guessed: each size re-runs the scan
+    until a call triggers zero new XLA compilations
+    (``sanitize.warm_until_stable``), so the timed loop deterministically
+    measures the steady state — a single untracked warm call can leave
+    lazily-reached shapes compiling inside the timed region and skew the
+    fitted coefficients."""
     import jax.numpy as jnp
 
     from ..kernels import ops
+    from .. import sanitize
 
     rng = np.random.default_rng(seed)
     lats = []
@@ -73,7 +81,9 @@ def profile(dim: int, k: int = 100,
     for s in sizes:
         x = jnp.asarray(rng.normal(size=(s, dim)), jnp.float32)
         kk = min(k, s)
-        ops.scan_topk(q, x, kk, impl="jnp")[0].block_until_ready()  # compile
+        sanitize.warm_until_stable(
+            lambda: ops.scan_topk(q, x, kk,
+                                  impl="jnp")[0].block_until_ready())
         t0 = time.perf_counter()
         for _ in range(repeats):
             ops.scan_topk(q, x, kk, impl="jnp")[0].block_until_ready()
@@ -109,6 +119,14 @@ class PartitionStats:
         otherwise bypasses."""
         self.hits[parts] += np.asarray(counts, dtype=np.float64)
         self.window += int(n_queries)
+
+    def boost(self, parts: np.ndarray, freq: float) -> None:
+        """Bump partitions' access *frequency* by ``freq`` (converted to
+        window-scaled hits, so ``access_freq`` moves by ``freq`` at the
+        current window).  The maintenance merge path uses this to credit
+        receiver partitions with the merged partition's traffic for later
+        estimates in the same round."""
+        self.hits[parts] += freq * max(self.window, 1)
 
     def access_freq(self, n: int, default: float = 0.0) -> np.ndarray:
         """A_lj in [0,1]; ``default`` is used before any query arrives."""

@@ -421,8 +421,7 @@ class Maintainer:
                 below.parent[ids[sel]] = int(m)
         # receiver frequency bump for later estimates in this round
         level.stats.ensure(level.num_partitions)
-        level.stats.hits[recv_ids] += extra_hits * max(
-            level.stats.window, 1)
+        level.stats.boost(recv_ids, extra_hits)
 
         # 2) swap-remove partition j
         last = level.num_partitions - 1

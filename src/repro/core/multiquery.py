@@ -118,6 +118,11 @@ class BatchPlan:
                                           # at the planned cutoff (APS
                                           # planners only; NaN on fallback
                                           # rows with no radius)
+    sel_dev: Optional[object] = None      # device residents of sel/qmask
+    qmask_dev: Optional[object] = None    # (the executor scans these; the
+                                          # host mirrors above are the
+                                          # introspection/distribution
+                                          # contract)
 
 
 @dataclass
@@ -135,6 +140,9 @@ class RoundPlan:
     geo: np.ndarray         # (B, M) seq-aligned geometry-space sq distances
     cc: np.ndarray          # (B, M) seq-aligned ||c_i - c_0|| distances
     recall_est: np.ndarray  # (B,) planner estimate at the planned cutoff
+    seq_dev: Optional[object] = None  # device-resident int32 seq (set by
+                            # the fused planner so the round executor
+                            # never re-uploads what the device produced)
 
 
 # ---------------------------------------------------------------------------
@@ -424,8 +432,11 @@ def _aps_probe_counts_batched(index: QuakeIndex, q: np.ndarray, k: int,
         # one jitted centroid-distance + top-n_consider pass on device
         cd, order = ops.scan_topk(jnp.asarray(q), jnp.asarray(cents), m,
                                   metric=cfg.metric, impl="auto")
+        # the batched APS estimator runs on host over the centroid pass
+        # output, so the pass result is pulled once per plan
+        # quakecheck: allow-sync(planner boundary pull for the host APS estimator)
         cd = np.asarray(cd, dtype=np.float64)
-        order = np.asarray(order, dtype=np.int64)
+        order = np.asarray(order, dtype=np.int64)  # quakecheck: allow-sync(planner boundary pull)
         if cfg.metric == "l2":
             geo_sel = np.maximum(cd, 0.0)
         else:   # minimization keys are -score; lift into MIPS geometry
@@ -618,14 +629,18 @@ def _aps_probe_counts_fused(index: QuakeIndex, q: np.ndarray, k: int,
         np.float32(index._max_norm_sq), np.float32(kth_med), table_d,
         np.float32(target), m=m, metric=cfg.metric)
 
+    # the planner contract (probe selection, round chunking, the host APS
+    # re-estimator) is host-side — one pull per plan at this boundary
+    # quakecheck: allow-sync(fused planner boundary: host plan contract)
     counts = np.asarray(counts_d, dtype=np.int64)
-    seq = np.asarray(seq_d, dtype=np.int64)
-    r_est = np.asarray(r_d, dtype=np.float64)
+    seq = np.asarray(seq_d, dtype=np.int64)  # quakecheck: allow-sync(fused planner boundary)
+    r_est = np.asarray(r_d, dtype=np.float64)  # quakecheck: allow-sync(fused planner boundary)
     if full:
         return RoundPlan(seq=seq, counts=counts,
-                         geo=np.asarray(geo_d, dtype=np.float64),
-                         cc=np.asarray(cc_d, dtype=np.float64),
-                         recall_est=r_est)
+                         geo=np.asarray(geo_d, dtype=np.float64),   # quakecheck: allow-sync(fused planner boundary)
+                         cc=np.asarray(cc_d, dtype=np.float64),     # quakecheck: allow-sync(fused planner boundary)
+                         recall_est=r_est,
+                         seq_dev=seq_d.astype(jnp.int32))
     n_max = int(counts.max())
     vmask = np.arange(n_max)[None, :] < counts[:, None]
     sel = np.where(vmask, seq[:, :n_max], 0).astype(np.int64)
@@ -636,18 +651,34 @@ def _aps_probe_counts_fused(index: QuakeIndex, q: np.ndarray, k: int,
 # Pack: probe sets -> partition union + per-query mask (device primitive)
 # ---------------------------------------------------------------------------
 
-@functools.partial(jax.jit, static_argnames=("p", "n_union"))
-def _pack_plan(sel_q, qvalid, nearest, *, p: int, n_union: int):
-    """Scatter per-query probe sets into a (B, P) selection matrix and pack
-    it through the device-side ``pack_union`` primitive.  ``nearest`` (B,)
-    anchors each query's nearest partition above the frequency ranking so
-    a union cap never drops a query's best probe."""
+@functools.partial(jax.jit, static_argnames=("p", "n_union", "u_pad"))
+def _pack_plan(sel_q, qvalid, nearest, n_real, *, p: int, n_union: int,
+               u_pad: int):
+    """Scatter per-query probe sets into a (B, P) selection matrix, pack
+    it through the device-side ``pack_union`` primitive, and apply the
+    inert-tail discipline on device: union slots at or past ``n_real``
+    (a dynamic scalar — distinct values share one executable) duplicate
+    slot 0 under an all-False mask, and the static bucket width ``u_pad``
+    is reached by appending more such slots when it exceeds the packable
+    width.  ``nearest`` (B,) anchors each query's nearest partition above
+    the frequency ranking so a union cap never drops a query's best
+    probe."""
     b = sel_q.shape[0]
     rows = jnp.broadcast_to(jnp.arange(b)[:, None], sel_q.shape)
     selected = jnp.zeros((b, p), jnp.bool_).at[rows, sel_q].max(qvalid)
     anchor = jnp.zeros((p,), jnp.bool_).at[nearest].set(True)
-    return ops.pack_union(selected, n_union,
-                          priority=anchor.astype(jnp.int32) * (b + 1))
+    sel, qmask = ops.pack_union(selected, n_union,
+                                priority=anchor.astype(jnp.int32)
+                                * (b + 1))
+    live = jnp.arange(n_union) < n_real
+    sel = jnp.where(live, sel, sel[0])
+    qmask = qmask & live[None, :]
+    if u_pad > n_union:
+        sel = jnp.concatenate(
+            [sel, jnp.full((u_pad - n_union,), sel[0], sel.dtype)])
+        qmask = jnp.concatenate(
+            [qmask, jnp.zeros((b, u_pad - n_union), jnp.bool_)], axis=1)
+    return sel, qmask
 
 
 def plan_batch(index: QuakeIndex, q: np.ndarray, k: int,
@@ -735,20 +766,17 @@ def plan_batch(index: QuakeIndex, q: np.ndarray, k: int,
             [sel_q, np.zeros((b, c_pad - n_cols), dtype=sel_q.dtype)], 1)
         qvalid = np.concatenate(
             [qvalid, np.zeros((b, c_pad - n_cols), dtype=bool)], 1)
+    # pack + inert-tail masking stay on device (n_real rides as a dynamic
+    # scalar, so distinct cap/hit counts share one executable); the scan
+    # consumes sel_d/qmask_d directly — no host round trip on the hot path
     sel_d, qmask_d = _pack_plan(jnp.asarray(sel_q), jnp.asarray(qvalid),
-                                jnp.asarray(nearest), p=p, n_union=n_dev)
-    sel = np.array(sel_d, dtype=np.int64)      # host copies (writable)
-    qmask = np.array(qmask_d)
-    # tail slots (bucket padding, or probes truncated by the cap) are
-    # inert: duplicate a real partition under an all-False mask
-    if n_real < len(sel):
-        sel[n_real:] = sel[0]
-        qmask[:, n_real:] = False
-    if u_pad > n_dev:
-        sel = np.concatenate(
-            [sel, np.full(u_pad - n_dev, sel[0], dtype=sel.dtype)])
-        qmask = np.concatenate(
-            [qmask, np.zeros((b, u_pad - n_dev), dtype=bool)], axis=1)
+                                jnp.asarray(nearest), n_real, p=p,
+                                n_union=n_dev, u_pad=u_pad)
+    # the distributed engine and plan introspection read sel/qmask on
+    # host: one read-only pull at the plan boundary, never re-uploaded
+    # quakecheck: allow-sync(host plan mirror for distributed/introspection)
+    sel = np.asarray(sel_d, dtype=np.int64)
+    qmask = np.asarray(qmask_d)  # quakecheck: allow-sync(host plan mirror)
     eff = qmask[:, :n_real].sum(axis=1).astype(np.int64)
     if r_est is not None:
         # a cap that truncated a query's probes invalidates its planner
@@ -758,7 +786,7 @@ def plan_batch(index: QuakeIndex, q: np.ndarray, k: int,
     return BatchPlan(sel=sel, qmask=qmask, nprobe=eff, n_real=n_real,
                      planned=counts, anchor=np.asarray(nearest,
                                                        dtype=np.int64),
-                     recall_est=r_est)
+                     recall_est=r_est, sel_dev=sel_d, qmask_dev=qmask_d)
 
 
 # ---------------------------------------------------------------------------
@@ -875,6 +903,7 @@ def run_round_loop(plan: RoundPlan, k: int, target: float, table,
         # refined recall estimate from the *running* k-th distance —
         # live rows only; exited rows' estimates are frozen
         rows = np.nonzero(live)[0]
+        # quakecheck: allow-sync(Algorithm 2's per-round kth-distance pull: the early-exit recall re-estimate is host-side by design)
         kth = np.asarray(td[rows, k - 1], dtype=np.float64)
         full_heap = kth < MASK_DIST
         rho_sq = np.where(full_heap, rho_fn(kth, rows), np.inf)
@@ -1157,8 +1186,12 @@ class BatchedSearchExecutor:
                           planner=self.planner,
                           cent_norms=self._cent_norms,
                           cache=self.planner_cache)
-        sel_dev = jnp.asarray(plan.sel.astype(np.int32))
-        qmask_dev = jnp.asarray(plan.qmask)
+        # the planner's packed plan is already device-resident; re-upload
+        # only if a caller hands in a host-constructed BatchPlan
+        sel_dev = plan.sel_dev if plan.sel_dev is not None \
+            else jnp.asarray(plan.sel.astype(np.int32))
+        qmask_dev = plan.qmask_dev if plan.qmask_dev is not None \
+            else jnp.asarray(plan.qmask)
         if snap.scales is not None:     # int8 residual codes
             rerank = self.int8_rerank and self._host_f32 is not None
             k_scan = 2 * k if rerank else k
@@ -1167,14 +1200,16 @@ class BatchedSearchExecutor:
                 sel_dev, qmask_dev, k_scan,
                 metric=self.index.config.metric, centroids=snap.centroids)
             if rerank:
+                # quakecheck: allow-sync(int8 rerank gathers from the host f32 mirror)
                 dd, flat = self._rerank_exact(q, np.asarray(flat), k)
         else:
             dd, flat = ops.scan_selected_topk(
                 jnp.asarray(q), snap.data, self._valid,
                 sel_dev, qmask_dev, k,
                 metric=self.index.config.metric, impl=impl or self.impl)
+        # quakecheck: allow-sync(result boundary: BatchResult is a host contract)
         dd = np.asarray(dd, dtype=np.float64)
-        flat = np.asarray(flat)
+        flat = np.asarray(flat)  # quakecheck: allow-sync(result boundary)
         ids = np.where(flat >= 0,
                        self._flat_ids[np.maximum(flat, 0)], -1)
         dd = np.where(dd >= MASK_DIST, np.inf, dd)
@@ -1191,15 +1226,17 @@ class BatchedSearchExecutor:
     def scan_probe_round(self, q_dev, seq_dev, take: np.ndarray,
                          kept: np.ndarray, k_keep: int, snap=None,
                          impl: Optional[str] = None,
-                         u_pow2: bool = False):
+                         u_pow2: bool = False,
+                         seq_host: Optional[np.ndarray] = None):
         """One packed partition-union scan for a probe round over an
         arbitrary query row set: ``q_dev`` (B, d) queries, ``seq_dev``
         (B, M) scan-ordered candidate partitions, ``take`` (B, M) bool
         marking the probe-sequence cells consumed this round, ``kept``
         the round's distinct union partition ids.  Packs through
-        ``ops.pack_round`` (bucketed union width) and scans the snapshot
-        once; returns device ``(dists (B, k_keep), flat idx (B, k_keep),
-        stats)`` in ``run_round_loop``'s ``scan_round`` contract.
+        ``ops.pack_round_masked`` (bucketed union width, inert tail
+        applied on device) and scans the snapshot once; returns device
+        ``(dists (B, k_keep), flat idx (B, k_keep), stats)`` in
+        ``run_round_loop``'s ``scan_round`` contract.
 
         This is the scan primitive both round drivers share: the
         fixed-membership per-batch loop (``_search_rounds``) and the
@@ -1210,9 +1247,16 @@ class BatchedSearchExecutor:
         ladder (``u_bucket * 2^i``) — serving rounds see wildly varying
         union sizes, and the ladder bounds the distinct compiled scan
         shapes at log cost instead of linear.
+
+        ``seq_host`` is the host mirror of ``seq_dev``: with it the
+        per-round comparison count is exact (every taken cell weighted
+        by its partition size — candidate partitions are distinct within
+        a row, so this equals the packed qmask accounting) without
+        pulling the packed plan off device; without it the stats report
+        ``comparisons == vectors`` (each streamed partition counted
+        once).
         """
         snap = self.snapshot() if snap is None else snap
-        b = q_dev.shape[0]
         # pack against the snapshot's (padded) partition count: stable
         # across rebuilds when part_bucket > 1, so the jitted pack
         # survives maintenance epochs
@@ -1224,27 +1268,20 @@ class BatchedSearchExecutor:
         if u_pow2:
             u_pad = self.u_bucket * ops._next_pow2(
                 -(-n_real // self.u_bucket))
-        n_dev = min(u_pad, p)
-        sel_d, qmask_d = ops.pack_round(
-            seq_dev, jnp.asarray(take), prio0, p=p, n_union=n_dev)
-        sel = np.array(sel_d, dtype=np.int64)   # host copies (writable)
-        qmask = np.array(qmask_d)
-        if n_real < len(sel):        # inert tail (bucket padding)
-            sel[n_real:] = sel[0]
-            qmask[:, n_real:] = False
-        if u_pad > n_dev:
-            sel = np.concatenate(
-                [sel, np.full(u_pad - n_dev, sel[0], dtype=sel.dtype)])
-            qmask = np.concatenate(
-                [qmask, np.zeros((b, u_pad - n_dev), dtype=bool)], 1)
-        sizes_sel = self._sizes[sel[:n_real]]
-        st = {"partitions": int(n_real),
-              "vectors": int(sizes_sel.sum()),
-              "comparisons": int(
-                  (qmask[:, :n_real].astype(np.int64)
-                   * sizes_sel[None, :]).sum())}
-        sel_dev = jnp.asarray(sel.astype(np.int32))
-        qmask_dev = jnp.asarray(qmask)
+        # pack + inert-tail masking on device (no host round trip; the
+        # dynamic n_real scalar shares one executable across round sizes)
+        sel_dev, qmask_dev = ops.pack_round_masked(
+            seq_dev, jnp.asarray(take), prio0, n_real, p=p, u_pad=u_pad)
+        # stats from the host-side plan data the caller already holds —
+        # the packed plan itself never leaves the device
+        sizes_kept = self._sizes[np.asarray(kept, dtype=np.int64)]
+        vectors = int(sizes_kept.sum())
+        if seq_host is not None:
+            comparisons = int(self._sizes[seq_host[take]].sum())
+        else:
+            comparisons = vectors
+        st = {"partitions": int(n_real), "vectors": vectors,
+              "comparisons": comparisons}
         if snap.scales is not None:
             d, flat = ops.scan_selected_topk_q8(
                 q_dev, snap.data, snap.scales, self._valid,
@@ -1275,23 +1312,27 @@ class BatchedSearchExecutor:
                             cache=self.planner_cache,
                             cent_norms=self._cent_norms)
         q_dev = jnp.asarray(q)
-        seq_dev = jnp.asarray(rplan.seq.astype(np.int32))
+        seq_dev = rplan.seq_dev if rplan.seq_dev is not None \
+            else jnp.asarray(rplan.seq.astype(np.int32))
         rerank = (snap.scales is not None and self.int8_rerank
                   and self._host_f32 is not None)
         k_keep = 2 * k if rerank else k
 
         def scan_round(take, kept):
             return self.scan_probe_round(q_dev, seq_dev, take, kept,
-                                         k_keep, snap=snap, impl=impl)
+                                         k_keep, snap=snap, impl=impl,
+                                         seq_host=rplan.seq)
 
         td, ti, nprobe, r_est, n_rounds, trace, stats = run_round_loop(
             rplan, k, target, idx._beta_table, _batch_rho_fn(idx, q),
             scan_round, rounds=rounds, k_keep=k_keep)
         if rerank:
+            # quakecheck: allow-sync(int8 rerank gathers from the host f32 mirror)
             dd, flat = self._rerank_exact(q, np.asarray(ti), k)
         else:
+            # quakecheck: allow-sync(result boundary: BatchResult is a host contract)
             dd = np.asarray(td, dtype=np.float64)[:, :k]
-            flat = np.asarray(ti)[:, :k]
+            flat = np.asarray(ti)[:, :k]  # quakecheck: allow-sync(result boundary)
         ids = np.where(flat >= 0,
                        self._flat_ids[np.maximum(flat, 0)], -1)
         dd = np.where(dd >= MASK_DIST, np.inf, dd)

@@ -697,9 +697,14 @@ class RoundScheduler:
                 seq_pad, take_pad = seq_mat, take
             d, flat, st = self.ex.scan_probe_round(
                 jnp.asarray(q_pad), jnp.asarray(seq_pad.astype(np.int32)),
-                take_pad, kept, self._k_keep, snap=self._snap, u_pow2=True)
+                take_pad, kept, self._k_keep, snap=self._snap, u_pow2=True,
+                seq_host=seq_pad)
+            # the scheduler's running top-k folds on host because the row
+            # set churns every round (admissions/retirements) — one pull
+            # per round over the active rows
+            # quakecheck: allow-sync(per-round fold: host top-k over a churning row set)
             d = np.asarray(d, dtype=np.float64)[:b]
-            flat = np.asarray(flat, dtype=np.int64)[:b]
+            flat = np.asarray(flat, dtype=np.int64)[:b]  # quakecheck: allow-sync(per-round fold)
 
         # fold into per-query running top-k (host side: rows churn)
         td = np.stack([pq.td for pq in rows])
@@ -783,6 +788,14 @@ class RoundScheduler:
                 self.done.append((pq.qid, res, pq.q,
                                   pq.seq[:pq.count]))
         self.active = [pq for i, pq in enumerate(rows) if not finished[i]]
+
+    def take_done(self) -> List[tuple]:
+        """Hand off and clear the finished-query list — the write-barrier
+        API for consuming ``done`` (callers must not mutate the list in
+        place; ownership of the returned batch transfers to the caller)."""
+        out = self.done
+        self.done = []
+        return out
 
     def drain(self) -> None:
         while self.step():
@@ -935,13 +948,12 @@ class ServingRuntime:
         self.maybe_maintain()
 
     def _collect(self) -> None:
-        for qid, res, q, footprint in self.scheduler.done:
+        for qid, res, q, footprint in self.scheduler.take_done():
             self.results[qid] = res
             if self.cache is not None:
                 self.cache.put(q, self.cfg.k, res.ids, res.dists, footprint,
                                nprobe=res.nprobe,
                                recall_estimate=res.recall_estimate)
-        self.scheduler.done.clear()
 
     def result(self, qid: int) -> Optional[QueryResult]:
         """The query's result, or None while it is still in flight."""

@@ -166,6 +166,34 @@ def pack_round(sel_q: Array, qvalid: Array, priority: Array, *,
     return pack_union(selected, n_union, priority=priority)
 
 
+@functools.partial(jax.jit, static_argnames=("p", "u_pad"))
+def pack_round_masked(sel_q: Array, qvalid: Array, priority: Array,
+                      n_real, *, p: int, u_pad: int
+                      ) -> Tuple[Array, Array]:
+    """``pack_round`` with the inert-tail discipline applied on device.
+
+    ``n_real`` (dynamic scalar — distinct values share one compiled
+    executable) is the number of live union slots; slots at or past it
+    duplicate ``sel[0]`` under an all-False mask, and when the static
+    padded width ``u_pad`` exceeds the packable width ``min(u_pad, p)``
+    the surplus columns are appended the same way.  This replaces the
+    host-side pattern of pulling the packed plan back, mutating writable
+    copies and re-uploading them — the plan never leaves the device.
+    """
+    n_dev = min(u_pad, p)
+    sel, qmask = pack_round(sel_q, qvalid, priority, p=p, n_union=n_dev)
+    live = jnp.arange(n_dev) < n_real
+    sel = jnp.where(live, sel, sel[0])
+    qmask = qmask & live[None, :]
+    if u_pad > n_dev:
+        b = qmask.shape[0]
+        sel = jnp.concatenate(
+            [sel, jnp.full((u_pad - n_dev,), sel[0], sel.dtype)])
+        qmask = jnp.concatenate(
+            [qmask, jnp.zeros((b, u_pad - n_dev), jnp.bool_)], axis=1)
+    return sel, qmask
+
+
 @functools.partial(jax.jit, static_argnames=("k",))
 def topk_merge(dists_a: Array, idx_a: Array, dists_b: Array, idx_b: Array,
                k: int) -> Tuple[Array, Array]:

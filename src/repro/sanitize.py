@@ -1,0 +1,154 @@
+"""Runtime sanitizer harness for the device-resident executor stack.
+
+Three composable guards (see ``docs/static_analysis.md``):
+
+* **Transfer guard** — ``jax.transfer_guard("disallow")`` turns any
+  *implicit* device<->host transfer inside the guarded region into an
+  error.  Explicit ``jax.device_put`` / ``jax.device_get`` / ``jnp.asarray``
+  conversions still work, so the guarded region proves the hot path only
+  moves data at its declared boundaries (the quakecheck ``allow-sync``
+  points).
+* **NaN debugging** — ``jax.debug_nans`` re-runs de-optimized on NaN
+  production so silent NaN propagation in kernels fails loudly.
+* **Compile-event counter** — counts real XLA compilations via
+  ``jax.monitoring``'s ``backend_compile`` duration events.  This is the
+  ground truth for jit-cache discipline: the shape-padding buckets
+  (``u_bucket``/``b_bucket``/``part_bucket``) exist to keep this counter
+  flat, and ``results/compile_budget.json`` pins per-entry-point budgets
+  that CI enforces (:func:`assert_compile_budget`).
+
+``sanitized()`` stacks them; tests opt in through the ``sanitized``
+pytest fixture (``tests/conftest.py``).  ``cost_model.profile`` uses the
+counter to warm deterministically: re-run until a call compiles nothing,
+instead of hoping one warm call covered every shape.
+"""
+from __future__ import annotations
+
+import contextlib
+import json
+import threading
+from pathlib import Path
+from typing import Dict, Iterator, Optional
+
+import jax
+
+__all__ = ["compile_count", "compile_events", "sanitized",
+           "warm_until_stable", "load_compile_budget",
+           "assert_compile_budget", "BUDGET_PATH"]
+
+BUDGET_PATH = Path(__file__).resolve().parents[2] / "results" \
+    / "compile_budget.json"
+
+_lock = threading.Lock()
+_count = 0
+_registered = False
+
+
+def _listener(event: str, duration: float, **kwargs) -> None:
+    # '/jax/core/compile/backend_compile_duration' fires once per actual
+    # XLA compilation (cache hits don't emit it); match loosely so a
+    # renamed prefix on a newer JAX still counts (the counter-sanity test
+    # in tests/test_sanitize.py fails loudly if the event disappears).
+    global _count
+    if "backend_compile" in event:
+        with _lock:
+            _count += 1
+
+
+def _ensure_listener() -> None:
+    # jax.monitoring has no unregister API: register once, snapshot the
+    # counter per context instead.
+    global _registered
+    with _lock:
+        if _registered:
+            return
+        jax.monitoring.register_event_duration_secs_listener(_listener)
+        _registered = True
+
+
+def compile_count() -> int:
+    """Monotonic count of XLA compilations observed so far."""
+    _ensure_listener()
+    with _lock:
+        return _count
+
+
+class CompileEvents:
+    """Counter scope: ``new()`` is the number of compilations since the
+    scope opened (or since the last ``reset()``)."""
+
+    def __init__(self) -> None:
+        self._start = compile_count()
+
+    def new(self) -> int:
+        return compile_count() - self._start
+
+    def reset(self) -> None:
+        self._start = compile_count()
+
+
+@contextlib.contextmanager
+def compile_events() -> Iterator[CompileEvents]:
+    yield CompileEvents()
+
+
+@contextlib.contextmanager
+def sanitized(transfers: bool = True, nans: bool = True,
+              compiles: bool = True) -> Iterator[Optional[CompileEvents]]:
+    """Run the enclosed block under the stacked sanitizers.
+
+    Yields the :class:`CompileEvents` scope when ``compiles`` is on
+    (else None).  Device operands must be staged with explicit
+    ``device_put``/``jnp.asarray`` *before* entering when ``transfers``
+    is on — that is the point.
+    """
+    with contextlib.ExitStack() as stack:
+        if transfers:
+            stack.enter_context(jax.transfer_guard("disallow"))
+        if nans:
+            stack.enter_context(jax.debug_nans(True))
+        yield CompileEvents() if compiles else None
+
+
+def warm_until_stable(fn, *, max_rounds: int = 8) -> int:
+    """Call ``fn()`` until a call triggers zero new compilations (the
+    deterministic warm-up ``cost_model.profile`` uses — a single warm
+    call can miss shapes reached lazily).  Returns the number of warm
+    calls made; raises if the compile count never settles."""
+    ev = CompileEvents()
+    for i in range(max_rounds):
+        ev.reset()
+        fn()
+        if ev.new() == 0:
+            return i + 1
+    raise RuntimeError(
+        f"compile count did not stabilize after {max_rounds} warm calls "
+        f"— the timed path re-traces per call (jit cache fragmentation; "
+        f"see quakecheck QK102)")
+
+
+def load_compile_budget(path: Optional[Path] = None) -> Dict[str, int]:
+    """The per-entry-point compile budgets (``results/compile_budget.json``
+    ``{"budgets": {entry_point: max_compiles}}``)."""
+    p = Path(path) if path is not None else BUDGET_PATH
+    with open(p, "r", encoding="utf-8") as fh:
+        data = json.load(fh)
+    return {k: int(v) for k, v in data["budgets"].items()}
+
+
+def assert_compile_budget(entry_point: str, observed: int,
+                          path: Optional[Path] = None) -> None:
+    """Fail (AssertionError) if ``observed`` compilations exceed the
+    entry point's pinned budget.  Unknown entry points fail too: a new
+    hot path must declare its budget before CI will gate it."""
+    budgets = load_compile_budget(path)
+    if entry_point not in budgets:
+        raise AssertionError(
+            f"no compile budget declared for {entry_point!r} in "
+            f"{path or BUDGET_PATH} — add one (budgets: "
+            f"{sorted(budgets)})")
+    budget = budgets[entry_point]
+    assert observed <= budget, (
+        f"{entry_point}: {observed} compilations observed, budget is "
+        f"{budget} — a shape-padding bucket regressed (quakecheck QK102; "
+        f"see docs/static_analysis.md)")

@@ -1,0 +1,20 @@
+"""QK103-clean (parse-only fixture): guarded launcher, int32-accumulated
+int8 dot, f32-only kernel body."""
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+
+def _scale_kernel(x_ref, o_ref):
+    o_ref[...] = x_ref[...].astype(jnp.float32) * 2.0
+
+
+def launch_scale(x, block_q=8):
+    b = x.shape[0]
+    assert b % block_q == 0      # tile divisibility guard
+    return pl.pallas_call(_scale_kernel, out_shape=x)(x)
+
+
+def dot_q8(codes, cents, dn):
+    return lax.dot_general(codes, cents, dn,
+                           preferred_element_type=jnp.int32)

@@ -1,0 +1,9 @@
+"""Seeded QK100 violation: allow-sync pragma without a reason (an
+undocumented suppression is itself a finding)."""
+import numpy as np
+import jax.numpy as jnp
+
+
+def hot_path(q):  # quakecheck: device-path
+    d = jnp.sum(q)
+    return np.asarray(d)  # quakecheck: allow-sync()

@@ -1,0 +1,12 @@
+"""Seeded QK101 violations: host syncs on device values inside a
+device-resident function (registered via the device-path pragma)."""
+import numpy as np
+import jax.numpy as jnp
+
+
+def hot_scan(q):  # quakecheck: device-path
+    d = jnp.sum(q * q, axis=1)
+    pulled = np.asarray(d)          # QK101: implicit device->host pull
+    kth = float(d[0])               # QK101: concretizes a device value
+    listed = d.tolist()             # QK101: .tolist() on a device value
+    return pulled, kth, listed

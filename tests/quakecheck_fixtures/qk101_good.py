@@ -1,0 +1,15 @@
+"""QK101-clean: documented boundary pull + host-side helper."""
+import numpy as np
+import jax.numpy as jnp
+
+
+def hot_scan(q):  # quakecheck: device-path
+    d = jnp.sum(q * q, axis=1)
+    # quakecheck: allow-sync(result boundary pull)
+    out = np.asarray(d)
+    return out
+
+
+def host_helper(x):
+    # not device-resident: plain numpy is fine here
+    return np.asarray(x, dtype=np.float64)

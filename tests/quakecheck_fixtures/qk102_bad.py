@@ -1,0 +1,19 @@
+"""Seeded QK102 violations: data-dependent static arg without a bucket,
+jit constructed inside a loop, immediately-invoked jit."""
+import functools
+
+import jax
+
+
+@functools.partial(jax.jit, static_argnames=("n",))
+def pad_scan_bad(x, *, n):
+    return x[:n]
+
+
+def caller_bad(xs, counts):
+    n = int(counts.max())        # data-dependent, never bucketed
+    out = pad_scan_bad(xs, n=n)  # QK102: fragments the jit cache
+    y = xs
+    for _ in range(3):
+        y = jax.jit(lambda a: a + 1)(y)   # QK102: jit built per iteration
+    return out, y

@@ -1,0 +1,11 @@
+"""Seeded QK104 violation: a donated operand is read after the call that
+donated its buffer."""
+import jax
+
+_scatter_bad = jax.jit(lambda a, u: a.at[0].set(u), donate_argnums=(0,))
+
+
+def update_bad(buf, val):
+    out = _scatter_bad(buf, val)
+    total = buf.sum()       # QK104: buf's buffer was donated above
+    return out, total

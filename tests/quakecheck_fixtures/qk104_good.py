@@ -1,0 +1,10 @@
+"""QK104-clean: the donated name is rebound by the donating statement
+itself, so every later read sees the new buffer."""
+import jax
+
+_scatter_good = jax.jit(lambda a, u: a.at[0].set(u), donate_argnums=(0,))
+
+
+def update_good(buf, val):
+    buf = _scatter_good(buf, val)   # same-statement rebind: safe
+    return buf.sum()

@@ -1,0 +1,13 @@
+"""Seeded QK105 violations: guarded scheduler state mutated from outside
+the owning class (bypasses the write-barrier discipline)."""
+
+
+class RuntimeBad:
+    def __init__(self, scheduler):
+        self.scheduler = scheduler
+
+    def collect(self):
+        out = list(self.scheduler.done)
+        self.scheduler.done.clear()     # QK105: cross-object mutation
+        self.scheduler.active = []      # QK105: cross-object write
+        return out

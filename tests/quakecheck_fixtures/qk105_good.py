@@ -1,0 +1,21 @@
+"""QK105-clean: the owner mutates its own state; consumers go through
+the owner's hand-off API."""
+
+
+class SchedulerGood:
+    def __init__(self):
+        self.done = []
+        self.active = []
+
+    def take_done(self):
+        out = self.done
+        self.done = []      # owner's prerogative
+        return out
+
+
+class RuntimeGood:
+    def __init__(self, scheduler):
+        self.scheduler = scheduler
+
+    def collect(self):
+        return self.scheduler.take_done()   # sanctioned API

@@ -1,0 +1,96 @@
+"""quakecheck rule suite: every rule family must flag its seeded-bad
+fixture and pass its known-good twin, pragmas must suppress and
+register, and the repo itself must lint clean (the acceptance bar)."""
+import pathlib
+import subprocess
+import sys
+
+import pytest
+
+from tools.quakecheck import lint_paths, lint_source
+
+FIXTURES = pathlib.Path(__file__).parent / "quakecheck_fixtures"
+REPO = pathlib.Path(__file__).resolve().parents[1]
+
+
+def rules_in(path):
+    return sorted({f.rule for f in lint_paths([str(path)])})
+
+
+@pytest.mark.parametrize("rule,bad,good", [
+    ("QK101", "qk101_bad.py", "qk101_good.py"),
+    ("QK102", "qk102_bad.py", "qk102_good.py"),
+    ("QK103", "kernels/qk103_bad.py", "kernels/qk103_good.py"),
+    ("QK104", "qk104_bad.py", "qk104_good.py"),
+    ("QK105", "qk105_bad.py", "qk105_good.py"),
+])
+def test_rule_flags_bad_passes_good(rule, bad, good):
+    assert rules_in(FIXTURES / bad) == [rule]
+    assert rules_in(FIXTURES / good) == []
+
+
+def test_bad_fixtures_have_expected_counts():
+    # each seeded violation is individually detected, not just the file
+    assert len(lint_paths([str(FIXTURES / "qk101_bad.py")])) == 3
+    assert len(lint_paths([str(FIXTURES / "qk102_bad.py")])) >= 2
+    assert len(lint_paths([str(FIXTURES / "kernels/qk103_bad.py")])) == 4
+    assert len(lint_paths([str(FIXTURES / "qk104_bad.py")])) == 1
+    assert len(lint_paths([str(FIXTURES / "qk105_bad.py")])) == 2
+
+
+def test_qk100_reasonless_allow_sync():
+    rules = rules_in(FIXTURES / "qk100_bad.py")
+    # the empty-reason pragma is flagged AND does not suppress the sync
+    assert rules == ["QK100", "QK101"]
+
+
+def test_fixture_dir_as_a_whole():
+    findings = lint_paths([str(FIXTURES)])
+    assert {f.rule for f in findings} == \
+        {"QK100", "QK101", "QK102", "QK103", "QK104", "QK105"}
+    assert all("good" not in f.path for f in findings)
+
+
+def test_inline_disable_pragma():
+    src = (
+        "import jax\n"
+        "def run(xs):\n"
+        "    for _ in range(2):\n"
+        "        xs = jax.jit(lambda a: a + 1)(xs)"
+        "  # quakecheck: disable=QK102(bench harness, built twice)\n"
+        "    return xs\n")
+    assert lint_source(src, "t.py") == []
+    assert any(f.rule == "QK102"
+               for f in lint_source(src.replace(
+                   "  # quakecheck: disable=QK102(bench harness, "
+                   "built twice)", ""), "t.py"))
+
+
+def test_device_path_pragma_registers():
+    src = ("import numpy as np, jax.numpy as jnp\n"
+           "def f(q):  # quakecheck: device-path\n"
+           "    d = jnp.sum(q)\n"
+           "    return np.asarray(d)\n")
+    assert [f.rule for f in lint_source(src, "t.py")] == ["QK101"]
+    # without the marker the same body is host code
+    assert lint_source(src.replace(
+        "  # quakecheck: device-path", ""), "t.py") == []
+
+
+def test_repo_lints_clean():
+    """Acceptance criterion: the stack carries no undocumented findings."""
+    findings = lint_paths([str(REPO / "src")])
+    assert findings == [], "\n".join(f.render() for f in findings)
+
+
+def test_cli_exit_codes():
+    ok = subprocess.run(
+        [sys.executable, "-m", "tools.quakecheck", "src"],
+        cwd=REPO, capture_output=True, text=True)
+    assert ok.returncode == 0, ok.stdout + ok.stderr
+    bad = subprocess.run(
+        [sys.executable, "-m", "tools.quakecheck",
+         str(FIXTURES / "qk101_bad.py")],
+        cwd=REPO, capture_output=True, text=True)
+    assert bad.returncode == 1
+    assert "QK101" in bad.stdout

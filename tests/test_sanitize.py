@@ -1,0 +1,166 @@
+"""Runtime sanitizer harness: compile-event counter sanity, the
+compile-budget gate, shape-bucket recompile constancy for the packed
+round scan, and sanitized (transfer-guarded) runs of the fused-planner
+and packed-scan device paths."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import sanitize
+from repro.core import QuakeIndex
+from repro.core import multiquery as mq
+from repro.core.multiquery import get_executor, plan_batch
+from repro.data import datasets
+from repro.kernels import ops
+
+
+@pytest.fixture(scope="module")
+def built():
+    ds = datasets.clustered(3000, 16, n_clusters=12, seed=0)
+    idx = QuakeIndex.build(ds.vectors, num_partitions=24, kmeans_iters=3)
+    ex = get_executor(idx)
+    ex.snapshot()
+    return ds, idx, ex
+
+
+# ---------------------------------------------------------------------------
+# counter + budget mechanics
+# ---------------------------------------------------------------------------
+
+def test_compile_counter_sanity():
+    """The monitoring event the counter keys on must fire on a real
+    compilation — if a newer JAX renames the event, this fails loudly
+    instead of the budget gate silently passing."""
+    with sanitize.compile_events() as ev:
+        f = jax.jit(lambda x: x * 3 + 1)
+        f(jnp.ones((13,))).block_until_ready()   # fresh shape: compiles
+        assert ev.new() >= 1
+        ev.reset()
+        f(jnp.ones((13,))).block_until_ready()   # cache hit: no event
+        assert ev.new() == 0
+
+
+def test_warm_until_stable():
+    g = jax.jit(lambda x: x - 2)
+    x = jnp.ones((17,))
+    calls = sanitize.warm_until_stable(
+        lambda: g(x).block_until_ready())
+    assert calls >= 1
+    with sanitize.compile_events() as ev:
+        g(x).block_until_ready()
+    assert ev.new() == 0
+
+
+def test_compile_budget_file():
+    budgets = sanitize.load_compile_budget()
+    assert "scan_probe_round.steady" in budgets
+    assert budgets["scan_probe_round.steady"] == 0
+    sanitize.assert_compile_budget("scan_probe_round.steady", 0)
+    with pytest.raises(AssertionError):
+        sanitize.assert_compile_budget("scan_probe_round.steady", 1)
+    with pytest.raises(AssertionError):
+        sanitize.assert_compile_budget("no.such.entry_point", 0)
+
+
+# ---------------------------------------------------------------------------
+# recompile constancy: geometric B/U padding vs varying flush sizes
+# ---------------------------------------------------------------------------
+
+# (rows flushed, probe-window width) — kept-union sizes land on several
+# rungs of the u_pow2 ladder, and rows vary under a fixed B padding
+FLUSH_SWEEP = [(1, 1), (2, 1), (5, 2), (8, 2), (8, 3)]
+B_PAD, M = 8, 10
+
+
+def _round_inputs(ds, idx, n_rows, w, seed_q):
+    rng = np.random.default_rng(7)   # fixed: same seq matrix every call
+    seq = np.stack([rng.permutation(idx.num_partitions)[:M]
+                    for _ in range(B_PAD)]).astype(np.int64)
+    q = datasets.queries_near(ds, B_PAD, seed=seed_q).astype(np.float32)
+    take = np.zeros((B_PAD, M), dtype=bool)
+    take[:n_rows, :w] = True
+    kept = np.unique(seq[take])
+    return q, seq, take, kept
+
+
+def _run_sweep(ds, idx, ex, snap, seed_q):
+    for n_rows, w in FLUSH_SWEEP:
+        q, seq, take, kept = _round_inputs(ds, idx, n_rows, w, seed_q)
+        d, flat, st = ex.scan_probe_round(
+            jnp.asarray(q), jnp.asarray(seq.astype(np.int32)), take,
+            kept, 10, snap=snap, u_pow2=True, seq_host=seq)
+        jax.block_until_ready((d, flat))
+        assert st["partitions"] == len(kept)
+
+
+def test_scan_probe_round_compile_constant_across_flush_sizes(built):
+    """The tentpole invariant the buckets exist for: once the pow2 union
+    ladder's rungs are warm, repeated flushes of *varying* sizes (new
+    query values, same rungs) trigger zero new XLA compilations."""
+    ds, idx, ex = built
+    snap = ex.snapshot()
+    with sanitize.compile_events() as ev:
+        _run_sweep(ds, idx, ex, snap, seed_q=11)      # warm-up sweep
+        warm = ev.new()
+        sanitize.assert_compile_budget("scan_probe_round.warm", warm)
+        ev.reset()
+        _run_sweep(ds, idx, ex, snap, seed_q=23)      # steady state
+        _run_sweep(ds, idx, ex, snap, seed_q=37)
+        sanitize.assert_compile_budget("scan_probe_round.steady",
+                                       ev.new())
+
+
+# ---------------------------------------------------------------------------
+# sanitized device paths (transfer guard + NaN debug + counter)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.sanitized
+def test_fused_planner_sanitized(built, sanitized_run):
+    """The fused planner's steady state holds under the full sanitizer
+    stack: no implicit transfer, no NaN production, zero recompiles."""
+    ds, idx, ex = built
+    q = datasets.queries_near(ds, 8, seed=33).astype(np.float32)
+    m = mq._aps_candidate_budget(idx)
+    args = (jax.device_put(q),
+            jax.device_put(idx.levels[0].centroids),
+            jax.device_put(np.zeros(idx.num_partitions, np.float32)),
+            jax.device_put(np.float32(idx._max_norm_sq)),
+            jax.device_put(np.float32(3.0)),
+            jax.device_put(np.asarray(idx._beta_table)),
+            jax.device_put(np.float32(0.9)))
+    kw = dict(m=m, metric=idx.config.metric)
+    jax.block_until_ready(mq._fused_plan_probes(*args, **kw))  # warm
+    with sanitized_run() as ev:
+        out = mq._fused_plan_probes(*args, **kw)
+        jax.block_until_ready(out)
+        sanitize.assert_compile_budget("fused_plan_probes.steady",
+                                       ev.new())
+    seq, counts = np.asarray(out[0]), np.asarray(out[1])
+    assert seq.shape == (8, m) and (counts >= 1).all()
+
+
+@pytest.mark.sanitized
+def test_packed_scan_sanitized(built, sanitized_run):
+    """The packed union scan consumes the planner's device-resident plan
+    (BatchPlan.sel_dev/qmask_dev) under the transfer guard — proving the
+    plan->scan seam needs no host round trip."""
+    ds, idx, ex = built
+    q = datasets.queries_near(ds, 6, seed=41).astype(np.float32)
+    snap = ex.snapshot()
+    plan = plan_batch(idx, q, 10, nprobe=4, u_bucket=ex.u_bucket)
+    assert plan.sel_dev is not None and plan.qmask_dev is not None
+    q_d = jax.device_put(q)
+    kw = dict(metric=idx.config.metric, impl="jnp")
+    warm = ops.scan_selected_topk(q_d, snap.data, ex._valid,
+                                  plan.sel_dev, plan.qmask_dev, 10, **kw)
+    jax.block_until_ready(warm)
+    with sanitized_run() as ev:
+        d, flat = ops.scan_selected_topk(q_d, snap.data, ex._valid,
+                                         plan.sel_dev, plan.qmask_dev,
+                                         10, **kw)
+        jax.block_until_ready((d, flat))
+        sanitize.assert_compile_budget("scan_selected_topk.steady",
+                                       ev.new())
+    # guarded run returns the exact same top-k as the unguarded warm run
+    np.testing.assert_array_equal(np.asarray(flat), np.asarray(warm[1]))

@@ -1,0 +1,32 @@
+"""quakecheck — device-discipline static analysis for the Quake executor
+stack.
+
+The hot path's latency wins depend on invariants that are easy to regress
+silently: no stray host syncs inside device-resident functions, jit caches
+that stay warm across batches, Pallas kernels that honour the tiling and
+accumulation contract, donated buffers that are never read again, and
+serving shared state mutated only behind the write barrier.  These are
+checkable properties; quakecheck checks them mechanically.
+
+Rule families (see ``docs/static_analysis.md``):
+
+  QK101  host-sync-in-device-path    (implicit device->host pulls)
+  QK102  jit-cache-fragmentation     (per-call jits, unhashable / unbucketed
+                                      data-dependent static args)
+  QK103  pallas-kernel-contract      (compat dispatch, tile divisibility,
+                                      int8->int32 accumulation, no f64)
+  QK104  donation-after-use          (donated operand read after the call)
+  QK105  serving-shared-state        (guarded fields mutated outside the
+                                      owning class / write barrier)
+
+Intentional violations carry pragmas::
+
+    x = np.asarray(td)   # quakecheck: allow-sync(kth-distance pull)
+    frag()               # quakecheck: disable=QK102(factory jit, built once)
+
+Run ``python -m tools.quakecheck src/`` from the repo root; exit status is
+non-zero iff findings remain.
+"""
+from .core import Finding, lint_paths, lint_source  # noqa: F401
+
+__all__ = ["Finding", "lint_paths", "lint_source"]

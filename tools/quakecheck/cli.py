@@ -1,0 +1,47 @@
+"""Command line front-end: ``python -m tools.quakecheck src/``."""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import List, Optional
+
+from .core import RULES, lint_paths
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="quakecheck",
+        description="Device-discipline static analysis for the Quake "
+                    "executor stack.")
+    ap.add_argument("paths", nargs="+",
+                    help="files or directories to lint")
+    ap.add_argument("--select", default=None,
+                    help="comma-separated rule ids (e.g. QK101,QK104)")
+    ap.add_argument("--json", action="store_true", dest="as_json",
+                    help="emit findings as JSON")
+    ap.add_argument("--list-rules", action="store_true",
+                    help="print the rule table and exit")
+    args = ap.parse_args(argv)
+
+    if args.list_rules:
+        for rule, desc in sorted(RULES.items()):
+            print(f"{rule}  {desc}")
+        return 0
+
+    select = ({r.strip() for r in args.select.split(",") if r.strip()}
+              if args.select else None)
+    findings = lint_paths(args.paths, select=select)
+    if args.as_json:
+        print(json.dumps([f.__dict__ for f in findings], indent=2))
+    else:
+        for f in findings:
+            print(f.render())
+        if findings:
+            print(f"\nquakecheck: {len(findings)} finding(s)",
+                  file=sys.stderr)
+    return 1 if findings else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,97 @@
+"""Repo-specific registries the quakecheck rules consult.
+
+Everything here is *policy*, not mechanism: which functions are declared
+device-resident, which call names produce device values, which serving
+classes own write-barrier-guarded state.  New subsystems extend these
+tables (or use the inline markers) instead of touching the rule code.
+"""
+from __future__ import annotations
+
+# --------------------------------------------------------------------------
+# QK101 — device-resident functions (host syncs inside these must carry an
+# allow-sync pragma).  Entries are bare function names or
+# ``ClassName.method`` qualnames.  Functions jitted with ``@jax.jit`` /
+# ``functools.partial(jax.jit, ...)`` are registered automatically, as is
+# any def whose line carries a ``# quakecheck: device-path`` marker.
+# --------------------------------------------------------------------------
+DEVICE_RESIDENT_FUNCS = {
+    # core/multiquery.py — the batched executor hot path
+    "_fused_plan_probes",
+    "_aps_probe_counts_batched",
+    "_aps_probe_counts_fused",
+    "run_round_loop",
+    "BatchedSearchExecutor.search",
+    "BatchedSearchExecutor.scan_probe_round",
+    "BatchedSearchExecutor._search_rounds",
+    # core/serving.py — the riding-round scheduler
+    "RoundScheduler.step",
+}
+
+# Call names (bare or attribute leaf) whose results live on device.  The
+# taint pass also treats any ``jnp.*`` / ``jax.*`` call as device-producing
+# (except the explicit sync entry points below).
+DEVICE_PRODUCING_CALLS = {
+    "scan_topk", "scan_selected_topk", "scan_selected_topk_q8",
+    "kmeans_assign", "pack_union", "pack_round", "pack_round_masked",
+    "topk_merge", "_fused_plan_probes", "scan_probe_round", "_pack_plan",
+    "run_round_loop", "device_arrays", "apply_delta", "build_patch",
+}
+
+# Explicit sync entry points: calling these on a device value is the
+# device->host pull QK101 exists to surface.
+HOST_SYNC_CALLS = {
+    "np.asarray", "np.array", "np.ascontiguousarray", "numpy.asarray",
+    "numpy.array", "jax.device_get", "device_get",
+}
+HOST_SYNC_BUILTINS = {"float", "int", "bool"}
+HOST_SYNC_METHODS = {"item", "tolist", "__array__", "block_until_ready"}
+
+# --------------------------------------------------------------------------
+# QK102 — jit cache discipline
+# --------------------------------------------------------------------------
+# Names that mark a value as bucket-rounded (safe to use as a jit static
+# argument / padded shape even though it derives from data).
+BUCKET_HINT_NAMES = {"bucket", "pad", "pow2", "align", "tile", "cap"}
+BUCKET_CALLS = {"_next_pow2", "_pad_to", "next_pow2", "pad_to"}
+# Reducers whose results vary with the *data* (not just operand shapes):
+# feeding one of these into a jit static argument fragments the cache.
+DATA_DEPENDENT_REDUCERS = {"max", "min", "sum", "argmax", "argmin",
+                           "nonzero", "unique", "count_nonzero"}
+
+# --------------------------------------------------------------------------
+# QK103 — Pallas kernel contract
+# --------------------------------------------------------------------------
+# pltpu names that have churned across JAX releases; kernels must reach
+# them through kernels/pallas_compat.py, never directly.
+PLTPU_COMPAT_ONLY = {
+    "TPUCompilerParams", "CompilerParams", "PrefetchScalarGridSpec",
+    "GridDimensionSemantics",
+}
+# The one file allowed to touch them.
+PALLAS_COMPAT_FILE = "pallas_compat.py"
+# Directory (path fragment) the kernel-contract rules apply to.
+KERNELS_DIR_FRAGMENT = "kernels"
+
+# --------------------------------------------------------------------------
+# QK105 — serving shared state (write-barrier discipline, docs/serving.md)
+# --------------------------------------------------------------------------
+# owner class -> guarded fields.  Mutating one of these outside a method of
+# the owning class bypasses the write barrier.  Reads are always fine;
+# calling the owner's public methods is the sanctioned API.
+GUARDED_STATE = {
+    "ServingRuntime": {"results", "_queue", "_cache_version",
+                       "_maintaining", "_next_qid"},
+    "ResultCache": {"_store", "_by_key", "_by_part", "_next_eid",
+                    "_proj", "hits", "misses", "invalidated"},
+    "RoundScheduler": {"active", "done", "_epoch_key", "_snap",
+                       "round_streams", "plan_footprints"},
+    "PartitionStats": {"hits", "window"},
+}
+# Attribute names that are guarded under *any* owner (the linter cannot
+# infer types, so a guarded-name mutation through a non-self base is
+# flagged wherever it appears; the owner's own methods use ``self``).
+GUARDED_ATTRS = {a for attrs in GUARDED_STATE.values() for a in attrs}
+
+MUTATING_METHODS = {"append", "extend", "clear", "pop", "popitem", "remove",
+                    "insert", "update", "setdefault", "discard", "add",
+                    "move_to_end", "sort", "fill"}

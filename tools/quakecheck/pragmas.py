@@ -1,0 +1,125 @@
+"""Pragma parsing: per-line suppression comments.
+
+Two forms, both requiring a finding to exist on the same line (or the
+line a standalone pragma comment precedes):
+
+  ``# quakecheck: allow-sync(<reason>)``
+      Documents an intentional device->host sync (QK101 only).  The
+      reason is mandatory — an allow-sync with no reason is itself a
+      finding (QK100): the whole point is that intentional sync points
+      are *documented*, not hidden.
+
+  ``# quakecheck: disable=QK102,QK105(<reason>)``
+      Suppresses the listed rules on the line.  Reason optional but
+      encouraged.
+
+  ``# quakecheck: device-path``
+      On a ``def`` line: registers the function as device-resident for
+      QK101 (the inline form of ``config.DEVICE_RESIDENT_FUNCS``).
+"""
+from __future__ import annotations
+
+import io
+import re
+import tokenize
+from dataclasses import dataclass, field
+from typing import Dict, List, Set
+
+_ALLOW_SYNC = re.compile(r"#\s*quakecheck:\s*allow-sync\s*(?:\((?P<reason>[^)]*)\))?")
+_DISABLE = re.compile(r"#\s*quakecheck:\s*disable\s*=\s*(?P<rules>[A-Z0-9, ]+)"
+                      r"\s*(?:\((?P<reason>[^)]*)\))?")
+_DEVICE_PATH = re.compile(r"#\s*quakecheck:\s*device-path\b")
+
+
+@dataclass
+class LinePragmas:
+    allow_sync: bool = False
+    allow_sync_reason: str = ""
+    disabled: Set[str] = field(default_factory=set)
+    device_path: bool = False
+
+
+@dataclass
+class FilePragmas:
+    by_line: Dict[int, LinePragmas] = field(default_factory=dict)
+
+    def _line(self, lineno: int) -> LinePragmas:
+        return self.by_line.get(lineno, _EMPTY)
+
+    def allows_sync(self, lineno: int) -> bool:
+        p = self._line(lineno)
+        return p.allow_sync and bool(p.allow_sync_reason.strip())
+
+    def bad_allow_sync(self, lineno: int) -> bool:
+        p = self._line(lineno)
+        return p.allow_sync and not p.allow_sync_reason.strip()
+
+    def disabled(self, lineno: int, rule: str) -> bool:
+        return rule in self._line(lineno).disabled
+
+    def device_path(self, lineno: int) -> bool:
+        return self._line(lineno).device_path
+
+    def pragma_lines(self) -> List[int]:
+        return sorted(self.by_line)
+
+
+_EMPTY = LinePragmas()
+
+
+def parse_pragmas(source: str) -> FilePragmas:
+    """Extract quakecheck pragmas, attributing standalone comment lines to
+    the next line of code (so a pragma can sit above a long statement)."""
+    out = FilePragmas()
+    comments: List[tuple] = []   # (lineno, text, is_standalone)
+    try:
+        toks = list(tokenize.generate_tokens(io.StringIO(source).readline))
+    except (tokenize.TokenError, IndentationError):  # linted elsewhere
+        return out
+    code_lines: Set[int] = set()
+    for tok in toks:
+        if tok.type == tokenize.COMMENT:
+            comments.append((tok.start[0], tok.string))
+        elif tok.type not in (tokenize.NL, tokenize.NEWLINE,
+                              tokenize.INDENT, tokenize.DEDENT,
+                              tokenize.ENCODING, tokenize.ENDMARKER):
+            code_lines.add(tok.start[0])
+    n_lines = source.count("\n") + 1
+    for lineno, text in comments:
+        pragma = _parse_comment(text)
+        if pragma is None:
+            continue
+        target = lineno
+        if lineno not in code_lines:   # standalone: applies to next code line
+            nxt = lineno + 1
+            while nxt <= n_lines and nxt not in code_lines:
+                nxt += 1
+            target = nxt
+        cur = out.by_line.setdefault(target, LinePragmas(disabled=set()))
+        if pragma.allow_sync:
+            cur.allow_sync = True
+            cur.allow_sync_reason = pragma.allow_sync_reason
+        cur.disabled |= pragma.disabled
+        cur.device_path = cur.device_path or pragma.device_path
+    return out
+
+
+def _parse_comment(text: str) -> LinePragmas | None:
+    if "quakecheck" not in text:
+        return None
+    out = LinePragmas(disabled=set())
+    hit = False
+    m = _ALLOW_SYNC.search(text)
+    if m:
+        out.allow_sync = True
+        out.allow_sync_reason = (m.group("reason") or "").strip()
+        hit = True
+    m = _DISABLE.search(text)
+    if m:
+        out.disabled = {r.strip() for r in m.group("rules").split(",")
+                        if r.strip()}
+        hit = True
+    if _DEVICE_PATH.search(text):
+        out.device_path = True
+        hit = True
+    return out if hit else None

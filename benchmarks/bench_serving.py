@@ -23,10 +23,12 @@ recall on the skewed smoke mix.
 from __future__ import annotations
 
 import argparse
+import threading
+import time
 
 import numpy as np
 
-from repro.core import QuakeConfig, ServingConfig
+from repro.core import QuakeConfig, QuakeIndex, ServingConfig, ServingRuntime
 from repro.data import datasets, workload
 from repro.launch.serve import replay_per_op, replay_runtime
 
@@ -126,6 +128,87 @@ def run(n=20_000, dim=32, n_ops=24, queries_per_op=256, k=10, target=0.9,
     return out
 
 
+def run_open_loop(n=20_000, dim=32, k=10, target=0.9, seed=0,
+                  threads=8, rate=2000.0, n_queries=2000,
+                  flush_size=32, deadline_ms=2.0,
+                  out_path=OUT_PATH, verbose=False):
+    """Open-loop multi-threaded arrival cell: submitter threads draw
+    exponential inter-arrival gaps (total rate ``rate`` qps, split
+    evenly) and submit single queries regardless of completion — the
+    arrival process never backs off, so queueing delay shows up in the
+    measured latency instead of being absorbed by a closed loop.
+    Flushes come from the size trigger under load and from the deadline
+    ticker in lulls; per-query latency is ``QueryResult.latency_s``
+    (submit -> result, queue wait included).  Reports p50/p99 into
+    ``results/perf_quake.json`` under ``"serving_open_loop"``.
+    """
+    ds = datasets.clustered(n, dim, n_clusters=max(n // 500, 16), seed=seed)
+    idx = QuakeIndex.build(ds.vectors,
+                           config=QuakeConfig(metric=ds.metric,
+                                              recall_target=target))
+    scfg = ServingConfig(k=k, recall_target=target, flush_size=flush_size,
+                         flush_deadline_ms=deadline_ms, ticker=True,
+                         cache_entries=0, maint_min_ops=10 ** 9)
+    pool = datasets.queries_near(ds, 512, seed=seed + 1).astype(np.float32)
+    per_thread = [n_queries // threads + (1 if t < n_queries % threads else 0)
+                  for t in range(threads)]
+    qids, qids_lock = [], threading.Lock()
+    errors = []
+
+    def submitter(tid, count, rt):
+        rng = np.random.default_rng(seed + 10 + tid)
+        gaps = rng.exponential(scale=threads / rate, size=count)
+        mine = []
+        try:
+            for i in range(count):
+                time.sleep(gaps[i])        # open loop: schedule-driven
+                mine.append(rt.submit_query(pool[rng.integers(len(pool))]))
+        except BaseException as e:         # noqa: BLE001 - surfaced below
+            errors.append((tid, e))
+        with qids_lock:
+            qids.extend(mine)
+
+    print(f"== serving open-loop: N={n} threads={threads} rate={rate}qps "
+          f"queries={n_queries} deadline={deadline_ms}ms ==")
+    with ServingRuntime(idx, scfg) as rt:
+        rt.submit_batch(pool[:flush_size])     # warm the scan shapes
+        rt.drain()
+        t0 = time.perf_counter()
+        ts = [threading.Thread(target=submitter, args=(t, per_thread[t], rt))
+              for t in range(threads)]
+        for t in ts:
+            t.start()
+        for t in ts:
+            t.join()
+        rt.drain()
+        wall = time.perf_counter() - t0
+        assert not errors, errors
+        lat = np.asarray([rt.result(q).latency_s for q in qids])
+        st = rt.stats()
+        assert st["queue_depth"] == 0
+        assert rt._ticker_error is None
+
+    p50 = float(np.percentile(lat, 50)) * 1e6
+    p99 = float(np.percentile(lat, 99)) * 1e6
+    assert np.isfinite(p50) and np.isfinite(p99), \
+        f"open-loop latency percentiles not finite: p50={p50} p99={p99}"
+    out = {"n": n, "dim": dim, "threads": threads,
+           "offered_rate_qps": rate, "n_queries": len(qids),
+           "deadline_ms": deadline_ms, "flush_size": flush_size,
+           "achieved_qps": round(len(qids) / max(wall, 1e-9), 1),
+           "p50_latency_us": round(p50, 1),
+           "p99_latency_us": round(p99, 1),
+           "mean_latency_us": round(float(lat.mean()) * 1e6, 1),
+           "admitted_batches": st["admitted_batches"],
+           "riding_savings": st["riding_savings"]}
+    print(f"open-loop: {out['achieved_qps']} qps achieved "
+          f"(offered {rate}), p50={out['p50_latency_us']}us "
+          f"p99={out['p99_latency_us']}us over "
+          f"{st['admitted_batches']} batches")
+    merge_results(out_path, "serving_open_loop", out)
+    return out
+
+
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--n", type=int, default=20_000)
@@ -140,11 +223,26 @@ if __name__ == "__main__":
     ap.add_argument("--cache-bits", type=int, default=16)
     ap.add_argument("--min-throughput-ratio", type=float, default=None)
     ap.add_argument("--max-recall-gap", type=float, default=None)
+    ap.add_argument("--open-loop", action="store_true",
+                    help="run the multi-threaded open-loop arrival cell "
+                         "instead of the workload replay")
+    ap.add_argument("--threads", type=int, default=8)
+    ap.add_argument("--rate", type=float, default=2000.0,
+                    help="total offered arrival rate, queries/s")
+    ap.add_argument("--open-loop-queries", type=int, default=2000)
+    ap.add_argument("--deadline-ms", type=float, default=2.0)
     ap.add_argument("--verbose", action="store_true")
     args = ap.parse_args()
-    run(n=args.n, dim=args.dim, n_ops=args.ops,
-        queries_per_op=args.queries_per_op, k=args.k, target=args.target,
-        rounds=args.rounds, flush_size=args.flush_size,
-        cache_bits=args.cache_bits,
-        min_throughput_ratio=args.min_throughput_ratio,
-        max_recall_gap=args.max_recall_gap, verbose=args.verbose)
+    if args.open_loop:
+        run_open_loop(n=args.n, dim=args.dim, k=args.k, target=args.target,
+                      threads=args.threads, rate=args.rate,
+                      n_queries=args.open_loop_queries,
+                      flush_size=args.flush_size,
+                      deadline_ms=args.deadline_ms, verbose=args.verbose)
+    else:
+        run(n=args.n, dim=args.dim, n_ops=args.ops,
+            queries_per_op=args.queries_per_op, k=args.k, target=args.target,
+            rounds=args.rounds, flush_size=args.flush_size,
+            cache_bits=args.cache_bits,
+            min_throughput_ratio=args.min_throughput_ratio,
+            max_recall_gap=args.max_recall_gap, verbose=args.verbose)

@@ -46,15 +46,17 @@ the batched executor (``core/multiquery.py``) into that system:
 """
 from __future__ import annotations
 
+import threading
 import time
 from collections import OrderedDict
 from dataclasses import dataclass
-from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+from typing import Callable, Dict, Iterable, List, Optional, Sequence, Tuple
 
 import jax.numpy as jnp
 import numpy as np
 
 from ..kernels.ref import MASK_DIST
+from ..sanitize import TrackedLock, note_guarded
 from . import aps as aps_mod
 from . import multiquery as mq
 from .cost_model import LatencyModel
@@ -84,8 +86,20 @@ class ServingConfig:
     flush_size: int = 64               # queued queries that force a flush
     flush_deadline: Optional[float] = None  # seconds the oldest queued
                                        # query may wait before an
-                                       # admission forces a flush (None =
+                                       # admission (or the background
+                                       # ticker) forces a flush (None =
                                        # size-triggered / explicit only)
+    flush_deadline_ms: Optional[float] = None  # same knob in ms; wins
+                                       # over flush_deadline when set
+    ticker: bool = True                # run the background deadline
+                                       # ticker thread when a deadline
+                                       # is configured (off for
+                                       # fake-clock tests, which call
+                                       # tick() themselves)
+    record_admissions: bool = False    # keep a totally ordered admission
+                                       # log (engine-lock order) for
+                                       # single-threaded replay of a
+                                       # concurrent run
     interleave_rounds: int = 1         # scheduler rounds run per flush (the
                                        # in-flight window newcomers ride)
     b_bucket: int = 16                 # active-row padding bucket (bounds
@@ -127,6 +141,10 @@ class ServingConfig:
     maint_cost_drift: float = 0.15
     maint_access_shift: float = 0.6
     maint_max_ops: Optional[int] = 64
+
+    def __post_init__(self) -> None:
+        if self.flush_deadline_ms is not None:
+            self.flush_deadline = self.flush_deadline_ms / 1000.0
 
 
 @dataclass
@@ -195,10 +213,22 @@ class ResultCache:
     over an unchanged directory is unchanged), and any structural delta
     clears the cache (partition ids are re-assigned by split/merge
     swap-remove, so footprints stop meaning anything).
+
+    Thread safety: every public method takes ``_lock``
+    (``ResultCache._lock`` in the declared ``LOCK_ORDER``).  Because a
+    search runs *outside* any cache lock, a ``put`` can race an
+    invalidation that happened after the search was admitted — every
+    invalidation bumps a **generation counter**, admission captures it,
+    and ``put(..., gen=...)`` drops the entry (counted in
+    ``stale_puts``) when the generations no longer match.  Without this
+    a drained result would re-insert an entry the journal already
+    declared stale (the QK201 exemplar race; see
+    tests/quakecheck_fixtures/qk201_bad.py).
     """
 
     def __init__(self, max_entries: int = 4096, bits: int = 0,
                  tol: float = 0.0, seed: int = 0):
+        self._lock = TrackedLock("ResultCache._lock")
         self.max_entries = max_entries
         self.bits = bits
         self.tol = float(tol)
@@ -208,12 +238,22 @@ class ResultCache:
         self._by_key: Dict[bytes, List[int]] = {}
         self._by_part: Dict[int, set] = {}
         self._next_eid = 0
+        self._gen = 0
         self.hits = 0
         self.misses = 0
         self.invalidated = 0
+        self.stale_puts = 0
 
     def __len__(self) -> int:
-        return len(self._store)
+        with self._lock:
+            return len(self._store)
+
+    @property
+    def generation(self) -> int:
+        """Invalidation generation — capture at admission, hand back to
+        ``put``; a mismatch means an invalidation happened in between."""
+        with self._lock:
+            return self._gen
 
     def _key(self, q: np.ndarray) -> bytes:
         if self.bits <= 0:
@@ -226,42 +266,55 @@ class ResultCache:
 
     def get(self, q: np.ndarray, k: int) -> Optional[dict]:
         q = np.ascontiguousarray(q, dtype=np.float32)
-        best, best_d = None, np.inf
-        for eid in self._by_key.get(self._key(q), ()):
-            e = self._store[eid]
-            if e["k"] != k:
-                continue
-            d = float(np.linalg.norm(q - e["q"]))
-            if d <= self.tol and d < best_d:
-                best, best_d = e, d
-        if best is None:
-            self.misses += 1
-            return None
-        self._store.move_to_end(best["eid"])
-        self.hits += 1
-        return best
+        with self._lock:
+            note_guarded(self, "_store")
+            best, best_d = None, np.inf
+            for eid in self._by_key.get(self._key(q), ()):
+                e = self._store[eid]
+                if e["k"] != k:
+                    continue
+                d = float(np.linalg.norm(q - e["q"]))
+                if d <= self.tol and d < best_d:
+                    best, best_d = e, d
+            if best is None:
+                self.misses += 1
+                return None
+            self._store.move_to_end(best["eid"])
+            self.hits += 1
+            # shallow copy: the caller reads fields after the lock drops,
+            # and the entry itself may be evicted meanwhile
+            return dict(best)
 
     def put(self, q: np.ndarray, k: int, ids: np.ndarray, dists: np.ndarray,
             footprint: np.ndarray, nprobe: int = 0,
-            recall_estimate: float = np.nan) -> None:
-        if self.max_entries <= 0:
-            return
-        q = np.ascontiguousarray(q, dtype=np.float32)
-        key = self._key(q)
-        eid = self._next_eid
-        self._next_eid += 1
-        fp = np.unique(np.asarray(footprint, dtype=np.int64))
-        self._store[eid] = {
-            "eid": eid, "key": key, "k": k, "q": q.copy(),
-            "ids": np.asarray(ids).copy(), "dists": np.asarray(dists).copy(),
-            "footprint": fp, "nprobe": int(nprobe),
-            "recall_estimate": float(recall_estimate)}
-        self._by_key.setdefault(key, []).append(eid)
-        for p in fp:
-            self._by_part.setdefault(int(p), set()).add(eid)
-        while len(self._store) > self.max_entries:
-            old_eid, old_entry = self._store.popitem(last=False)  # LRU
-            self._unlink(old_eid, old_entry)
+            recall_estimate: float = np.nan,
+            gen: Optional[int] = None) -> None:
+        with self._lock:
+            note_guarded(self, "_store")
+            if self.max_entries <= 0:
+                return
+            if gen is not None and gen != self._gen:
+                # an invalidation ran after this result was admitted:
+                # inserting it would resurrect journal-stale state
+                self.stale_puts += 1
+                return
+            q = np.ascontiguousarray(q, dtype=np.float32)
+            key = self._key(q)
+            eid = self._next_eid
+            self._next_eid += 1
+            fp = np.unique(np.asarray(footprint, dtype=np.int64))
+            self._store[eid] = {
+                "eid": eid, "key": key, "k": k, "q": q.copy(),
+                "ids": np.asarray(ids).copy(),
+                "dists": np.asarray(dists).copy(),
+                "footprint": fp, "nprobe": int(nprobe),
+                "recall_estimate": float(recall_estimate)}
+            self._by_key.setdefault(key, []).append(eid)
+            for p in fp:
+                self._by_part.setdefault(int(p), set()).add(eid)
+            while len(self._store) > self.max_entries:
+                old_eid, old_entry = self._store.popitem(last=False)  # LRU
+                self._unlink(old_eid, old_entry)
 
     def _unlink(self, eid: int, entry: dict) -> None:
         eids = self._by_key.get(entry["key"], [])
@@ -283,19 +336,34 @@ class ResultCache:
 
     def invalidate_partitions(self, dirty: Iterable[int]) -> int:
         """Drop every entry whose planned footprint touches ``dirty``."""
-        doomed: set = set()
-        for p in dirty:
-            doomed |= self._by_part.get(int(p), set())
-        for eid in doomed:
-            self._remove(eid)
-        self.invalidated += len(doomed)
-        return len(doomed)
+        with self._lock:
+            note_guarded(self, "_store")
+            doomed: set = set()
+            for p in dirty:
+                doomed |= self._by_part.get(int(p), set())
+            for eid in doomed:
+                self._remove(eid)
+            self.invalidated += len(doomed)
+            self._gen += 1          # in-flight puts are now suspect
+            return len(doomed)
 
     def clear(self) -> None:
-        self.invalidated += len(self._store)
-        self._store.clear()
-        self._by_key.clear()
-        self._by_part.clear()
+        with self._lock:
+            note_guarded(self, "_store")
+            self.invalidated += len(self._store)
+            self._store.clear()
+            self._by_key.clear()
+            self._by_part.clear()
+            self._gen += 1          # in-flight puts are now suspect
+
+    def counters(self) -> dict:
+        """Lock-consistent copy of the cache telemetry."""
+        with self._lock:
+            return {"entries": len(self._store), "hits": self.hits,
+                    "misses": self.misses,
+                    "invalidated": self.invalidated,
+                    "stale_puts": self.stale_puts,
+                    "generation": self._gen}
 
 
 # ---------------------------------------------------------------------------
@@ -325,10 +393,17 @@ class MaintenanceTriggers:
 
 class MaintenanceScheduler:
     """Replaces run-after-every-op with drift triggers over the journal,
-    the cost model, and the served access histogram."""
+    the cost model, and the served access histogram.
+
+    Thread safety: public methods take ``_lock``
+    (``MaintenanceScheduler._lock``, innermost in the declared
+    ``LOCK_ORDER``) — the runtime's engine lock already serializes
+    maintenance *work*; this lock only keeps the trigger counters and
+    history coherent for concurrent ``stats()`` readers."""
 
     def __init__(self, maintainer: Maintainer,
                  triggers: Optional[MaintenanceTriggers] = None):
+        self._lock = TrackedLock("MaintenanceScheduler._lock")
         self.maintainer = maintainer
         self.index = maintainer.index
         self.triggers = triggers or MaintenanceTriggers()
@@ -342,55 +417,70 @@ class MaintenanceScheduler:
                                       self.index.config.default_access_freq)
 
     def _rebaseline(self) -> None:
-        self._last_version = self.index.version
-        self._last_cost = self.maintainer.total_cost()
-        self._last_freqs = self._freq_vector().copy()
-        self.ops_since = 0
+        with self._lock:
+            self._last_version = self.index.version
+            self._last_cost = self.maintainer.total_cost()
+            self._last_freqs = self._freq_vector().copy()
+            self.ops_since = 0
 
     def note_op(self, n: int = 1) -> None:
-        self.ops_since += n
+        with self._lock:
+            self.ops_since += n
 
     def due(self) -> Optional[str]:
         """Trigger that fired, or None.  Cheap: one journal fold, one
         O(P) cost evaluation, one O(P) histogram distance."""
-        t = self.triggers
-        if self.ops_since < t.min_ops:
+        with self._lock:
+            t = self.triggers
+            if self.ops_since < t.min_ops:
+                return None
+            if t.max_ops is not None and self.ops_since >= t.max_ops:
+                return "op_budget"
+            delta = self.index.journal.delta_since(self._last_version)
+            if delta is None:
+                return "journal_trimmed"
+            if delta.structural:
+                return "structural"
+            p = max(self.index.num_partitions, 1)
+            if len(delta.dirty) >= t.dirty_frac * p:
+                return "dirty_mass"
+            cost = self.maintainer.total_cost()
+            if abs(cost - self._last_cost) >= t.cost_drift * max(
+                    self._last_cost, 1e-9):
+                return "cost_drift"
+            f, g = self._freq_vector(), self._last_freqs
+            m = min(len(f), len(g))
+            fs, gs = float(f[:m].sum()), float(g[:m].sum())
+            if m and fs > 0 and gs > 0:
+                shift = 0.5 * float(np.abs(f[:m] / fs - g[:m] / gs).sum())
+                if shift >= t.access_shift:
+                    return "access_shift"
             return None
-        if t.max_ops is not None and self.ops_since >= t.max_ops:
-            return "op_budget"
-        delta = self.index.journal.delta_since(self._last_version)
-        if delta is None:
-            return "journal_trimmed"
-        if delta.structural:
-            return "structural"
-        p = max(self.index.num_partitions, 1)
-        if len(delta.dirty) >= t.dirty_frac * p:
-            return "dirty_mass"
-        cost = self.maintainer.total_cost()
-        if abs(cost - self._last_cost) >= t.cost_drift * max(self._last_cost,
-                                                             1e-9):
-            return "cost_drift"
-        f, g = self._freq_vector(), self._last_freqs
-        m = min(len(f), len(g))
-        fs, gs = float(f[:m].sum()), float(g[:m].sum())
-        if m and fs > 0 and gs > 0:
-            shift = 0.5 * float(np.abs(f[:m] / fs - g[:m] / gs).sum())
-            if shift >= t.access_shift:
-                return "access_shift"
-        return None
 
     def run_if_due(self, force: bool = False) -> Optional[MaintenanceReport]:
         reason = "forced" if force else self.due()
         if reason is None:
             return None
+        # the actual pass runs outside _lock: the runtime's engine lock
+        # serializes maintenance work, and holding the innermost lock
+        # across index mutation would pin every stats() reader behind it
         rep = self.maintainer.run()
-        self.history.append({
-            "reason": reason, "ops_since": self.ops_since,
-            "splits": rep.splits, "merges": rep.merges,
-            "cost_before": round(rep.cost_before, 1),
-            "cost_after": round(rep.cost_after, 1)})
+        with self._lock:
+            self.history.append({
+                "reason": reason, "ops_since": self.ops_since,
+                "splits": rep.splits, "merges": rep.merges,
+                "cost_before": round(rep.cost_before, 1),
+                "cost_after": round(rep.cost_after, 1)})
         self._rebaseline()
         return rep
+
+    def snapshot(self) -> dict:
+        """Lock-consistent deep copy of the trigger telemetry."""
+        with self._lock:
+            return {"runs": len(self.history),
+                    "reasons": [h["reason"] for h in self.history],
+                    "history": [dict(h) for h in self.history],
+                    "ops_since": self.ops_since}
 
 
 # ---------------------------------------------------------------------------
@@ -536,7 +626,10 @@ class RoundScheduler:
     def __init__(self, executor: "mq.BatchedSearchExecutor", k: int,
                  target: float, rounds: Optional[int] = None,
                  early_exit: bool = False, b_bucket: int = 16,
-                 record_stats: bool = True, scan_backend: str = "auto"):
+                 record_stats: bool = True, scan_backend: str = "auto",
+                 clock: Optional[Callable[[], float]] = None):
+        self._lock = TrackedLock("RoundScheduler._lock")
+        self._clock = clock or time.perf_counter
         self.ex = executor
         self.index = executor.index
         self.k = k
@@ -576,69 +669,79 @@ class RoundScheduler:
         """Plan one coalesced batch and add its queries to the in-flight
         population.  All admissions between drains must see the same
         snapshot fingerprint (writes barrier through the runtime)."""
-        q = np.ascontiguousarray(queries, dtype=np.float32)
-        if q.ndim == 1:
-            q = q[None, :]
-        b = q.shape[0]
-        if b == 0:
-            return
-        if self.scan_backend == "host":
-            # no device snapshot: rounds scan the live ragged buffers,
-            # which the runtime's write barriers freeze within an epoch
-            self.ex.planner_cache.ensure_fresh()
-            snap = None
-        else:
-            snap = self.ex.snapshot()
-        fp = self.ex._fingerprint()
-        if self.active and fp != self._epoch_key:
-            raise RuntimeError(
-                "snapshot changed under in-flight queries; drain() before "
-                "mutating the index (the runtime's write barrier does this)")
-        self._epoch_key = fp
-        self._snap = snap
-        self._rerank = (snap is not None and snap.scales is not None
-                        and self.ex.int8_rerank
-                        and self.ex._host_f32 is not None)
-        self._k_keep = 2 * self.k if self._rerank else self.k
-        rplan = mq.plan_rounds(self.index, q, self.k, self.target,
-                               planner=self.ex.planner,
-                               cache=self.ex.planner_cache,
-                               cent_norms=self.ex._cent_norms)
-        m = rplan.seq.shape[1]
-        if self._m is None or not self.active:
-            self._m = m
-        assert m == self._m, (m, self._m)
-        now = time.perf_counter()
-        ts = t_submit if t_submit is not None else [now] * b
-        qn = np.sum(q.astype(np.float64) ** 2, axis=1)
-        batch_id = self._batches
-        self._batches += 1
-        for i in range(b):
-            count = int(rplan.counts[i])
-            self.active.append(_Pending(
-                qid=int(qids[i]), q=q[i], q_norm_sq=float(qn[i]),
-                seq=rplan.seq[i], count=count,
-                geo=rplan.geo[i], cc=rplan.cc[i],
-                wins=mq._round_windows(count, self.round_budget),
-                win_ptr=0, scanned=np.zeros(m, dtype=bool),
-                r_est=float(rplan.recall_est[i]),
-                td=np.full(self._k_keep, MASK_DIST, dtype=np.float64),
-                ti=np.full(self._k_keep, -1, dtype=np.int64),
-                t_submit=float(ts[i]), batch=batch_id))
-        self.plan_footprints.append(
-            np.unique(np.concatenate(
-                [rplan.seq[i][:int(rplan.counts[i])] for i in range(b)])))
-        if self.record_stats:
-            lvl0 = self.index.levels[0]
-            lvl0.stats.ensure(lvl0.num_partitions)
-            lvl0.stats.record_batch(np.zeros(0, np.int64),
-                                    np.zeros(0), b)
+        with self._lock:
+            note_guarded(self, "active")
+            q = np.ascontiguousarray(queries, dtype=np.float32)
+            if q.ndim == 1:
+                q = q[None, :]
+            b = q.shape[0]
+            if b == 0:
+                return
+            if self.scan_backend == "host":
+                # no device snapshot: rounds scan the live ragged
+                # buffers, which the runtime's write barriers freeze
+                # within an epoch
+                self.ex.planner_cache.ensure_fresh()
+                snap = None
+            else:
+                snap = self.ex.snapshot()
+            fp = self.ex._fingerprint()
+            if self.active and fp != self._epoch_key:
+                raise RuntimeError(
+                    "snapshot changed under in-flight queries; drain() "
+                    "before mutating the index (the runtime's write "
+                    "barrier does this)")
+            self._epoch_key = fp
+            self._snap = snap
+            self._rerank = (snap is not None and snap.scales is not None
+                            and self.ex.int8_rerank
+                            and self.ex._host_f32 is not None)
+            self._k_keep = 2 * self.k if self._rerank else self.k
+            rplan = mq.plan_rounds(self.index, q, self.k, self.target,
+                                   planner=self.ex.planner,
+                                   cache=self.ex.planner_cache,
+                                   cent_norms=self.ex._cent_norms)
+            m = rplan.seq.shape[1]
+            if self._m is None or not self.active:
+                self._m = m
+            assert m == self._m, (m, self._m)
+            now = self._clock()
+            ts = t_submit if t_submit is not None else [now] * b
+            qn = np.sum(q.astype(np.float64) ** 2, axis=1)
+            batch_id = self._batches
+            self._batches += 1
+            for i in range(b):
+                count = int(rplan.counts[i])
+                self.active.append(_Pending(
+                    qid=int(qids[i]), q=q[i], q_norm_sq=float(qn[i]),
+                    seq=rplan.seq[i], count=count,
+                    geo=rplan.geo[i], cc=rplan.cc[i],
+                    wins=mq._round_windows(count, self.round_budget),
+                    win_ptr=0, scanned=np.zeros(m, dtype=bool),
+                    r_est=float(rplan.recall_est[i]),
+                    td=np.full(self._k_keep, MASK_DIST, dtype=np.float64),
+                    ti=np.full(self._k_keep, -1, dtype=np.int64),
+                    t_submit=float(ts[i]), batch=batch_id))
+            self.plan_footprints.append(
+                np.unique(np.concatenate(
+                    [rplan.seq[i][:int(rplan.counts[i])]
+                     for i in range(b)])))
+            if self.record_stats:
+                lvl0 = self.index.levels[0]
+                lvl0.stats.ensure(lvl0.num_partitions)
+                lvl0.stats.record_batch(np.zeros(0, np.int64),
+                                        np.zeros(0), b)
 
     # -- rounds --------------------------------------------------------
 
     def step(self) -> bool:
         """Run one shared probe round.  Returns False once nothing is in
         flight (all queries retired)."""
+        with self._lock:
+            return self._step_locked()
+
+    def _step_locked(self) -> bool:
+        note_guarded(self, "active")
         rows = self.active
         if not rows:
             return False
@@ -764,7 +867,7 @@ class RoundScheduler:
                 scanned: np.ndarray, within: np.ndarray) -> None:
         idxs = np.nonzero(finished)[0]
         if len(idxs):
-            now = time.perf_counter()
+            now = self._clock()
             td = np.stack([rows[i].td for i in idxs])
             ti = np.stack([rows[i].ti for i in idxs])
             if self._rerank:
@@ -793,19 +896,45 @@ class RoundScheduler:
         """Hand off and clear the finished-query list — the write-barrier
         API for consuming ``done`` (callers must not mutate the list in
         place; ownership of the returned batch transfers to the caller)."""
-        out = self.done
-        self.done = []
-        return out
+        with self._lock:
+            note_guarded(self, "done")
+            out = self.done
+            self.done = []
+            return out
 
     def drain(self) -> None:
         while self.step():
             pass
 
+    def has_active(self) -> bool:
+        with self._lock:
+            return bool(self.active)
+
+    def epoch_key(self):
+        with self._lock:
+            return self._epoch_key
+
     def epoch_footprint(self) -> np.ndarray:
         """Distinct partitions streamed so far (invariant telemetry)."""
-        if not self.round_streams:
-            return np.zeros(0, dtype=np.int64)
-        return np.unique(np.concatenate(self.round_streams))
+        with self._lock:
+            if not self.round_streams:
+                return np.zeros(0, dtype=np.int64)
+            return np.unique(np.concatenate(self.round_streams))
+
+    def snapshot(self) -> dict:
+        """Lock-consistent copy of the riding telemetry (what
+        ``ServingRuntime.stats()`` reports)."""
+        with self._lock:
+            return {
+                "rounds_run": self.rounds_run,
+                "admitted_batches": self._batches,
+                "in_flight": len(self.active),
+                "partitions_streamed": self.partitions_streamed,
+                "partitions_planned": int(sum(
+                    len(f) for f in self.plan_footprints)),
+                "vectors_streamed": self.vectors_streamed,
+                "comparisons": self.comparisons,
+            }
 
 
 # ---------------------------------------------------------------------------
@@ -817,24 +946,45 @@ class ServingRuntime:
     maintenance over one dynamic :class:`QuakeIndex`.
 
     Queries enter through :meth:`submit_query` / :meth:`submit_batch` and
-    complete asynchronously (``flush_size`` admissions force a flush, and
-    each flush advances in-flight rounds by ``interleave_rounds`` — the
-    window newly queued batches ride).  Writes are barriers: they drain
-    the in-flight population, mutate the index, invalidate cache entries
-    through the journal delta, and give the maintenance scheduler a
-    chance to run.  :meth:`drain` completes everything in flight;
-    :meth:`result` returns a query's :class:`QueryResult`.
+    complete asynchronously (``flush_size`` admissions force a flush,
+    ``flush_deadline``/``flush_deadline_ms`` bounds how long a queued
+    query can wait — enforced at admission time and by a background
+    ticker thread so a lone query still flushes with no further
+    arrivals).  Writes are barriers: they drain the in-flight
+    population, mutate the index, invalidate cache entries through the
+    journal delta, and give the maintenance scheduler a chance to run.
+    :meth:`drain` completes everything in flight; :meth:`result` returns
+    a query's :class:`QueryResult`.
+
+    **Threading model** (docs/serving.md): safe for concurrent
+    ``submit_*`` / ``result`` / ``stats`` callers.  Two runtime locks —
+    ``_engine_lock`` (reentrant, outermost) serializes all *blocking*
+    engine work: flush bodies, scheduler rounds, write barriers,
+    maintenance; ``_lock`` (the admission lock) is held only for queue /
+    results / counter bookkeeping and is never held across blocking
+    calls (quakecheck QK203 enforces this).  Lock order is declared in
+    ``sanitize.LOCK_ORDER``; component locks
+    (``RoundScheduler._lock`` / ``ResultCache._lock`` /
+    ``MaintenanceScheduler._lock``) nest inside.  The coalescing
+    determinism contract survives concurrency: the engine lock totally
+    orders admissions and writes, and with ``record_admissions`` that
+    order is logged so a single-threaded replay reproduces identical
+    results (tests/test_serving_concurrency.py).
     """
 
     def __init__(self, index: QuakeIndex,
                  config: Optional[ServingConfig] = None,
                  maintainer: Optional[Maintainer] = None,
-                 lam: Optional[LatencyModel] = None):
+                 lam: Optional[LatencyModel] = None,
+                 clock: Optional[Callable[[], float]] = None):
         self.index = index
         self.cfg = config or ServingConfig()
         self.target = (self.cfg.recall_target
                        if self.cfg.recall_target is not None
                        else index.config.recall_target)
+        self._engine_lock = TrackedLock("ServingRuntime._engine_lock")
+        self._lock = TrackedLock("ServingRuntime._lock")
+        self._clock = clock or time.perf_counter
         self.executor = mq.BatchedSearchExecutor(
             index, impl=self.cfg.impl, storage_dtype=self.cfg.storage_dtype,
             planner=self.cfg.planner, rounds=self.cfg.rounds,
@@ -858,43 +1008,79 @@ class ServingRuntime:
             rounds=self.cfg.rounds, early_exit=self.cfg.early_exit,
             b_bucket=self.cfg.b_bucket,
             record_stats=self.cfg.record_stats,
-            scan_backend=self.cfg.scan_backend)
+            scan_backend=self.cfg.scan_backend,
+            clock=self._clock)
         self._queue: List[Tuple[int, np.ndarray, float]] = []
         self._maintaining = False
         self._next_qid = 0
         self.results: Dict[int, QueryResult] = {}
         self._cache_version = index.version
+        self._admission_log: List[tuple] = []
+        self._admit_gen: Dict[int, int] = {}
         self.queries_submitted = 0
         self.cache_hits = 0
         self.write_ops = 0
+        self._closed = False
+        self._ticker_wake = threading.Event()
+        self._ticker_error: Optional[BaseException] = None
+        self._ticker_thread: Optional[threading.Thread] = None
+        if self.cfg.flush_deadline is not None and self.cfg.ticker:
+            self._ticker_thread = threading.Thread(
+                target=self._ticker_loop, name="serving-ticker",
+                daemon=True)
+            self._ticker_thread.start()
+
+    # -- lifecycle -----------------------------------------------------
+
+    def close(self) -> None:
+        """Stop the deadline ticker (idempotent).  Queued / in-flight
+        work is left as is — call :meth:`drain` first to finish it."""
+        self._closed = True
+        self._ticker_wake.set()
+        t = self._ticker_thread
+        if t is not None:
+            t.join(timeout=5.0)
+            self._ticker_thread = None
+
+    def __enter__(self) -> "ServingRuntime":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
 
     # -- admission -----------------------------------------------------
 
     def submit_query(self, q: np.ndarray) -> int:
-        """Admit one query; returns its ticket (qid)."""
+        """Admit one query; returns its ticket (qid).  Thread-safe: the
+        admission lock covers ticketing, the cache probe and enqueueing;
+        the flush a size/deadline trigger forces runs *after* it drops
+        (blocking work never happens under the admission lock)."""
         q = np.ascontiguousarray(q, dtype=np.float32).reshape(-1)
-        qid = self._next_qid
-        self._next_qid += 1
-        self.queries_submitted += 1
-        if self.cache is not None:
-            if self.index.version != self._cache_version:
-                self._invalidate_cache()   # index mutated out-of-band
-            t0 = time.perf_counter()
-            hit = self.cache.get(q, self.cfg.k)
-            if hit is not None:
-                self.cache_hits += 1
-                self.results[qid] = QueryResult(
-                    ids=hit["ids"].copy(), dists=hit["dists"].copy(),
-                    nprobe=hit["nprobe"],
-                    recall_estimate=hit["recall_estimate"],
-                    from_cache=True,
-                    latency_s=time.perf_counter() - t0)
-                return qid
-        self._queue.append((qid, q, time.perf_counter()))
-        if len(self._queue) >= self.cfg.flush_size or (
+        now = self._clock()
+        do_flush = False
+        with self._lock:
+            note_guarded(self, "_queue")
+            qid = self._next_qid
+            self._next_qid += 1
+            self.queries_submitted += 1
+            if self.cache is not None:
+                if self.index.version != self._cache_version:
+                    self._invalidate_cache_locked()  # out-of-band mutation
+                hit = self.cache.get(q, self.cfg.k)
+                if hit is not None:
+                    self.cache_hits += 1
+                    self.results[qid] = QueryResult(
+                        ids=hit["ids"].copy(), dists=hit["dists"].copy(),
+                        nprobe=hit["nprobe"],
+                        recall_estimate=hit["recall_estimate"],
+                        from_cache=True,
+                        latency_s=self._clock() - now)
+                    return qid
+            self._queue.append((qid, q, now))
+            do_flush = len(self._queue) >= self.cfg.flush_size or (
                 self.cfg.flush_deadline is not None
-                and time.perf_counter() - self._queue[0][2]
-                >= self.cfg.flush_deadline):
+                and now - self._queue[0][2] >= self.cfg.flush_deadline)
+        if do_flush:
             self.flush()
         return qid
 
@@ -904,6 +1090,38 @@ class ServingRuntime:
         if q.ndim == 1:
             q = q[None, :]
         return [self.submit_query(q[i]) for i in range(q.shape[0])]
+
+    # -- deadline ticker ----------------------------------------------
+
+    def tick(self) -> bool:
+        """One deadline check: when the oldest queued query has waited
+        past ``flush_deadline``, admit the queue and run it to
+        completion (a deadline exists to bound answer latency — leaving
+        the batch in flight for the next admission to finish would miss
+        the point under light traffic).  Called by the background ticker
+        thread; fake-clock tests call it directly.  Returns whether a
+        flush ran."""
+        deadline = self.cfg.flush_deadline
+        if deadline is None:
+            return False
+        with self._lock:
+            due = bool(self._queue) and (
+                self._clock() - self._queue[0][2] >= deadline)
+        if due:
+            with self._engine_lock:
+                self._drain_engine()
+        return due
+
+    def _ticker_loop(self) -> None:
+        period = max(self.cfg.flush_deadline / 4.0, 1e-3)
+        while not self._closed:
+            self._ticker_wake.wait(period)
+            if self._closed:
+                break
+            try:
+                self.tick()
+            except BaseException as e:  # keep ticking; surface in close/tests
+                self._ticker_error = e
 
     # -- scheduling ----------------------------------------------------
 
@@ -920,16 +1138,29 @@ class ServingRuntime:
     def flush(self) -> None:
         """Coalesce the queue into one executor batch, admit it to the
         riding scheduler, and advance in-flight rounds."""
-        if self._queue:
-            if (self.scheduler.active
+        with self._engine_lock:
+            self._flush_engine()
+
+    def _flush_engine(self) -> None:
+        with self._lock:
+            note_guarded(self, "_queue")
+            batch = list(self._queue)
+            self._queue.clear()
+        if batch:
+            if (self.scheduler.has_active()
                     and self.executor._fingerprint()
-                    != self.scheduler._epoch_key):
+                    != self.scheduler.epoch_key()):
                 self.scheduler.drain()     # out-of-band mutation barrier
             self._ensure_radius()
-            qids = [t[0] for t in self._queue]
-            qs = np.stack([t[1] for t in self._queue])
-            ts = [t[2] for t in self._queue]
-            self._queue.clear()
+            qids = [t[0] for t in batch]
+            qs = np.stack([t[1] for t in batch])
+            ts = [t[2] for t in batch]
+            gen = self.cache.generation if self.cache is not None else 0
+            with self._lock:
+                for qid in qids:
+                    self._admit_gen[qid] = gen
+                if self.cfg.record_admissions:
+                    self._admission_log.append(("q", tuple(qids)))
             self.scheduler.admit(qs, qids, ts)
             self.maintenance.note_op()
         for _ in range(max(self.cfg.interleave_rounds, 0)):
@@ -942,43 +1173,67 @@ class ServingRuntime:
         Drains are also where read-only streams get their maintenance
         check: without it the access-shift trigger (read-skew drift) and
         the op-budget backstop could only ever fire on a write barrier."""
-        self.flush()
+        with self._engine_lock:
+            self._drain_engine()
+        self.maybe_maintain()
+
+    def _drain_engine(self) -> None:
+        self._flush_engine()
         self.scheduler.drain()
         self._collect()
-        self.maybe_maintain()
 
     def _collect(self) -> None:
         for qid, res, q, footprint in self.scheduler.take_done():
-            self.results[qid] = res
+            with self._lock:
+                note_guarded(self, "results")
+                self.results[qid] = res
+                gen = self._admit_gen.pop(qid, None)
             if self.cache is not None:
                 self.cache.put(q, self.cfg.k, res.ids, res.dists, footprint,
                                nprobe=res.nprobe,
-                               recall_estimate=res.recall_estimate)
+                               recall_estimate=res.recall_estimate,
+                               gen=gen)
 
     def result(self, qid: int) -> Optional[QueryResult]:
         """The query's result, or None while it is still in flight."""
-        return self.results.get(qid)
+        with self._lock:
+            note_guarded(self, "results")
+            return self.results.get(qid)
 
     # -- writes (barriers) --------------------------------------------
 
     def submit_insert(self, x: np.ndarray, ids: np.ndarray) -> None:
-        self.drain()
-        self.index.insert(x, ids)
-        self._after_write()
+        with self._engine_lock:
+            self._drain_engine()
+            self.index.insert(x, ids)
+            if self.cfg.record_admissions:
+                with self._lock:
+                    self._admission_log.append(
+                        ("insert", np.array(x, copy=True),
+                         np.array(ids, copy=True)))
+            self._after_write()
 
     def submit_delete(self, ids: np.ndarray) -> int:
-        self.drain()
-        removed = self.index.delete(ids)
-        self._after_write()
-        return removed
+        with self._engine_lock:
+            self._drain_engine()
+            removed = self.index.delete(ids)
+            if self.cfg.record_admissions:
+                with self._lock:
+                    self._admission_log.append(
+                        ("delete", np.array(ids, copy=True)))
+            self._after_write()
+            return removed
 
     def _after_write(self) -> None:
-        self.write_ops += 1
-        self._invalidate_cache()
+        with self._lock:
+            self.write_ops += 1
+            self._invalidate_cache_locked()
         self.maintenance.note_op()
         self.maybe_maintain()
 
-    def _invalidate_cache(self) -> None:
+    def _invalidate_cache_locked(self) -> None:
+        # callers hold self._lock (propagated seed); serializing the
+        # version check with admission-side cache probes is the point
         if self.cache is None:
             self._cache_version = self.index.version
             return
@@ -989,49 +1244,71 @@ class ServingRuntime:
             self.cache.invalidate_partitions(delta.dirty)
         self._cache_version = self.index.version
 
+    def admission_log(self) -> List[tuple]:
+        """Copy of the recorded admission order (engine-lock total
+        order); requires ``cfg.record_admissions``."""
+        with self._lock:
+            return list(self._admission_log)
+
     def maybe_maintain(self, force: bool = False
                        ) -> Optional[MaintenanceReport]:
         """Run a maintenance pass if a drift trigger fired (or forced).
         In-flight work is drained first (maintenance is a barrier);
         maintenance mutations then invalidate the cache through the same
         journal path as writes."""
-        if self._maintaining:
-            return None
-        if not force and self.maintenance.due() is None:
-            return None
-        self._maintaining = True     # drain() re-enters maybe_maintain
-        try:
-            self.drain()
-            rep = self.maintenance.run_if_due(force=force)
-        finally:
-            self._maintaining = False
-        if rep is not None:
-            self._invalidate_cache()
-        return rep
+        with self._engine_lock:
+            with self._lock:
+                if self._maintaining:
+                    return None
+                self._maintaining = True
+            try:
+                if not force and self.maintenance.due() is None:
+                    return None
+                self._drain_engine()
+                rep = self.maintenance.run_if_due(force=force)
+                if rep is not None:
+                    with self._lock:
+                        self._invalidate_cache_locked()
+                return rep
+            finally:
+                with self._lock:
+                    self._maintaining = False
 
     # -- telemetry -----------------------------------------------------
 
     def stats(self) -> dict:
-        sch = self.scheduler
-        planned = (int(sum(len(f) for f in sch.plan_footprints))
-                   if sch.plan_footprints else 0)
-        return {
-            "queries_submitted": self.queries_submitted,
-            "queries_completed": len(self.results),
-            "cache_hits": self.cache_hits,
-            "cache_entries": len(self.cache) if self.cache else 0,
-            "cache_invalidated": self.cache.invalidated if self.cache else 0,
-            "write_ops": self.write_ops,
-            "rounds_run": sch.rounds_run,
-            "admitted_batches": sch._batches,
-            "partitions_streamed": sch.partitions_streamed,
+        """Deep-copied, per-component lock-consistent snapshot.  Takes
+        the admission and component locks (never the engine lock, which
+        may be mid-scan) — each component's counters are internally
+        consistent; cross-component skew is bounded by what completed
+        between the snapshots."""
+        sch = self.scheduler.snapshot()
+        maint = self.maintenance.snapshot()
+        cache = self.cache.counters() if self.cache is not None else None
+        with self._lock:
+            out = {
+                "queries_submitted": self.queries_submitted,
+                "queries_completed": len(self.results),
+                "queue_depth": len(self._queue),
+                "cache_hits": self.cache_hits,
+                "write_ops": self.write_ops,
+            }
+        out["cache_entries"] = cache["entries"] if cache else 0
+        out["cache_invalidated"] = cache["invalidated"] if cache else 0
+        out["cache_stale_puts"] = cache["stale_puts"] if cache else 0
+        planned = sch["partitions_planned"]
+        out.update({
+            "rounds_run": sch["rounds_run"],
+            "admitted_batches": sch["admitted_batches"],
+            "in_flight": sch["in_flight"],
+            "partitions_streamed": sch["partitions_streamed"],
             "partitions_planned": planned,
             "riding_savings": round(
-                1.0 - sch.partitions_streamed / planned, 4)
+                1.0 - sch["partitions_streamed"] / planned, 4)
             if planned else 0.0,
-            "vectors_streamed": sch.vectors_streamed,
-            "comparisons": sch.comparisons,
-            "maintenance_runs": len(self.maintenance.history),
-            "maintenance_reasons": [h["reason"]
-                                    for h in self.maintenance.history],
-        }
+            "vectors_streamed": sch["vectors_streamed"],
+            "comparisons": sch["comparisons"],
+            "maintenance_runs": maint["runs"],
+            "maintenance_reasons": maint["reasons"],
+        })
+        return out

@@ -49,8 +49,11 @@ def _warm_runtime(index, wl, scfg: ServingConfig) -> None:
         scfg, cache_entries=0, record_stats=False,
         maint_min_ops=10 ** 9, maint_max_ops=None)
     shadow = ServingRuntime(index, shadow_cfg)
-    shadow.submit_batch(qops[0].queries)
-    shadow.drain()
+    try:
+        shadow.submit_batch(qops[0].queries)
+        shadow.drain()
+    finally:
+        shadow.close()
 
 
 def replay_runtime(wl, cfg: QuakeConfig, scfg: ServingConfig,
@@ -118,6 +121,7 @@ def replay_runtime(wl, cfg: QuakeConfig, scfg: ServingConfig,
                       f"parts={index.num_partitions}")
     rt.drain()
     st = rt.stats()
+    rt.close()                    # join the deadline ticker, if configured
     lat = np.asarray(latencies) if latencies else np.zeros(1)
     out = {"mode": "runtime", "serve_s": round(serve_s, 3),
            "n_queries": n_queries,

@@ -21,20 +21,41 @@ Three composable guards (see ``docs/static_analysis.md``):
 pytest fixture (``tests/conftest.py``).  ``cost_model.profile`` uses the
 counter to warm deterministically: re-run until a call compiles nothing,
 instead of hoping one warm call covered every shape.
+
+The fourth guard is the **concurrency sanitizer** — the runtime twin of
+quakecheck's QK2xx lock-discipline rules (``tools/quakecheck``):
+
+* :class:`TrackedLock` wraps ``threading.RLock`` with a rank from the
+  declared :data:`LOCK_ORDER` and a per-thread held stack; acquiring
+  against the order is counted always and raises inside an active
+  :class:`LockOrderWatchdog`.
+* :func:`note_guarded` is an eraser-style guarded-field access checker:
+  each ``(object, field)`` access intersects the candidate lock-set
+  across threads; two threads touching a field with no common lock is a
+  guarded-field violation.
+* :class:`ConcurrencyEvents` mirrors :class:`CompileEvents` — a counter
+  scope over acquisitions / contention / order violations / guarded
+  violations, so a hammer test asserts "zero violations" as a delta.
+
+``sanitized(locks=True)`` arms the watchdog alongside the other guards.
 """
 from __future__ import annotations
 
 import contextlib
+import functools
 import json
 import threading
 from pathlib import Path
-from typing import Dict, Iterator, Optional
+from typing import Dict, Iterator, List, Optional, Tuple
 
 import jax
 
 __all__ = ["compile_count", "compile_events", "sanitized",
            "warm_until_stable", "load_compile_budget",
-           "assert_compile_budget", "BUDGET_PATH"]
+           "assert_compile_budget", "BUDGET_PATH",
+           "LOCK_ORDER", "TrackedLock", "LockOrderWatchdog",
+           "ConcurrencyEvents", "concurrency_counters", "note_guarded",
+           "guarded_by"]
 
 BUDGET_PATH = Path(__file__).resolve().parents[2] / "results" \
     / "compile_budget.json"
@@ -94,19 +115,24 @@ def compile_events() -> Iterator[CompileEvents]:
 
 @contextlib.contextmanager
 def sanitized(transfers: bool = True, nans: bool = True,
-              compiles: bool = True) -> Iterator[Optional[CompileEvents]]:
+              compiles: bool = True,
+              locks: bool = False) -> Iterator[Optional[CompileEvents]]:
     """Run the enclosed block under the stacked sanitizers.
 
     Yields the :class:`CompileEvents` scope when ``compiles`` is on
     (else None).  Device operands must be staged with explicit
     ``device_put``/``jnp.asarray`` *before* entering when ``transfers``
-    is on — that is the point.
+    is on — that is the point.  ``locks=True`` arms the
+    :class:`LockOrderWatchdog` (lock-order violations raise, guarded
+    field accesses are eraser-checked).
     """
     with contextlib.ExitStack() as stack:
         if transfers:
             stack.enter_context(jax.transfer_guard("disallow"))
         if nans:
             stack.enter_context(jax.debug_nans(True))
+        if locks:
+            stack.enter_context(LockOrderWatchdog())
         yield CompileEvents() if compiles else None
 
 
@@ -152,3 +178,308 @@ def assert_compile_budget(entry_point: str, observed: int,
         f"{entry_point}: {observed} compilations observed, budget is "
         f"{budget} — a shape-padding bucket regressed (quakecheck QK102; "
         f"see docs/static_analysis.md)")
+
+
+# ---------------------------------------------------------------------------
+# Concurrency sanitizer — runtime twin of quakecheck QK2xx
+# ---------------------------------------------------------------------------
+
+# Declared global lock partial order, outermost first.  This is the
+# runtime twin of ``tools.quakecheck.config.LOCK_ORDER`` — a test in
+# tests/test_sanitize.py asserts the two agree, so the linter and the
+# watchdog can never drift apart.
+LOCK_ORDER: Tuple[str, ...] = (
+    "ServingRuntime._engine_lock",
+    "ServingRuntime._lock",
+    "RoundScheduler._lock",
+    "ResultCache._lock",
+    "MaintenanceScheduler._lock",
+)
+_LOCK_RANK = {name: i for i, name in enumerate(LOCK_ORDER)}
+
+_cc_lock = threading.Lock()
+_cc_counters = {"acquisitions": 0, "contended": 0,
+                "order_violations": 0, "guarded_violations": 0}
+_cc_violations: List[str] = []       # human-readable, capped
+_VIOLATION_CAP = 64
+_watchdog_depth = 0                  # > 0: strict mode (raise) + eraser on
+_tls = threading.local()
+
+
+def _held_stack() -> List["TrackedLock"]:
+    stack = getattr(_tls, "held", None)
+    if stack is None:
+        stack = _tls.held = []
+    return stack
+
+
+def _watchdog_active() -> bool:
+    return _watchdog_depth > 0
+
+
+def _record_violation(kind: str, message: str) -> None:
+    with _cc_lock:
+        _cc_counters[kind] += 1
+        if len(_cc_violations) < _VIOLATION_CAP:
+            _cc_violations.append(f"{kind}: {message}")
+    if _watchdog_active():
+        raise RuntimeError(f"concurrency sanitizer: {message}")
+
+
+def concurrency_counters() -> Dict[str, int]:
+    """Snapshot of the monotonic concurrency counters."""
+    with _cc_lock:
+        return dict(_cc_counters)
+
+
+def concurrency_violations() -> List[str]:
+    """The recorded violation messages (bounded buffer)."""
+    with _cc_lock:
+        return list(_cc_violations)
+
+
+class TrackedLock:
+    """A reentrant lock that knows its name and its place.
+
+    Drop-in for ``threading.RLock`` on the serving classes: context
+    manager, ``acquire``/``release``, plus ``held()`` /
+    ``assert_held()`` so guarded methods can verify their contract.
+    Acquiring against :data:`LOCK_ORDER` while holding a later-ranked
+    lock is always *counted*; under an active
+    :class:`LockOrderWatchdog` it raises.
+    """
+
+    __slots__ = ("name", "_rank", "_inner", "_owner", "_depth")
+
+    def __init__(self, name: str) -> None:
+        self.name = name
+        self._rank = _LOCK_RANK.get(name)
+        self._inner = threading.RLock()
+        self._owner: Optional[int] = None
+        self._depth = 0
+
+    def __repr__(self) -> str:
+        return f"TrackedLock({self.name!r})"
+
+    def held(self) -> bool:
+        """True when the *calling thread* holds this lock."""
+        return self._owner == threading.get_ident()
+
+    def assert_held(self) -> None:
+        if not self.held():
+            raise AssertionError(
+                f"{self.name} must be held here (see docs/serving.md "
+                f"threading model)")
+
+    def acquire(self, blocking: bool = True, timeout: float = -1) -> bool:
+        me = threading.get_ident()
+        if self._owner == me:                       # reentrant fast path
+            self._inner.acquire()
+            self._depth += 1
+            return True
+        if self._rank is not None:
+            for held in _held_stack():
+                if held._rank is not None and held._rank > self._rank:
+                    _record_violation(
+                        "order_violations",
+                        f"acquiring '{self.name}' while holding "
+                        f"'{held.name}' inverts LOCK_ORDER "
+                        f"({' -> '.join(LOCK_ORDER)})")
+        got = self._inner.acquire(False)
+        if not got:
+            with _cc_lock:
+                _cc_counters["contended"] += 1
+            if not blocking:
+                return False
+            got = self._inner.acquire(True, timeout)
+            if not got:
+                return False
+        self._owner = me
+        self._depth = 1
+        _held_stack().append(self)
+        with _cc_lock:
+            _cc_counters["acquisitions"] += 1
+        if _watchdog_active():
+            _WATCHDOG_TRACE.append((me, self.name))
+        return True
+
+    def release(self) -> None:
+        if self._owner != threading.get_ident():
+            raise RuntimeError(f"releasing {self.name} from a thread "
+                               f"that does not hold it")
+        self._depth -= 1
+        if self._depth == 0:
+            self._owner = None
+            stack = _held_stack()
+            if self in stack:
+                stack.remove(self)
+        self._inner.release()
+
+    def __enter__(self) -> "TrackedLock":
+        self.acquire()
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.release()
+
+
+# Bounded per-process acquisition trace (thread id, lock name), recorded
+# only while a watchdog is active; LockOrderWatchdog.trace() filters it.
+class _Trace:
+    def __init__(self, cap: int = 4096) -> None:
+        self._items: List[Tuple[int, str]] = []
+        self._cap = cap
+        self._lk = threading.Lock()
+
+    def append(self, item: Tuple[int, str]) -> None:
+        with self._lk:
+            if len(self._items) < self._cap:
+                self._items.append(item)
+
+    def snapshot(self) -> List[Tuple[int, str]]:
+        with self._lk:
+            return list(self._items)
+
+    def cut(self) -> int:
+        with self._lk:
+            return len(self._items)
+
+
+_WATCHDOG_TRACE = _Trace()
+
+
+# -- eraser-style guarded-field checker -------------------------------------
+
+# (id(owner), field) -> [candidate lock-name set or None, thread-id set].
+# Lockset algorithm (Savage et al.): the candidate set starts as the
+# first access's held locks and is intersected on every later access; an
+# empty candidate once a *second* thread has touched the field means no
+# common lock protects it.
+_eraser_lock = threading.Lock()
+_eraser_state: Dict[Tuple[int, str], List] = {}
+
+
+def note_guarded(owner: object, field: str) -> None:
+    """Record an access to ``owner.<field>`` under the current thread's
+    lock-set.  No-op unless a :class:`LockOrderWatchdog` is active, so
+    production paths can call it unconditionally."""
+    if not _watchdog_active():
+        return
+    held = frozenset(lk.name for lk in _held_stack())
+    me = threading.get_ident()
+    key = (id(owner), field)
+    with _eraser_lock:
+        st = _eraser_state.get(key)
+        if st is None:
+            _eraser_state[key] = [set(held), {me}]
+            return
+        st[0] &= held
+        st[1].add(me)
+        violation = len(st[1]) >= 2 and not st[0]
+        if violation:                    # reset so we report once
+            st[0] = set(held)
+            st[1] = {me}
+    if violation:
+        _record_violation(
+            "guarded_violations",
+            f"field '{type(owner).__name__}.{field}' accessed by "
+            f"multiple threads with no common lock (eraser lockset "
+            f"empty)")
+
+
+def guarded_by(lock_name: str):
+    """Runtime twin of the static ``@guarded_by`` annotation: marks the
+    method (quakecheck seeds its lock-set from the same decorator) and,
+    under an active watchdog, asserts the named lock is actually held on
+    entry.  ``lock_name`` is an attribute of ``self`` (``"_lock"``)."""
+    attr = lock_name.rsplit(".", 1)[-1]
+
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(self, *args, **kwargs):
+            if _watchdog_active():
+                lk = getattr(self, attr, None)
+                if isinstance(lk, TrackedLock) and not lk.held():
+                    _record_violation(
+                        "guarded_violations",
+                        f"{type(self).__name__}.{fn.__name__} declared "
+                        f"@guarded_by({lock_name!r}) but the lock is "
+                        f"not held")
+            return fn(self, *args, **kwargs)
+        wrapper.__quakecheck_guarded_by__ = lock_name
+        return wrapper
+    return deco
+
+
+class ConcurrencyEvents:
+    """Counter scope over the concurrency sanitizer, mirroring
+    :class:`CompileEvents`: each property is the delta since the scope
+    opened (or the last ``reset()``)."""
+
+    def __init__(self) -> None:
+        self._start = concurrency_counters()
+
+    def _delta(self, key: str) -> int:
+        return concurrency_counters()[key] - self._start[key]
+
+    @property
+    def acquisitions(self) -> int:
+        return self._delta("acquisitions")
+
+    @property
+    def contended(self) -> int:
+        return self._delta("contended")
+
+    @property
+    def order_violations(self) -> int:
+        return self._delta("order_violations")
+
+    @property
+    def guarded_violations(self) -> int:
+        return self._delta("guarded_violations")
+
+    def violations(self) -> int:
+        return self.order_violations + self.guarded_violations
+
+    def reset(self) -> None:
+        self._start = concurrency_counters()
+
+
+class LockOrderWatchdog:
+    """Context manager arming the concurrency sanitizer.
+
+    While active: lock-order violations *raise* (instead of only
+    counting), :func:`note_guarded` records eraser locksets, and every
+    :class:`TrackedLock` acquisition is appended to a bounded trace —
+    ``trace()`` returns this scope's (thread id, lock name) sequence,
+    i.e. the per-thread acquisition stacks flattened in real order.
+    """
+
+    def __init__(self) -> None:
+        self.events: Optional[ConcurrencyEvents] = None
+        self._cut = 0
+
+    def __enter__(self) -> "LockOrderWatchdog":
+        global _watchdog_depth
+        with _cc_lock:
+            _watchdog_depth += 1
+        self._cut = _WATCHDOG_TRACE.cut()
+        self.events = ConcurrencyEvents()
+        return self
+
+    def __exit__(self, *exc) -> None:
+        global _watchdog_depth
+        with _cc_lock:
+            _watchdog_depth -= 1
+            if _watchdog_depth == 0:
+                _eraser_state.clear()
+        return None
+
+    def trace(self) -> List[Tuple[int, str]]:
+        return _WATCHDOG_TRACE.snapshot()[self._cut:]
+
+    def stacks(self) -> Dict[int, List[str]]:
+        out: Dict[int, List[str]] = {}
+        for tid, name in self.trace():
+            out.setdefault(tid, []).append(name)
+        return out

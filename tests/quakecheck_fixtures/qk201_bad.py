@@ -1,0 +1,24 @@
+"""Seeded QK201 violations: guarded fields touched without their
+declared lock held — the ResultCache clear/put race the generation
+counter exists for (a ``put`` racing ``clear`` re-inserts a stale
+entry; see docs/serving.md)."""
+
+
+class ResultCache:
+    def __init__(self):
+        self._lock = object()
+        self._store = {}
+        self.hits = 0
+
+    def put(self, eid, entry):
+        self._store[eid] = entry        # QK201: no lock held
+
+    def get(self, eid):
+        with self._lock:
+            e = self._store.get(eid)
+            if e is not None:
+                self.hits += 1
+            return e
+
+    def count_hit(self):
+        self.hits += 1                  # QK201: counter outside the lock

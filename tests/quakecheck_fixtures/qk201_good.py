@@ -1,0 +1,35 @@
+"""QK201-clean twin: every guarded access is under the declared lock —
+via a ``with`` block, helper-seed propagation from locked call sites,
+or a ``holds()`` pragma documenting a lock the caller carries."""
+
+
+class ResultCache:
+    def __init__(self):
+        self._lock = object()
+        self._store = {}
+        self._gen = 0
+        self.hits = 0
+
+    def put(self, eid, entry, gen=None):
+        with self._lock:
+            if gen is not None and gen != self._gen:
+                return                  # stale: invalidated after admit
+            self._store[eid] = entry
+
+    def get(self, eid):
+        with self._lock:
+            e = self._store.get(eid)
+            if e is not None:
+                self.hits += 1
+            return e
+
+    def _bump_gen(self):
+        self._gen += 1      # helper: every call site holds the lock
+
+    def clear(self):
+        with self._lock:
+            self._store.clear()
+            self._bump_gen()
+
+    def on_collect(self, eid, entry):   # quakecheck: holds(ResultCache._lock)
+        self._store[eid] = entry

@@ -1,0 +1,14 @@
+"""Seeded QK202 violation: lock acquisition inverting the declared
+partial order (admission lock taken while holding the cache lock —
+a deadlock waiting for the opposite interleaving)."""
+
+
+class ServingRuntime:
+    def __init__(self, cache):
+        self._lock = object()
+        self.cache = cache
+
+    def inverted(self):
+        with self.cache._lock:          # ResultCache._lock (inner rank)
+            with self._lock:            # QK202: admission lock after it
+                pass

@@ -1,0 +1,19 @@
+"""QK202-clean twin: locks nest in the declared order (outermost
+first), and reentrant re-acquisition of a held lock is not an
+inversion."""
+
+
+class ServingRuntime:
+    def __init__(self, cache):
+        self._lock = object()
+        self.cache = cache
+
+    def ordered(self):
+        with self._lock:
+            with self.cache._lock:      # admission -> cache: declared order
+                pass
+
+    def reentrant(self):
+        with self._lock:
+            with self._lock:            # RLock re-entry, not an inversion
+                pass

@@ -1,0 +1,14 @@
+"""Seeded QK203 violation: blocking engine work under the admission
+lock — every concurrent submit_* caller stalls behind the scan."""
+
+
+class ServingRuntime:
+    def __init__(self, scheduler):
+        self._lock = object()
+        self.scheduler = scheduler
+        self._queue = []
+
+    def submit(self, q):
+        with self._lock:
+            self._queue.append(q)
+            self.scheduler.drain()      # QK203: blocking under admission

@@ -1,0 +1,18 @@
+"""QK203-clean twin: the admission lock covers only bookkeeping; the
+blocking flush runs after it drops, under the engine lock."""
+
+
+class ServingRuntime:
+    def __init__(self, scheduler):
+        self._engine_lock = object()
+        self._lock = object()
+        self.scheduler = scheduler
+        self._queue = []
+
+    def submit(self, q):
+        with self._lock:
+            self._queue.append(q)
+            do_flush = len(self._queue) >= 8
+        if do_flush:
+            with self._engine_lock:
+                self.scheduler.drain()  # blocking work: engine scope

@@ -1,0 +1,13 @@
+"""Seeded QK204 violation: a guarded mutable field escapes its lock
+scope — the returned alias is read (and mutated) after the lock drops,
+so the lock protected nothing."""
+
+
+class RoundScheduler:
+    def __init__(self):
+        self._lock = object()
+        self.done = []
+
+    def peek_done(self):
+        with self._lock:
+            return self.done            # QK204: alias outlives the lock

@@ -1,0 +1,18 @@
+"""QK204-clean twin: hand out a snapshot, or transfer ownership by
+rebinding the field before the reference leaves the lock scope."""
+
+
+class RoundScheduler:
+    def __init__(self):
+        self._lock = object()
+        self.done = []
+
+    def peek_done(self):
+        with self._lock:
+            return list(self.done)      # snapshot, not an alias
+
+    def take_done(self):
+        with self._lock:
+            out = self.done
+            self.done = []              # ownership transfer by rebind
+            return out

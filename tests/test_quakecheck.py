@@ -23,6 +23,10 @@ def rules_in(path):
     ("QK103", "kernels/qk103_bad.py", "kernels/qk103_good.py"),
     ("QK104", "qk104_bad.py", "qk104_good.py"),
     ("QK105", "qk105_bad.py", "qk105_good.py"),
+    ("QK201", "qk201_bad.py", "qk201_good.py"),
+    ("QK202", "qk202_bad.py", "qk202_good.py"),
+    ("QK203", "qk203_bad.py", "qk203_good.py"),
+    ("QK204", "qk204_bad.py", "qk204_good.py"),
 ])
 def test_rule_flags_bad_passes_good(rule, bad, good):
     assert rules_in(FIXTURES / bad) == [rule]
@@ -36,6 +40,10 @@ def test_bad_fixtures_have_expected_counts():
     assert len(lint_paths([str(FIXTURES / "kernels/qk103_bad.py")])) == 4
     assert len(lint_paths([str(FIXTURES / "qk104_bad.py")])) == 1
     assert len(lint_paths([str(FIXTURES / "qk105_bad.py")])) == 2
+    assert len(lint_paths([str(FIXTURES / "qk201_bad.py")])) == 2
+    assert len(lint_paths([str(FIXTURES / "qk202_bad.py")])) == 1
+    assert len(lint_paths([str(FIXTURES / "qk203_bad.py")])) == 1
+    assert len(lint_paths([str(FIXTURES / "qk204_bad.py")])) == 1
 
 
 def test_qk100_reasonless_allow_sync():
@@ -47,7 +55,8 @@ def test_qk100_reasonless_allow_sync():
 def test_fixture_dir_as_a_whole():
     findings = lint_paths([str(FIXTURES)])
     assert {f.rule for f in findings} == \
-        {"QK100", "QK101", "QK102", "QK103", "QK104", "QK105"}
+        {"QK100", "QK101", "QK102", "QK103", "QK104", "QK105",
+         "QK201", "QK202", "QK203", "QK204"}
     assert all("good" not in f.path for f in findings)
 
 
@@ -79,8 +88,36 @@ def test_device_path_pragma_registers():
 
 def test_repo_lints_clean():
     """Acceptance criterion: the stack carries no undocumented findings."""
-    findings = lint_paths([str(REPO / "src")])
+    findings = lint_paths([str(REPO / "src"), str(REPO / "tools")])
     assert findings == [], "\n".join(f.render() for f in findings)
+
+
+def test_select_prefix_matches_family():
+    # --select QK2 picks up the whole concurrency family and nothing else
+    findings = lint_paths([str(FIXTURES)], select=["QK2"])
+    rules = {f.rule for f in findings}
+    assert rules == {"QK201", "QK202", "QK203", "QK204"}
+
+
+def test_holds_pragma_seeds_lock_set():
+    src = (
+        "class ResultCache:\n"
+        "    def on_collect(self, eid, e):"
+        "  # quakecheck: holds(ResultCache._lock)\n"
+        "        self._store[eid] = e\n")
+    assert lint_source(src, "t.py") == []
+    stripped = src.replace("  # quakecheck: holds(ResultCache._lock)", "")
+    assert [f.rule for f in lint_source(stripped, "t.py")] == ["QK201"]
+
+
+def test_empty_holds_pragma_is_qk100():
+    src = (
+        "class ResultCache:\n"
+        "    def on_collect(self, eid, e):  # quakecheck: holds()\n"
+        "        self._store[eid] = e\n")
+    rules = [f.rule for f in lint_source(src, "t.py")]
+    # the empty pragma is flagged AND seeds nothing, so QK201 still fires
+    assert sorted(rules) == ["QK100", "QK201"]
 
 
 def test_cli_exit_codes():

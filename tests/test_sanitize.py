@@ -1,7 +1,10 @@
 """Runtime sanitizer harness: compile-event counter sanity, the
 compile-budget gate, shape-bucket recompile constancy for the packed
-round scan, and sanitized (transfer-guarded) runs of the fused-planner
-and packed-scan device paths."""
+round scan, sanitized (transfer-guarded) runs of the fused-planner
+and packed-scan device paths, and the concurrency sanitizer
+(TrackedLock rank checks, eraser guarded-field checker, watchdog)."""
+import threading
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -164,3 +167,158 @@ def test_packed_scan_sanitized(built, sanitized_run):
                                        ev.new())
     # guarded run returns the exact same top-k as the unguarded warm run
     np.testing.assert_array_equal(np.asarray(flat), np.asarray(warm[1]))
+
+
+# ---------------------------------------------------------------------------
+# concurrency sanitizer: TrackedLock / watchdog / eraser / guarded_by
+# ---------------------------------------------------------------------------
+
+def test_lock_order_matches_quakecheck_config():
+    """The runtime twin and the static analyzer must agree on the
+    hierarchy, or one of them is checking a fiction."""
+    from tools.quakecheck import config as qc
+    assert tuple(qc.LOCK_ORDER) == sanitize.LOCK_ORDER
+
+
+def test_tracked_lock_in_order_is_clean():
+    outer = sanitize.TrackedLock("ServingRuntime._lock")
+    inner = sanitize.TrackedLock("ResultCache._lock")
+    with sanitize.LockOrderWatchdog() as wd:
+        with outer:
+            assert outer.held()
+            with inner:
+                pass
+        assert not outer.held()
+        assert wd.events.order_violations == 0
+        assert wd.events.acquisitions == 2
+
+
+def test_tracked_lock_reentrant():
+    lk = sanitize.TrackedLock("ServingRuntime._lock")
+    with sanitize.LockOrderWatchdog() as wd:
+        with lk:
+            with lk:                      # re-entry is not an inversion
+                assert lk.held()
+        assert wd.events.order_violations == 0
+
+
+def test_lock_order_inversion_raises_under_watchdog():
+    outer = sanitize.TrackedLock("ServingRuntime._lock")
+    inner = sanitize.TrackedLock("ResultCache._lock")
+    with sanitize.LockOrderWatchdog() as wd:
+        with pytest.raises(RuntimeError, match="inverts LOCK_ORDER"):
+            with inner:
+                with outer:
+                    pass
+        assert wd.events.order_violations == 1
+    # outside the watchdog the same inversion only counts
+    before = sanitize.concurrency_counters()["order_violations"]
+    with inner:
+        with outer:
+            pass
+    assert sanitize.concurrency_counters()["order_violations"] == before + 1
+
+
+def test_release_from_wrong_thread_raises():
+    lk = sanitize.TrackedLock("ResultCache._lock")
+    lk.acquire()
+    err = []
+
+    def stray():
+        try:
+            lk.release()
+        except RuntimeError as e:
+            err.append(e)
+    t = threading.Thread(target=stray)
+    t.start()
+    t.join()
+    lk.release()
+    assert err, "release from a non-owner thread must raise"
+
+
+def test_eraser_flags_no_common_lock():
+    la = sanitize.TrackedLock("ResultCache._lock")
+    lb = sanitize.TrackedLock("MaintenanceScheduler._lock")
+
+    class Obj:
+        pass
+    o = Obj()
+    with sanitize.LockOrderWatchdog() as wd:
+        with la:
+            sanitize.note_guarded(o, "field")     # thread 1 under la
+        raised = []
+
+        def other():
+            try:
+                with lb:                          # thread 2 under lb only
+                    sanitize.note_guarded(o, "field")
+            except RuntimeError as e:
+                raised.append(e)
+        t = threading.Thread(target=other)
+        t.start()
+        t.join()
+        assert raised and "no common lock" in str(raised[0])
+        assert wd.events.guarded_violations == 1
+
+
+def test_eraser_clean_with_common_lock():
+    lk = sanitize.TrackedLock("ResultCache._lock")
+
+    class Obj:
+        pass
+    o = Obj()
+    with sanitize.LockOrderWatchdog() as wd:
+        def worker():
+            with lk:
+                sanitize.note_guarded(o, "field")
+        ts = [threading.Thread(target=worker) for _ in range(4)]
+        for t in ts:
+            t.start()
+        for t in ts:
+            t.join()
+        with lk:
+            sanitize.note_guarded(o, "field")
+        assert wd.events.guarded_violations == 0
+
+
+def test_guarded_by_decorator():
+    class Box:
+        def __init__(self):
+            self._lock = sanitize.TrackedLock("ResultCache._lock")
+            self.v = 0
+
+        @sanitize.guarded_by("_lock")
+        def bump(self):
+            self.v += 1
+    b = Box()
+    with sanitize.LockOrderWatchdog() as wd:
+        with b._lock:
+            b.bump()                       # lock held: fine
+        assert wd.events.guarded_violations == 0
+        with pytest.raises(RuntimeError, match="guarded"):
+            b.bump()                       # lock not held: flagged
+        assert wd.events.guarded_violations == 1
+    assert b.bump.__quakecheck_guarded_by__ == "_lock"
+
+
+def test_concurrency_events_are_deltas():
+    lk = sanitize.TrackedLock("ServingRuntime._lock")
+    with lk:
+        pass
+    with sanitize.LockOrderWatchdog() as wd:
+        assert wd.events.acquisitions == 0    # pre-watchdog noise excluded
+        with lk:
+            pass
+        assert wd.events.acquisitions == 1
+        wd.events.reset()
+        assert wd.events.acquisitions == 0
+
+
+def test_sanitized_locks_arms_watchdog():
+    inner = sanitize.TrackedLock("ResultCache._lock")
+    outer = sanitize.TrackedLock("ServingRuntime._lock")
+    with sanitize.sanitized(locks=True):
+        with pytest.raises(RuntimeError, match="inverts LOCK_ORDER"):
+            with inner:
+                with outer:
+                    pass

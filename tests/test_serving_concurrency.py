@@ -1,0 +1,258 @@
+"""Thread-safety contracts of the serving runtime (core/serving.py),
+checked under the runtime twin of the QK2xx static rules:
+
+  * hammer — 8 threads mixing submit/insert/delete/maintain against one
+    runtime under ``sanitized(locks=True)``: zero lock-order inversions,
+    zero eraser guarded-field violations, every query answered;
+  * replay determinism — the engine-lock admission log of a concurrent
+    run, replayed single-threaded on an identical index, reproduces
+    byte-identical ids (coalescing determinism survives concurrency);
+  * deadline clock — with a fake clock and the ticker off, a queued
+    query flushes exactly when it crosses ``flush_deadline_ms``, and
+    the deadline-flushed batch equals the size-triggered flush of the
+    same batch byte for byte;
+  * ticker — the background ticker thread flushes a lone query in real
+    time with no explicit flush/drain call;
+  * stats — ``stats()`` returns a self-consistent snapshot the caller
+    owns (mutating it cannot corrupt the runtime).
+"""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro import sanitize
+from repro.core import QuakeConfig, QuakeIndex, ServingConfig, ServingRuntime
+from repro.data import datasets
+
+
+@pytest.fixture(scope="module")
+def ds():
+    return datasets.clustered(2000, 16, n_clusters=12, seed=0)
+
+
+def build(ds):
+    return QuakeIndex.build(ds.vectors, num_partitions=16, kmeans_iters=3,
+                            config=QuakeConfig())
+
+
+# ---------------------------------------------------------------------------
+# hammer under the concurrency sanitizer
+# ---------------------------------------------------------------------------
+
+N_THREADS, OPS_PER_THREAD = 8, 25
+
+
+def test_hammer_sanitized(ds):
+    """8 threads x 25 ops against one runtime: the lock discipline the
+    QK2xx rules check statically holds dynamically — no inversions, no
+    guarded-field races, and every submitted query gets an answer."""
+    idx = build(ds)
+    cfg = ServingConfig(k=10, flush_size=4, scan_backend="host",
+                        cache_entries=64, flush_deadline_ms=5.0,
+                        ticker=True, maint_min_ops=32)
+    qs = datasets.queries_near(ds, 64, seed=5).astype(np.float32)
+    qids, qids_lock = [], threading.Lock()
+    errors = []
+
+    def worker(tid):
+        rng = np.random.default_rng(100 + tid)
+        my_ids = []
+        try:
+            for i in range(OPS_PER_THREAD):
+                r = rng.random()
+                if r < 0.70:
+                    qid = rt.submit_query(qs[rng.integers(len(qs))])
+                    with qids_lock:
+                        qids.append(qid)
+                elif r < 0.80:
+                    eid = 500_000 + tid * 1000 + i
+                    rt.submit_insert(qs[None, rng.integers(len(qs))] + 0.01,
+                                     np.array([eid]))
+                    my_ids.append(eid)
+                elif r < 0.90 and my_ids:
+                    rt.submit_delete(np.array([my_ids.pop()]))
+                else:
+                    rt.maybe_maintain()
+                if i % 7 == 0:
+                    rt.stats()       # concurrent snapshot polling
+        except BaseException as e:   # noqa: BLE001 - surfaced below
+            errors.append((tid, e))
+
+    with ServingRuntime(idx, cfg) as rt:
+        with sanitize.sanitized(transfers=False, nans=False,
+                                compiles=False, locks=True), \
+                sanitize.LockOrderWatchdog() as wd:
+            threads = [threading.Thread(target=worker, args=(t,))
+                       for t in range(N_THREADS)]
+            for t in threads:
+                t.start()
+            for t in threads:
+                t.join()
+            rt.drain()
+            assert not errors, errors
+            assert wd.events.order_violations == 0
+            assert wd.events.guarded_violations == 0
+            assert wd.events.acquisitions > 0    # the locks were exercised
+        assert rt._ticker_error is None
+        for qid in qids:
+            res = rt.result(qid)
+            assert res is not None and res.ids.shape == (10,)
+        st = rt.stats()
+        assert st["queries_submitted"] == len(qids)
+        assert st["queries_completed"] >= len(qids)  # + cache hits
+        assert st["queue_depth"] == 0
+
+
+# ---------------------------------------------------------------------------
+# replay determinism: concurrent admission order, single-threaded replay
+# ---------------------------------------------------------------------------
+
+def test_concurrent_replay_determinism(ds):
+    """The engine lock totally orders admissions; replaying the recorded
+    order single-threaded on an identical index reproduces the exact
+    per-query results.  This is the coalescing-determinism contract
+    (test_serving) extended across threads."""
+    qs = datasets.queries_near(ds, 48, seed=9).astype(np.float32)
+    cfg = ServingConfig(k=10, flush_size=3, scan_backend="host",
+                        cache_entries=0, maint_min_ops=10 ** 9,
+                        record_admissions=True)
+    qvec, qvec_lock = {}, threading.Lock()
+    errors = []
+
+    def worker(tid, rt):
+        rng = np.random.default_rng(200 + tid)
+        try:
+            for i in range(20):
+                r = rng.random()
+                if r < 0.85 or tid != 0:
+                    q = qs[rng.integers(len(qs))]
+                    qid = rt.submit_query(q)
+                    with qvec_lock:
+                        qvec[qid] = q
+                elif r < 0.93:
+                    rt.submit_insert(qs[None, i] + 0.02,
+                                     np.array([700_000 + i]))
+                else:
+                    rt.submit_delete(np.array([700_000 + i - 1]))
+        except BaseException as e:   # noqa: BLE001
+            errors.append((tid, e))
+
+    with ServingRuntime(build(ds), cfg) as rt:
+        threads = [threading.Thread(target=worker, args=(t, rt))
+                   for t in range(4)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        rt.drain()
+        assert not errors, errors
+        log = rt.admission_log()
+        concurrent = {qid: rt.result(qid) for qid in qvec}
+
+    assert any(e[0] == "q" for e in log)
+    # single-threaded replay of the recorded order on a fresh twin
+    replay_cfg = ServingConfig(k=10, flush_size=10 ** 9,
+                               scan_backend="host", cache_entries=0,
+                               maint_min_ops=10 ** 9)
+    with ServingRuntime(build(ds), replay_cfg) as rt2:
+        pairs = []                     # (original qid, replay qid)
+        for entry in log:
+            if entry[0] == "q":
+                for qid in entry[1]:
+                    pairs.append((qid, rt2.submit_query(qvec[qid])))
+                rt2.flush()
+            elif entry[0] == "insert":
+                rt2.submit_insert(entry[1], entry[2])
+            else:
+                rt2.submit_delete(entry[1])
+        rt2.drain()
+        for orig, rep in pairs:
+            got = rt2.result(rep)
+            ref = concurrent[orig]
+            np.testing.assert_array_equal(ref.ids, got.ids)
+            np.testing.assert_array_equal(ref.dists, got.dists)
+
+
+# ---------------------------------------------------------------------------
+# deadline clock (fake timer) + background ticker (real timer)
+# ---------------------------------------------------------------------------
+
+def test_fake_clock_deadline_flush(ds):
+    """A queued query flushes when the oldest entry crosses
+    flush_deadline_ms — no size trigger involved — and the
+    deadline-flushed batch is byte-identical to a size-triggered flush
+    of the same batch."""
+    idx = build(ds)
+    now = [0.0]
+    cfg = ServingConfig(k=10, flush_size=64, scan_backend="host",
+                        flush_deadline_ms=50.0, ticker=False,
+                        maint_min_ops=10 ** 9)
+    batch = datasets.queries_near(ds, 3, seed=13).astype(np.float32)
+    with ServingRuntime(idx, cfg, clock=lambda: now[0]) as rt:
+        qids = [rt.submit_query(q) for q in batch]
+        assert rt.stats()["queue_depth"] == 3      # far below flush_size
+        now[0] = 0.049
+        assert rt.tick() is False                  # 49ms < deadline
+        assert rt.result(qids[0]) is None
+        now[0] = 0.051
+        assert rt.tick() is True                   # deadline crossed
+        deadline_res = [rt.result(q) for q in qids]
+        assert all(r is not None for r in deadline_res)
+
+    # size-triggered twin: same index state, same admitted group
+    size_cfg = ServingConfig(k=10, flush_size=3, scan_backend="host",
+                             maint_min_ops=10 ** 9)
+    with ServingRuntime(build(ds), size_cfg) as rt2:
+        qids2 = [rt2.submit_query(q) for q in batch]  # 3rd submit flushes
+        rt2.drain()                                   # finish in-flight rounds
+        size_res = [rt2.result(q) for q in qids2]
+    for a, b in zip(deadline_res, size_res):
+        assert b is not None
+        np.testing.assert_array_equal(a.ids, b.ids)
+        np.testing.assert_array_equal(a.dists, b.dists)
+        assert a.nprobe == b.nprobe
+
+
+def test_background_ticker_flushes(ds):
+    """With the ticker on, a lone queued query is answered within the
+    deadline by the background thread — no explicit flush/drain."""
+    cfg = ServingConfig(k=10, flush_size=64, scan_backend="host",
+                        flush_deadline_ms=10.0, ticker=True,
+                        maint_min_ops=10 ** 9)
+    q = datasets.queries_near(ds, 1, seed=17).astype(np.float32)[0]
+    with ServingRuntime(build(ds), cfg) as rt:
+        ticker = rt._ticker_thread
+        assert ticker is not None and ticker.is_alive()
+        qid = rt.submit_query(q)
+        deadline = time.monotonic() + 5.0
+        while rt.result(qid) is None and time.monotonic() < deadline:
+            time.sleep(0.005)
+        res = rt.result(qid)
+        assert res is not None, "ticker never flushed the queued query"
+        assert res.latency_s > 0.0
+        assert rt._ticker_error is None
+    assert not ticker.is_alive()                   # close() joined it
+
+
+# ---------------------------------------------------------------------------
+# stats snapshot ownership
+# ---------------------------------------------------------------------------
+
+def test_stats_snapshot_is_owned_by_caller(ds):
+    cfg = ServingConfig(k=10, flush_size=4, scan_backend="host",
+                        cache_entries=8, maint_min_ops=10 ** 9)
+    with ServingRuntime(build(ds), cfg) as rt:
+        qs = datasets.queries_near(ds, 8, seed=21).astype(np.float32)
+        for q in qs:
+            rt.submit_query(q)
+        rt.drain()
+        s1 = rt.stats()
+        # deep-owned: clobbering the snapshot cannot corrupt the runtime
+        for k in list(s1):
+            s1[k] = None if not isinstance(s1[k], dict) else s1[k].clear()
+        s2 = rt.stats()
+        assert s2["queries_submitted"] == 8
+        assert s2["queries_completed"] >= 8
+        assert isinstance(s2["maintenance_reasons"], list)

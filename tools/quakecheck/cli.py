@@ -17,7 +17,9 @@ def main(argv: Optional[List[str]] = None) -> int:
     ap.add_argument("paths", nargs="+",
                     help="files or directories to lint")
     ap.add_argument("--select", default=None,
-                    help="comma-separated rule ids (e.g. QK101,QK104)")
+                    help="comma-separated rule ids or prefixes "
+                         "(e.g. QK101,QK104 or QK2 for the whole "
+                         "concurrency family)")
     ap.add_argument("--json", action="store_true", dest="as_json",
                     help="emit findings as JSON")
     ap.add_argument("--list-rules", action="store_true",

@@ -95,3 +95,92 @@ GUARDED_ATTRS = {a for attrs in GUARDED_STATE.values() for a in attrs}
 MUTATING_METHODS = {"append", "extend", "clear", "pop", "popitem", "remove",
                     "insert", "update", "setdefault", "discard", "add",
                     "move_to_end", "sort", "fill"}
+
+# --------------------------------------------------------------------------
+# QK2xx — lock discipline (docs/serving.md threading model)
+# --------------------------------------------------------------------------
+# owner class -> {guarded field -> lock attribute that must be held}.
+# Layered on GUARDED_STATE: QK105 checks *who* writes, QK201 checks *under
+# what lock*.  Lock attributes are unqualified (``_lock``); the analysis
+# qualifies them against the owning class (``ResultCache._lock``).
+GUARDED_BY = {
+    "ServingRuntime": {
+        "results": "_lock", "_queue": "_lock", "_cache_version": "_lock",
+        "_maintaining": "_lock", "_next_qid": "_lock",
+        "_admission_log": "_lock", "_admit_gen": "_lock",
+        "queries_submitted": "_lock", "cache_hits": "_lock",
+        "write_ops": "_lock",
+    },
+    "RoundScheduler": {
+        "active": "_lock", "done": "_lock", "_epoch_key": "_lock",
+        "_snap": "_lock", "round_streams": "_lock",
+        "plan_footprints": "_lock", "partitions_streamed": "_lock",
+        "vectors_streamed": "_lock", "comparisons": "_lock",
+        "rounds_run": "_lock",
+    },
+    "ResultCache": {
+        "_store": "_lock", "_by_key": "_lock", "_by_part": "_lock",
+        "_next_eid": "_lock", "_proj": "_lock", "_gen": "_lock",
+        "hits": "_lock", "misses": "_lock", "invalidated": "_lock",
+        "stale_puts": "_lock",
+    },
+    "MaintenanceScheduler": {
+        "ops_since": "_lock", "history": "_lock", "_last_version": "_lock",
+        "_last_cost": "_lock", "_last_freqs": "_lock",
+    },
+}
+
+# Declared global lock partial order (qualified names, outermost first).
+# Acquiring a lock while holding one that appears *later* in this list is
+# a QK202 lock-order violation — the runtime twin is
+# ``repro.sanitize.LOCK_ORDER`` (a test asserts the two lists agree).
+LOCK_ORDER = [
+    "ServingRuntime._engine_lock",
+    "ServingRuntime._lock",
+    "RoundScheduler._lock",
+    "ResultCache._lock",
+    "MaintenanceScheduler._lock",
+]
+
+# Locks on the admission fast path: holding one of these across a
+# blocking call (QK203) stalls every concurrent submit_* caller.  The
+# engine lock is deliberately absent — serializing blocking scan /
+# maintenance work is its whole job.
+ADMISSION_LOCKS = {"ServingRuntime._lock"}
+
+# Call names (leaf) that block: device syncs, host pulls, scans, and
+# maintenance entry points.  QK203 flags any of these inside a region
+# holding an admission lock.
+BLOCKING_CALLS = {
+    "block_until_ready", "device_get", "drain", "flush",
+    "maybe_maintain", "run_if_due", "kmeans", "kmeans_assign",
+    "scan_probe_round", "host_scan_round", "plan_rounds", "plan_batch",
+    "sleep", "join",
+}
+
+# Attribute -> owner class, for resolving cross-object lock references
+# (``self.cache._lock`` inside ServingRuntime -> ``ResultCache._lock``).
+INSTANCE_ATTRS = {
+    "scheduler": "RoundScheduler",
+    "cache": "ResultCache",
+    "maintenance": "MaintenanceScheduler",
+}
+
+# Guarded fields whose values are immutable scalars: reading them without
+# the lock can tear a *snapshot* but can never leak a mutable alias, so
+# QK204 (escaping reference) skips them.
+SCALAR_GUARDED = {
+    "_cache_version", "_maintaining", "_next_qid", "_next_eid",
+    "_epoch_key", "hits", "misses", "invalidated", "stale_puts",
+    "queries_submitted", "cache_hits", "write_ops", "ops_since",
+    "partitions_streamed", "vectors_streamed", "comparisons",
+    "rounds_run", "_gen", "_last_version", "_last_cost",
+}
+
+# Copy-producing wrappers: returning ``list(self._queue)`` (or
+# ``.copy()`` / ``deepcopy`` / ``sorted`` / ``dict`` ...) hands the
+# caller a private snapshot, not an alias, so QK204 allows it.
+COPYING_CALLS = {
+    "list", "dict", "tuple", "set", "frozenset", "sorted", "copy",
+    "deepcopy", "asarray", "array",
+}

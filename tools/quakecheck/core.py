@@ -28,12 +28,16 @@ from . import config
 from .pragmas import FilePragmas, parse_pragmas
 
 RULES = {
-    "QK100": "malformed pragma (allow-sync requires a reason)",
+    "QK100": "malformed pragma (allow-sync/holds require an argument)",
     "QK101": "host sync in device path",
     "QK102": "jit cache fragmentation",
     "QK103": "Pallas kernel contract",
     "QK104": "donation after use",
     "QK105": "serving shared state mutated outside write barrier",
+    "QK201": "guarded field accessed without its declared lock held",
+    "QK202": "lock acquired against the declared lock order",
+    "QK203": "blocking call while holding an admission lock",
+    "QK204": "guarded mutable state escapes its lock scope",
 }
 
 
@@ -832,6 +836,320 @@ def check_qk105(tree: ast.AST, path: str, pragmas: FilePragmas,
 
 
 # ---------------------------------------------------------------------------
+# QK2xx — lock discipline & happens-before (concurrency rule family)
+# ---------------------------------------------------------------------------
+#
+# Intra-procedural lock-set analysis over the methods of every class that
+# owns ``config.GUARDED_BY`` state (the concurrency layer on top of
+# QK105's *who-writes* check):
+#
+#   QK201  access to a guarded ``self.<field>`` while the field's
+#          declared lock is not in the lock-set
+#   QK202  acquiring a lock while holding one that is *later* in
+#          ``config.LOCK_ORDER``
+#   QK203  a ``config.BLOCKING_CALLS`` call while an admission lock
+#          (``config.ADMISSION_LOCKS``) is held
+#   QK204  a guarded mutable field returned raw or stored into another
+#          object (the alias outlives the lock scope)
+#
+# The lock-set is seeded from ``@guarded_by("<lock>")`` decorators and
+# def-line ``# quakecheck: holds(<lock>)`` pragmas, grows through
+# ``with self._lock:`` blocks and linear ``acquire()``/``release()``
+# pairs, and propagates into ``_``-private helpers as the intersection
+# of the lock-sets at their intra-class call sites (fixpoint).
+
+_ORDER_INDEX = {name: i for i, name in enumerate(config.LOCK_ORDER)}
+
+
+def _qualify_lock(name: str, cls: str) -> str:
+    return name if "." in name else f"{cls}.{name}"
+
+
+def _resolve_lock(node: ast.AST, cls: str) -> Optional[str]:
+    """Qualified lock name for an acquisition expression, or None.
+
+    ``self._lock`` -> ``<cls>._lock``; ``self.cache._lock`` resolves the
+    intermediate attribute through ``config.INSTANCE_ATTRS``.
+    """
+    if not isinstance(node, ast.Attribute):
+        return None
+    attr = node.attr
+    base = node.value
+    if isinstance(base, ast.Name) and base.id == "self":
+        return f"{cls}.{attr}"
+    if (isinstance(base, ast.Attribute)
+            and isinstance(base.value, ast.Name)
+            and base.value.id == "self"
+            and base.attr in config.INSTANCE_ATTRS):
+        return f"{config.INSTANCE_ATTRS[base.attr]}.{attr}"
+    return None
+
+
+def _is_lockish(name: Optional[str]) -> bool:
+    return name is not None and ("lock" in name.rsplit(".", 1)[-1].lower())
+
+
+def _guarded_by_decorator_locks(fn, cls: str) -> Set[str]:
+    out: Set[str] = set()
+    for dec in fn.decorator_list:
+        if (isinstance(dec, ast.Call)
+                and leaf_name(dec.func) == "guarded_by"
+                and dec.args
+                and isinstance(dec.args[0], ast.Constant)
+                and isinstance(dec.args[0].value, str)):
+            out.add(_qualify_lock(dec.args[0].value, cls))
+    return out
+
+
+def _copy_wrapped(node: ast.AST) -> bool:
+    """True when ``node`` is a copy-producing call (``list(...)``,
+    ``x.copy()``, ``np.asarray(...)`` ...)."""
+    if isinstance(node, ast.Call):
+        name = leaf_name(node.func)
+        return name in config.COPYING_CALLS
+    return False
+
+
+class _ClassLockAnalysis:
+    """QK201-QK204 over one class body."""
+
+    def __init__(self, cls: ast.ClassDef, path: str, pragmas: FilePragmas,
+                 findings: List[Finding]):
+        self.cls = cls
+        self.name = cls.name
+        self.path = path
+        self.pragmas = pragmas
+        self.findings = findings
+        self.guarded: Dict[str, str] = {
+            f: _qualify_lock(l, self.name)
+            for f, l in config.GUARDED_BY.get(self.name, {}).items()}
+        self.methods: Dict[str, ast.FunctionDef] = {
+            n.name: n for n in cls.body
+            if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))}
+        # helper name -> lock-sets observed at intra-class call sites
+        self.callsites: Dict[str, List[frozenset]] = {}
+        self.seeds: Dict[str, Set[str]] = {}
+        self.emit = False
+
+    # -- seeds ---------------------------------------------------------
+
+    def _explicit_seed(self, fn) -> Set[str]:
+        seed = _guarded_by_decorator_locks(fn, self.name)
+        seed |= {_qualify_lock(l, self.name)
+                 for l in self.pragmas.holds(fn.lineno)}
+        return seed
+
+    def run(self) -> None:
+        for name, fn in self.methods.items():
+            self.seeds[name] = self._explicit_seed(fn)
+        # fixpoint: helper seeds grow from call-site intersections; each
+        # round re-records call sites under the latest seeds
+        for _ in range(10):
+            self.callsites = {}
+            for fn in self.methods.values():
+                self._walk_fn(fn)
+            changed = False
+            for name, sites in self.callsites.items():
+                if name not in self.methods or not name.startswith("_") \
+                        or name.startswith("__"):
+                    continue
+                inter = frozenset.intersection(*sites) if sites \
+                    else frozenset()
+                new = self._explicit_seed(self.methods[name]) | set(inter)
+                if new != self.seeds.get(name):
+                    self.seeds[name] = new
+                    changed = True
+            if not changed:
+                break
+        self.emit = True
+        for fn in self.methods.values():
+            self._walk_fn(fn)
+
+    # -- traversal -----------------------------------------------------
+
+    def _walk_fn(self, fn) -> None:
+        self._fn = fn
+        self._walk_block(fn.body, set(self.seeds.get(fn.name, ())))
+
+    def _held_at(self, line: int, held: Set[str]) -> Set[str]:
+        extra = {_qualify_lock(l, self.name)
+                 for l in self.pragmas.holds(line)}
+        return held | extra
+
+    def _flag(self, rule: str, node: ast.AST, msg: str) -> None:
+        if not self.emit:
+            return
+        if self.pragmas.disabled(node.lineno, rule):
+            return
+        self.findings.append(Finding(rule, self.path, node.lineno,
+                                     node.col_offset, msg))
+
+    def _acquire(self, lock: str, node: ast.AST, held: Set[str]) -> None:
+        if lock in held:          # RLock re-entry
+            return
+        ni = _ORDER_INDEX.get(lock)
+        if ni is not None:
+            for h in self._held_at(node.lineno, held):
+                hi = _ORDER_INDEX.get(h)
+                if hi is not None and hi > ni:
+                    self._flag(
+                        "QK202", node,
+                        f"acquiring '{lock}' while holding '{h}' "
+                        f"inverts the declared lock order "
+                        f"({' -> '.join(config.LOCK_ORDER)}); take "
+                        f"'{lock}' first or release '{h}'")
+
+    def _walk_block(self, stmts: Sequence[ast.stmt],
+                    held: Set[str]) -> None:
+        held = set(held)
+        for stmt in stmts:
+            # linear acquire()/release() tracking at block level
+            if isinstance(stmt, ast.Expr) and isinstance(stmt.value,
+                                                         ast.Call):
+                call = stmt.value
+                if isinstance(call.func, ast.Attribute):
+                    lk = _resolve_lock(call.func.value, self.name)
+                    if call.func.attr == "acquire" and _is_lockish(lk):
+                        self._acquire(lk, stmt, held)
+                        self._scan_exprs(stmt, held)
+                        held.add(lk)
+                        continue
+                    if call.func.attr == "release" and _is_lockish(lk):
+                        held.discard(lk)
+                        continue
+            self._stmt(stmt, held)
+
+    def _stmt(self, stmt: ast.stmt, held: Set[str]) -> None:
+        if isinstance(stmt, (ast.With, ast.AsyncWith)):
+            inner = set(held)
+            for item in stmt.items:
+                lk = _resolve_lock(item.context_expr, self.name)
+                if _is_lockish(lk):
+                    self._acquire(lk, item.context_expr, inner)
+                    inner.add(lk)
+                else:
+                    self._scan_expr(item.context_expr, held)
+            self._walk_block(stmt.body, inner)
+        elif isinstance(stmt, ast.If):
+            self._scan_expr(stmt.test, held)
+            self._walk_block(stmt.body, held)
+            self._walk_block(stmt.orelse, held)
+        elif isinstance(stmt, ast.While):
+            self._scan_expr(stmt.test, held)
+            self._walk_block(stmt.body, held)
+            self._walk_block(stmt.orelse, held)
+        elif isinstance(stmt, (ast.For, ast.AsyncFor)):
+            self._scan_expr(stmt.iter, held)
+            self._walk_block(stmt.body, held)
+            self._walk_block(stmt.orelse, held)
+        elif isinstance(stmt, ast.Try):
+            self._walk_block(stmt.body, held)
+            for h in stmt.handlers:
+                self._walk_block(h.body, held)
+            self._walk_block(stmt.orelse, held)
+            self._walk_block(stmt.finalbody, held)
+        elif isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            # nested def (closure): deferred execution — it runs under
+            # whatever locks its *caller* holds, so analyze with its own
+            # explicit seeds only (annotate with holds()/guarded_by)
+            self._walk_block(stmt.body, self._explicit_seed(stmt))
+        elif isinstance(stmt, ast.ClassDef):
+            pass
+        else:
+            # simple statement: scan every expression node it contains
+            for node in ast.walk(stmt):
+                self._scan_node(node, held)
+            self._qk204(stmt, held)
+
+    def _scan_expr(self, expr: ast.AST, held: Set[str]) -> None:
+        for node in ast.walk(expr):
+            self._scan_node(node, held)
+
+    def _scan_node(self, n: ast.AST, held: Set[str]) -> None:
+        # QK201 — guarded self.<field> access outside the lock
+        if (isinstance(n, ast.Attribute)
+                and isinstance(n.value, ast.Name)
+                and n.value.id == "self"
+                and n.attr in self.guarded
+                and self._fn.name not in ("__init__", "__new__")):
+            lock = self.guarded[n.attr]
+            eff = self._held_at(n.lineno, held)
+            if lock not in eff:
+                self._flag(
+                    "QK201", n,
+                    f"'self.{n.attr}' is guarded by '{lock}' "
+                    f"(config.GUARDED_BY) but the lock-set here is "
+                    f"{sorted(eff) if eff else '{}'} — wrap the access "
+                    f"in 'with self.{lock.rsplit('.', 1)[-1]}:' or "
+                    f"document the carrier with "
+                    f"'# quakecheck: holds({lock})'")
+        # QK203 — blocking call under an admission lock; helper call
+        # sites recorded for seed propagation
+        if isinstance(n, ast.Call):
+            cname = leaf_name(n.func)
+            if cname in config.BLOCKING_CALLS:
+                eff = self._held_at(n.lineno, held)
+                adm = eff & config.ADMISSION_LOCKS
+                if adm:
+                    self._flag(
+                        "QK203", n,
+                        f"blocking call '{cname}()' while holding "
+                        f"admission lock '{sorted(adm)[0]}' — every "
+                        f"concurrent submit_* caller stalls behind it; "
+                        f"move the blocking work outside the lock "
+                        f"(engine-lock scope)")
+            if (isinstance(n.func, ast.Attribute)
+                    and isinstance(n.func.value, ast.Name)
+                    and n.func.value.id == "self"
+                    and n.func.attr in self.methods):
+                self.callsites.setdefault(n.func.attr, []).append(
+                    frozenset(self._held_at(n.lineno, held)))
+
+    def _guarded_mutable_attr(self, node: ast.AST) -> Optional[str]:
+        if (isinstance(node, ast.Attribute)
+                and isinstance(node.value, ast.Name)
+                and node.value.id == "self"
+                and node.attr in self.guarded
+                and node.attr not in config.SCALAR_GUARDED):
+            return node.attr
+        return None
+
+    def _qk204(self, stmt: ast.stmt, held: Set[str]) -> None:
+        if self._fn.name in ("__init__", "__new__"):
+            return
+        if isinstance(stmt, ast.Return) and stmt.value is not None:
+            attr = self._guarded_mutable_attr(stmt.value)
+            if attr is not None and not _copy_wrapped(stmt.value):
+                self._flag(
+                    "QK204", stmt,
+                    f"returning guarded mutable 'self.{attr}' hands the "
+                    f"caller an alias that outlives "
+                    f"'{self.guarded[attr]}' — return a copy "
+                    f"(list/dict/.copy()) or transfer ownership by "
+                    f"rebinding the field first")
+        elif isinstance(stmt, ast.Assign):
+            attr = self._guarded_mutable_attr(stmt.value)
+            if attr is None:
+                return
+            for tgt in stmt.targets:
+                if (isinstance(tgt, ast.Attribute)
+                        and not (isinstance(tgt.value, ast.Name)
+                                 and tgt.value.id == "self")):
+                    self._flag(
+                        "QK204", stmt,
+                        f"storing guarded mutable 'self.{attr}' into "
+                        f"'{dotted(tgt) or 'another object'}' escapes "
+                        f"'{self.guarded[attr]}' — store a copy")
+
+
+def check_qk2xx(tree: ast.AST, path: str, pragmas: FilePragmas,
+                findings: List[Finding]) -> None:
+    for node in ast.walk(tree):
+        if isinstance(node, ast.ClassDef):
+            _ClassLockAnalysis(node, path, pragmas, findings).run()
+
+
+# ---------------------------------------------------------------------------
 # QK100 — malformed pragmas
 # ---------------------------------------------------------------------------
 
@@ -843,6 +1161,11 @@ def check_qk100(path: str, pragmas: FilePragmas,
                 "QK100", path, line, 0,
                 "allow-sync pragma without a reason — intentional syncs "
                 "must be documented: # quakecheck: allow-sync(<why>)"))
+        if p.bad_holds:
+            findings.append(Finding(
+                "QK100", path, line, 0,
+                "holds() pragma names no lock — declare the carrier: "
+                "# quakecheck: holds(<lock>)"))
 
 
 # ---------------------------------------------------------------------------
@@ -863,8 +1186,11 @@ def lint_source(source: str, path: str,
     check_qk103(tree, path, pragmas, findings)
     check_qk104(tree, path, pragmas, registry, findings)
     check_qk105(tree, path, pragmas, findings)
+    check_qk2xx(tree, path, pragmas, findings)
     if select:
-        findings = [f for f in findings if f.rule in select]
+        # prefix match: --select QK2 picks the whole QK2xx family
+        findings = [f for f in findings
+                    if any(f.rule.startswith(s) for s in select)]
     return sorted(findings, key=lambda f: (f.path, f.line, f.rule))
 
 

@@ -16,6 +16,15 @@ line a standalone pragma comment precedes):
   ``# quakecheck: device-path``
       On a ``def`` line: registers the function as device-resident for
       QK101 (the inline form of ``config.DEVICE_RESIDENT_FUNCS``).
+
+  ``# quakecheck: holds(<lock>[, <lock2>])``
+      Asserts the named lock(s) are held on this line (or, on a ``def``
+      line, throughout the function) — the inline escape hatch the QK2xx
+      lock-set analysis consults when the acquisition happens outside
+      the analyzed function (e.g. a callback invoked under the caller's
+      lock).  Lock names are bare attributes (``_lock``) qualified
+      against the enclosing class, or explicit ``Class._lock``
+      qualnames.  An empty ``holds()`` is malformed (QK100).
 """
 from __future__ import annotations
 
@@ -29,6 +38,7 @@ _ALLOW_SYNC = re.compile(r"#\s*quakecheck:\s*allow-sync\s*(?:\((?P<reason>[^)]*)
 _DISABLE = re.compile(r"#\s*quakecheck:\s*disable\s*=\s*(?P<rules>[A-Z0-9, ]+)"
                       r"\s*(?:\((?P<reason>[^)]*)\))?")
 _DEVICE_PATH = re.compile(r"#\s*quakecheck:\s*device-path\b")
+_HOLDS = re.compile(r"#\s*quakecheck:\s*holds\s*\((?P<locks>[^)]*)\)")
 
 
 @dataclass
@@ -37,6 +47,8 @@ class LinePragmas:
     allow_sync_reason: str = ""
     disabled: Set[str] = field(default_factory=set)
     device_path: bool = False
+    holds: Set[str] = field(default_factory=set)
+    bad_holds: bool = False     # holds() with no lock named (QK100)
 
 
 @dataclass
@@ -59,6 +71,12 @@ class FilePragmas:
 
     def device_path(self, lineno: int) -> bool:
         return self._line(lineno).device_path
+
+    def holds(self, lineno: int) -> Set[str]:
+        return self._line(lineno).holds
+
+    def bad_holds(self, lineno: int) -> bool:
+        return self._line(lineno).bad_holds
 
     def pragma_lines(self) -> List[int]:
         return sorted(self.by_line)
@@ -101,6 +119,8 @@ def parse_pragmas(source: str) -> FilePragmas:
             cur.allow_sync_reason = pragma.allow_sync_reason
         cur.disabled |= pragma.disabled
         cur.device_path = cur.device_path or pragma.device_path
+        cur.holds |= pragma.holds
+        cur.bad_holds = cur.bad_holds or pragma.bad_holds
     return out
 
 
@@ -121,5 +141,14 @@ def _parse_comment(text: str) -> LinePragmas | None:
         hit = True
     if _DEVICE_PATH.search(text):
         out.device_path = True
+        hit = True
+    m = _HOLDS.search(text)
+    if m:
+        locks = {l.strip() for l in m.group("locks").split(",")
+                 if l.strip()}
+        if locks:
+            out.holds = locks
+        else:
+            out.bad_holds = True
         hit = True
     return out if hit else None

@@ -209,6 +209,257 @@ def run_open_loop(n=20_000, dim=32, k=10, target=0.9, seed=0,
     return out
 
 
+def run_overload(n=20_000, dim=32, k=10, target=0.9, seed=0,
+                 threads=8, overload_factor=4.0, n_queries=2000,
+                 flush_size=32, deadline_ms=2.0, budget_ms=25.0,
+                 queue_cap=128, queue_policy="shed-newest",
+                 max_p99_ms=None, out_path=OUT_PATH, verbose=False):
+    """Overload cell: offer ~``overload_factor``x the measured
+    sustainable rate against a bounded queue with load shedding,
+    per-query latency budgets, and the degradation governor on
+    (docs/serving.md, failure semantics).
+
+    The admission controller is the gate, not the index: latency must
+    stay *bounded* (p99 over answered queries, ``--max-p99-ms``) while
+    the overflow is absorbed as SHED completions and budget-expired
+    PARTIALs — and every submitted query must still reach exactly one
+    terminal status (the zero-non-terminal acceptance check).
+    """
+    ds = datasets.clustered(n, dim, n_clusters=max(n // 500, 16), seed=seed)
+    idx = QuakeIndex.build(ds.vectors,
+                           config=QuakeConfig(metric=ds.metric,
+                                              recall_target=target))
+    pool = datasets.queries_near(ds, 512, seed=seed + 1).astype(np.float32)
+
+    # -- calibrate the sustainable closed-loop rate --------------------
+    cal_cfg = ServingConfig(k=k, recall_target=target,
+                            flush_size=flush_size, ticker=False,
+                            cache_entries=0, maint_min_ops=10 ** 9)
+    with ServingRuntime(idx, cal_cfg) as rt:
+        rt.submit_batch(pool[:flush_size])     # warm the scan shapes
+        rt.drain()
+        t0 = time.perf_counter()
+        for i in range(0, 512, flush_size):
+            rt.submit_batch(pool[i:i + flush_size])
+        rt.drain()
+        sustainable = 512 / max(time.perf_counter() - t0, 1e-9)
+    rate = overload_factor * sustainable
+
+    scfg = ServingConfig(k=k, recall_target=target, flush_size=flush_size,
+                         flush_deadline_ms=deadline_ms, ticker=True,
+                         cache_entries=0, maint_min_ops=10 ** 9,
+                         queue_cap=queue_cap, queue_policy=queue_policy,
+                         deadline_s=budget_ms / 1000.0,
+                         govern=True)
+    qids, qids_lock = [], threading.Lock()
+    errors = []
+
+    def submitter(tid, count, rt):
+        rng = np.random.default_rng(seed + 10 + tid)
+        gaps = rng.exponential(scale=threads / rate, size=count)
+        mine = []
+        try:
+            for i in range(count):
+                time.sleep(gaps[i])
+                mine.append(rt.submit_query(pool[rng.integers(len(pool))]))
+        except BaseException as e:         # noqa: BLE001 - surfaced below
+            errors.append((tid, e))
+        with qids_lock:
+            qids.extend(mine)
+
+    per_thread = [n_queries // threads + (1 if t < n_queries % threads else 0)
+                  for t in range(threads)]
+    print(f"== serving overload: N={n} threads={threads} "
+          f"sustainable~{sustainable:.0f}qps offered={rate:.0f}qps "
+          f"({overload_factor}x) cap={queue_cap}/{queue_policy} "
+          f"budget={budget_ms}ms ==")
+    with ServingRuntime(idx, scfg) as rt:
+        rt.submit_batch(pool[:flush_size])
+        rt.drain()
+        t0 = time.perf_counter()
+        ts = [threading.Thread(target=submitter, args=(t, per_thread[t], rt))
+              for t in range(threads)]
+        for t in ts:
+            t.start()
+        for t in ts:
+            t.join()
+        rt.drain()
+        wall = time.perf_counter() - t0
+        assert not errors, errors
+        st = rt.stats()
+        results = [rt.result(q) for q in qids]
+
+    # -- acceptance: zero non-terminal queries -------------------------
+    assert st["queue_depth"] == 0 and st["in_flight"] == 0
+    assert sum(st["status_counts"].values()) == st["queries_submitted"], \
+        f"non-terminal queries: {st['status_counts']} " \
+        f"vs {st['queries_submitted']} submitted"
+    assert all(r is not None for r in results), "lost queries"
+
+    n_sub = len(results)
+    counts = st["status_counts"]
+    answered = [r for r in results if r.status != "SHED"]
+    lat = np.asarray([r.latency_s for r in answered]) if answered else \
+        np.asarray([0.0])
+    p50 = float(np.percentile(lat, 50)) * 1e3
+    p99 = float(np.percentile(lat, 99)) * 1e3
+    out = {"n": n, "dim": dim, "threads": threads,
+           "sustainable_qps": round(sustainable, 1),
+           "offered_rate_qps": round(rate, 1),
+           "overload_factor": overload_factor,
+           "n_queries": n_sub, "budget_ms": budget_ms,
+           "queue_cap": queue_cap, "queue_policy": queue_policy,
+           "achieved_qps": round(n_sub / max(wall, 1e-9), 1),
+           "status_counts": dict(counts),
+           "shed_fraction": round(counts.get("SHED", 0) / n_sub, 4),
+           "partial_fraction": round(counts.get("PARTIAL", 0) / n_sub, 4),
+           "p50_latency_ms": round(p50, 2),
+           "p99_latency_ms": round(p99, 2),
+           "governor": st["governor"],
+           "effective_target": st["effective_target"],
+           "probe_frac": st["probe_frac"]}
+    print(f"overload: {out['achieved_qps']} qps absorbed, "
+          f"shed={out['shed_fraction']:.1%} "
+          f"partial={out['partial_fraction']:.1%} "
+          f"p99={out['p99_latency_ms']}ms "
+          f"governor degrades={st['governor']['degrades']} "
+          f"(target {st['effective_target']})")
+    merge_results(out_path, "serving_overload", out)
+    assert np.isfinite(p99), "overload p99 not finite"
+    if max_p99_ms is not None:
+        assert p99 <= max_p99_ms, \
+            f"overload p99 {p99:.1f}ms > allowed {max_p99_ms}ms " \
+            f"(shedding failed to bound latency)"
+    return out
+
+
+def run_chaos(n=20_000, dim=32, k=10, target=0.9, seed=0,
+              threads=8, ops_per_thread=40, scan_rate=0.05,
+              out_path=OUT_PATH, verbose=False):
+    """Chaos cell: the concurrency hammer under fault injection
+    (src/repro/faults.py) — transient scan faults absorbed by retry,
+    every maintenance pass crashing mid-recluster and rolling back, the
+    cache failing closed, the ticker dying and restarting.  Gates the
+    two recovery acceptance checks: every query terminal, and the
+    post-chaos index byte-identical to a fault-free replay of the
+    surviving writes (``index_state_fingerprint``)."""
+    from repro.faults import FaultInjector, index_state_fingerprint
+
+    ds = datasets.clustered(n, dim, n_clusters=max(n // 500, 16), seed=seed)
+
+    def build():
+        return QuakeIndex.build(
+            ds.vectors, config=QuakeConfig(metric=ds.metric,
+                                           recall_target=target))
+
+    idx = build()
+    fi = FaultInjector(seed=seed + 7, rates={
+        "scan": scan_rate, "maintenance": 1.0, "cache": 1.0,
+        "ticker": 0.2})
+    scfg = ServingConfig(k=k, recall_target=target, flush_size=8,
+                         flush_deadline_ms=5.0, ticker=True,
+                         cache_entries=256, maint_min_ops=64,
+                         queue_cap=128, queue_policy="shed-newest",
+                         scan_retries=6, scan_backoff_s=0.0005,
+                         scan_backoff_max_s=0.002,
+                         record_admissions=True)
+    pool = datasets.queries_near(ds, 256, seed=seed + 1).astype(np.float32)
+    qids, qids_lock = [], threading.Lock()
+    errors = []
+
+    def worker(tid, rt):
+        rng = np.random.default_rng(seed + 100 + tid)
+        mine, my_ids = [], []
+        try:
+            for i in range(ops_per_thread):
+                r = rng.random()
+                if r < 0.60:
+                    mine.append(rt.submit_query(
+                        pool[rng.integers(len(pool))]))
+                elif r < 0.70:
+                    mine.append(rt.submit_query(
+                        pool[rng.integers(len(pool))], deadline_s=0.002))
+                elif r < 0.80:
+                    eid = 900_000 + tid * 1000 + i
+                    rt.submit_insert(
+                        pool[None, rng.integers(len(pool))] + 0.01,
+                        np.array([eid]))
+                    my_ids.append(eid)
+                elif r < 0.90 and my_ids:
+                    rt.submit_delete(np.array([my_ids.pop()]))
+                else:
+                    rt.maybe_maintain()
+        except BaseException as e:         # noqa: BLE001 - surfaced below
+            errors.append((tid, e))
+        with qids_lock:
+            qids.extend(mine)
+
+    print(f"== serving chaos: N={n} threads={threads} "
+          f"ops/thread={ops_per_thread} scan_rate={scan_rate} "
+          f"maintenance/cache=1.0 ticker=0.2 ==")
+    with ServingRuntime(idx, scfg, faults=fi) as rt:
+        t0 = time.perf_counter()
+        ts = [threading.Thread(target=worker, args=(t, rt))
+              for t in range(threads)]
+        for t in ts:
+            t.start()
+        for t in ts:
+            t.join(timeout=300.0)
+        stuck = [t.name for t in ts if t.is_alive()]
+        assert not stuck, f"deadlocked workers: {stuck}"
+        rt.drain()
+        wall = time.perf_counter() - t0
+        assert not errors, errors
+        st = rt.stats()
+        log = rt.admission_log()
+        results = [rt.result(q) for q in qids]
+        fp = index_state_fingerprint(idx)
+        idx.check_invariants()
+
+    # -- acceptance: every query terminal ------------------------------
+    assert sum(st["status_counts"].values()) == st["queries_submitted"]
+    assert all(r is not None and r.status in
+               ("OK", "PARTIAL", "SHED", "FAILED") for r in results)
+    assert st["queue_depth"] == 0 and st["in_flight"] == 0
+
+    # -- acceptance: post-fault index == fault-free replay -------------
+    twin = build()
+    replay_cfg = ServingConfig(k=k, flush_size=10 ** 9,
+                               scan_backend=scfg.scan_backend,
+                               cache_entries=0, ticker=False,
+                               maint_min_ops=10 ** 9)
+    with ServingRuntime(twin, replay_cfg) as rt2:
+        for entry in log:
+            if entry[0] == "insert":
+                rt2.submit_insert(entry[1], entry[2])
+            elif entry[0] == "delete":
+                rt2.submit_delete(entry[1])
+        rt2.drain()
+    replay_ok = index_state_fingerprint(twin) == fp
+    assert replay_ok, \
+        "post-chaos index diverged from fault-free replay of writes"
+
+    trips = fi.counters()["trips"]
+    out = {"n": n, "threads": threads, "ops_per_thread": ops_per_thread,
+           "wall_s": round(wall, 3),
+           "queries_submitted": st["queries_submitted"],
+           "status_counts": dict(st["status_counts"]),
+           "fault_trips": {k_: int(v) for k_, v in trips.items()},
+           "scan_retries_used": st["scan_retries_used"],
+           "failed_batches": st["failed_batches"],
+           "maintenance_failures": st["maintenance_failures"],
+           "maintenance_runs": st["maintenance_runs"],
+           "cache_disabled": st["cache_disabled"],
+           "ticker_errors": st["ticker_errors"],
+           "ticker_restarts": st["ticker_restarts"],
+           "replay_fingerprint_match": replay_ok}
+    print(f"chaos: {st['queries_submitted']} queries all terminal "
+          f"{dict(st['status_counts'])}; trips={out['fault_trips']}; "
+          f"replay fingerprint match={replay_ok}")
+    merge_results(out_path, "serving_chaos", out)
+    return out
+
+
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--n", type=int, default=20_000)
@@ -223,26 +474,66 @@ if __name__ == "__main__":
     ap.add_argument("--cache-bits", type=int, default=16)
     ap.add_argument("--min-throughput-ratio", type=float, default=None)
     ap.add_argument("--max-recall-gap", type=float, default=None)
+    ap.add_argument("--cell", default=None,
+                    help="comma list of cells to run: replay, open-loop, "
+                         "overload, chaos (default: replay)")
     ap.add_argument("--open-loop", action="store_true",
-                    help="run the multi-threaded open-loop arrival cell "
-                         "instead of the workload replay")
+                    help="legacy alias for --cell open-loop")
     ap.add_argument("--threads", type=int, default=8)
     ap.add_argument("--rate", type=float, default=2000.0,
                     help="total offered arrival rate, queries/s")
     ap.add_argument("--open-loop-queries", type=int, default=2000)
     ap.add_argument("--deadline-ms", type=float, default=2.0)
+    ap.add_argument("--overload-factor", type=float, default=4.0,
+                    help="overload cell: offered rate as a multiple of "
+                         "the measured sustainable rate")
+    ap.add_argument("--budget-ms", type=float, default=25.0,
+                    help="overload cell: per-query latency budget")
+    ap.add_argument("--queue-cap", type=int, default=128)
+    ap.add_argument("--queue-policy", default="shed-newest",
+                    choices=["block", "shed-oldest", "shed-newest"])
+    ap.add_argument("--max-p99-ms", type=float, default=None,
+                    help="overload cell gate: answered-query p99 bound")
+    ap.add_argument("--ops-per-thread", type=int, default=40,
+                    help="chaos cell: hammer ops per worker thread")
+    ap.add_argument("--scan-fault-rate", type=float, default=0.05)
     ap.add_argument("--verbose", action="store_true")
     args = ap.parse_args()
-    if args.open_loop:
-        run_open_loop(n=args.n, dim=args.dim, k=args.k, target=args.target,
-                      threads=args.threads, rate=args.rate,
-                      n_queries=args.open_loop_queries,
-                      flush_size=args.flush_size,
-                      deadline_ms=args.deadline_ms, verbose=args.verbose)
-    else:
-        run(n=args.n, dim=args.dim, n_ops=args.ops,
-            queries_per_op=args.queries_per_op, k=args.k, target=args.target,
-            rounds=args.rounds, flush_size=args.flush_size,
-            cache_bits=args.cache_bits,
-            min_throughput_ratio=args.min_throughput_ratio,
-            max_recall_gap=args.max_recall_gap, verbose=args.verbose)
+    cells = (args.cell.split(",") if args.cell
+             else (["open-loop"] if args.open_loop else ["replay"]))
+    for cell in cells:
+        cell = cell.strip()
+        if cell == "open-loop":
+            run_open_loop(n=args.n, dim=args.dim, k=args.k,
+                          target=args.target, threads=args.threads,
+                          rate=args.rate, n_queries=args.open_loop_queries,
+                          flush_size=args.flush_size,
+                          deadline_ms=args.deadline_ms,
+                          verbose=args.verbose)
+        elif cell == "overload":
+            run_overload(n=args.n, dim=args.dim, k=args.k,
+                         target=args.target, threads=args.threads,
+                         overload_factor=args.overload_factor,
+                         n_queries=args.open_loop_queries,
+                         flush_size=args.flush_size,
+                         deadline_ms=args.deadline_ms,
+                         budget_ms=args.budget_ms,
+                         queue_cap=args.queue_cap,
+                         queue_policy=args.queue_policy,
+                         max_p99_ms=args.max_p99_ms,
+                         verbose=args.verbose)
+        elif cell == "chaos":
+            run_chaos(n=args.n, dim=args.dim, k=args.k, target=args.target,
+                      threads=args.threads,
+                      ops_per_thread=args.ops_per_thread,
+                      scan_rate=args.scan_fault_rate,
+                      verbose=args.verbose)
+        elif cell == "replay":
+            run(n=args.n, dim=args.dim, n_ops=args.ops,
+                queries_per_op=args.queries_per_op, k=args.k,
+                target=args.target, rounds=args.rounds,
+                flush_size=args.flush_size, cache_bits=args.cache_bits,
+                min_throughput_ratio=args.min_throughput_ratio,
+                max_recall_gap=args.max_recall_gap, verbose=args.verbose)
+        else:
+            ap.error(f"unknown cell {cell!r}")

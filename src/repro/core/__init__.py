@@ -18,6 +18,8 @@ from .maintenance import Maintainer, MaintenancePolicy  # noqa: F401
 from .cost_model import LatencyModel  # noqa: F401
 from .distributed import (EngineConfig, IndexSnapshot,  # noqa: F401
                           ShardedQuakeEngine, SnapshotPatch)
-from .serving import (MaintenanceScheduler, MaintenanceTriggers,  # noqa: F401
+from .serving import (STATUS_FAILED, STATUS_OK,  # noqa: F401
+                      STATUS_PARTIAL, STATUS_SHED, TERMINAL_STATUSES,
+                      MaintenanceScheduler, MaintenanceTriggers,
                       QueryResult, ResultCache, ServingConfig,
                       ServingRuntime)

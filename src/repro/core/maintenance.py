@@ -30,6 +30,8 @@ s = N_l).
 """
 from __future__ import annotations
 
+import copy
+from collections import deque
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple
 
@@ -40,7 +42,44 @@ from . import kmeans
 from .cost_model import LatencyModel
 from .index import Level, QuakeIndex
 
-__all__ = ["Maintainer", "MaintenanceReport", "MaintenancePolicy"]
+__all__ = ["Maintainer", "MaintenanceReport", "MaintenancePolicy",
+           "checkpoint_index", "restore_index"]
+
+
+# ---------------------------------------------------------------------------
+# Crash recovery: checkpoint / restore around a maintenance pass
+# ---------------------------------------------------------------------------
+
+def checkpoint_index(index: QuakeIndex) -> dict:
+    """Deep snapshot of everything a maintenance pass may mutate, so a
+    crash mid-recluster (split/merge committed, pass not finished) can
+    roll back to exactly the pre-pass state — including the journal, so
+    ``index.version`` is unchanged and snapshot/cache consumers keyed on
+    it stay coherent.  Levels hold numpy containers plus
+    ``PartitionStats``; ``copy.deepcopy`` covers both."""
+    j = index.journal
+    return {
+        "levels": copy.deepcopy(index.levels),
+        "id_map": dict(index.id_map),
+        "max_norm_sq": index._max_norm_sq,
+        "maintenance_log_len": len(index.maintenance_log),
+        "journal_version": j.version,
+        "journal_entries": list(j._entries),
+        "journal_floor": j._floor,
+    }
+
+
+def restore_index(index: QuakeIndex, ckpt: dict) -> None:
+    """Roll the index back to a :func:`checkpoint_index` state."""
+    index.levels = ckpt["levels"]
+    index.id_map = ckpt["id_map"]
+    index._max_norm_sq = ckpt["max_norm_sq"]
+    del index.maintenance_log[ckpt["maintenance_log_len"]:]
+    index._aug_extra = [None] * len(index.levels)
+    j = index.journal
+    j.version = ckpt["journal_version"]
+    j._entries = deque(ckpt["journal_entries"])
+    j._floor = ckpt["journal_floor"]
 
 
 @dataclass
@@ -74,6 +113,12 @@ class Maintainer:
         self.index = index
         self.lam = lam or LatencyModel(dim=index.dim)
         self.policy = policy or MaintenancePolicy()
+        # optional repro.faults.FaultInjector: when set, every committed
+        # split/merge is an arrival at the "maintenance" site, so a
+        # chaos run crashes the pass *after* the index has mutated —
+        # the serving runtime's checkpoint/rollback is what makes that
+        # survivable (docs/serving.md failure semantics)
+        self.faults = None
 
     # ------------------------------------------------------------------
     # Cost accounting
@@ -250,6 +295,8 @@ class Maintainer:
         # ----- Stage 3: commit -----
         new_j = level.num_partitions
         self._apply_split(l, j, c2, a2)
+        if self.faults is not None:
+            self.faults.check("maintenance")   # crash mid-recluster
         touched.update({j, new_j})
         if self.policy.use_refinement:
             self._refine_around(l, [j, new_j])
@@ -389,6 +436,8 @@ class Maintainer:
         # ----- Stage 3: commit -----
         self._apply_merge(l, j, recv, extra_hits=extra_freq,
                           recv_ids=recv_ids)
+        if self.faults is not None:
+            self.faults.check("maintenance")   # crash mid-recluster
         touched.update(recv_ids.tolist())
         touched.add(j)
         return True

@@ -59,6 +59,7 @@ snapshots (rows would need requantizing) fall back to a full rebuild.  See
 from __future__ import annotations
 
 import functools
+import time
 from dataclasses import dataclass, replace
 from typing import Optional, Tuple
 
@@ -832,7 +833,9 @@ def _round_windows(n_max: int, rounds: Optional[int] = None):
 
 def run_round_loop(plan: RoundPlan, k: int, target: float, table,
                    rho_fn, scan_round, *, rounds: Optional[int] = None,
-                   k_keep: Optional[int] = None):
+                   k_keep: Optional[int] = None,
+                   deadline_s: Optional[float] = None,
+                   clock=None):
     """Algorithm 2 round driver, shared by the host batched executor and
     the sharded engine's ``search_batch``.
 
@@ -861,6 +864,15 @@ def run_round_loop(plan: RoundPlan, k: int, target: float, table,
     the one-shot fixed-plan scan (a per-round cap would re-bound each
     round separately and let the batch total exceed the cap).
 
+    ``deadline_s`` is a wall-clock budget for the whole loop (measured
+    by ``clock``, default ``time.perf_counter``): when it expires the
+    loop stops *at the end of the current round* — at least one round
+    always runs — and the still-live queries' running top-k is returned
+    as-is (their partial results; ``trace["budget_expired"]`` /
+    ``trace["timed_out_rows"]`` report that it happened).  This is the
+    per-query latency-budget primitive the serving runtime's
+    ``PARTIAL`` status is built on (docs/serving.md).
+
     Returns (top dists, top ids — both device, ascending — nprobe (B,),
     recall_est (B,), rounds executed, per-round trace dict, totals).
     """
@@ -880,10 +892,20 @@ def run_round_loop(plan: RoundPlan, k: int, target: float, table,
     within = cols < counts[:, None]
     p_hi = int(plan.seq.max()) + 1
     trace = {"round_live": [], "round_partitions": [],
-             "round_vectors": [], "round_comparisons": []}
+             "round_vectors": [], "round_comparisons": [],
+             "budget_expired": False, "timed_out_rows": 0}
+    clock = clock or time.perf_counter
+    t0 = clock()
     n_rounds = 0
     for c0, c1 in wins:
         if not live.any():
+            break
+        if (deadline_s is not None and n_rounds > 0
+                and clock() - t0 >= deadline_s):
+            # budget spent: retire at the end of the last completed
+            # round with the running top-k (partial results)
+            trace["budget_expired"] = True
+            trace["timed_out_rows"] = int(live.sum())
             break
         avail = live[:, None] & within & ~scanned
         base = avail & (cols >= c0) & (cols < c1)

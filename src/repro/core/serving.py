@@ -46,31 +46,55 @@ the batched executor (``core/multiquery.py``) into that system:
 """
 from __future__ import annotations
 
+import logging
 import threading
 import time
 from collections import OrderedDict
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 from typing import Callable, Dict, Iterable, List, Optional, Sequence, Tuple
 
 import jax.numpy as jnp
 import numpy as np
 
+from ..faults import FaultInjector
 from ..kernels.ref import MASK_DIST
 from ..sanitize import TrackedLock, note_guarded
 from . import aps as aps_mod
 from . import multiquery as mq
 from .cost_model import LatencyModel
 from .index import QuakeIndex
-from .maintenance import Maintainer, MaintenanceReport
+from .maintenance import (Maintainer, MaintenanceReport, checkpoint_index,
+                          restore_index)
 
 __all__ = ["ServingConfig", "ServingRuntime", "QueryResult", "ResultCache",
            "MaintenanceScheduler", "MaintenanceTriggers", "RoundScheduler",
-           "calibrate_radius_resident"]
+           "calibrate_radius_resident", "STATUS_OK", "STATUS_PARTIAL",
+           "STATUS_SHED", "STATUS_FAILED", "TERMINAL_STATUSES"]
+
+logger = logging.getLogger("repro.serving")
+
+# Terminal query statuses (docs/serving.md failure semantics): every
+# admitted query reaches exactly one of these — no query ever vanishes.
+STATUS_OK = "OK"            # full planned search completed
+STATUS_PARTIAL = "PARTIAL"  # latency budget expired; running top-k returned
+STATUS_SHED = "SHED"        # dropped by admission control, never searched
+STATUS_FAILED = "FAILED"    # scan backend failed after retries
+TERMINAL_STATUSES = (STATUS_OK, STATUS_PARTIAL, STATUS_SHED, STATUS_FAILED)
 
 
 @dataclass
 class ServingConfig:
-    """Knobs for one :class:`ServingRuntime`."""
+    """Knobs for one :class:`ServingRuntime`.
+
+    Deadline precedence: ``flush_deadline_ms`` (milliseconds) **wins**
+    over ``flush_deadline`` (seconds) whenever both are set —
+    ``__post_init__`` folds the milliseconds knob into
+    ``flush_deadline``, so runtime code only ever reads the seconds
+    field.  Both are validated at construction: a zero or negative
+    deadline is a configuration error (it would make every admission
+    flush immediately, silently disabling micro-batching), not a
+    "flush never" sentinel — that sentinel is ``None``.
+    """
     k: int = 10
     recall_target: Optional[float] = None  # None -> index.config.recall_target
     rounds: Optional[int] = None       # per-query probe-round budget
@@ -141,16 +165,101 @@ class ServingConfig:
     maint_cost_drift: float = 0.15
     maint_access_shift: float = 0.6
     maint_max_ops: Optional[int] = 64
+    # --- per-query latency budgets (docs/serving.md failure semantics) ---
+    deadline_s: Optional[float] = None  # default per-query budget; a query
+                                       # whose budget expires retires at
+                                       # the end of the current round with
+                                       # its running top-k, status PARTIAL
+                                       # (submit_query's deadline_s arg
+                                       # overrides per query; None = no
+                                       # budget)
+    # --- admission control / load shedding ---
+    queue_cap: Optional[int] = None    # max queued (not yet admitted)
+                                       # queries; None = unbounded
+    queue_policy: str = "block"        # on a full queue: "block" (the
+                                       # submitter pays for a flush, then
+                                       # retries — backpressure),
+                                       # "shed-oldest" (evict the oldest
+                                       # queued query with an immediate
+                                       # SHED result, admit the newcomer),
+                                       # "shed-newest" (SHED the newcomer)
+    # --- degradation governor ---
+    govern: bool = False               # under sustained queue pressure,
+                                       # step the effective recall target
+                                       # down / tighten per-query probe
+                                       # budgets; restore on recovery
+    govern_high: float = 0.75          # flush-batch fill fraction of
+                                       # queue_cap that counts as pressure
+    govern_low: float = 0.25           # fill fraction that counts as calm
+    govern_patience: int = 2           # consecutive pressured (calm)
+                                       # flushes before a degrade
+                                       # (restore) step
+    govern_step: float = 0.05          # recall-target reduction per step
+    govern_max_steps: int = 4
+    govern_min_target: float = 0.5     # floor for the effective target
+    govern_probe_frac: float = 0.7     # per-step multiplicative cap on
+                                       # per-query probe budgets (the
+                                       # serving-layer union_cap analog:
+                                       # plans are truncated to this
+                                       # fraction of their probe count)
+    # --- scan-fault retry (capped exponential backoff) ---
+    scan_retries: int = 2              # retries per failed round scan
+                                       # before the in-flight batch fails
+    scan_backoff_s: float = 0.001      # first-retry backoff; doubles per
+                                       # attempt ...
+    scan_backoff_max_s: float = 0.05   # ... up to this cap
 
     def __post_init__(self) -> None:
+        if self.flush_deadline is not None and self.flush_deadline <= 0:
+            raise ValueError(
+                f"flush_deadline must be positive (got "
+                f"{self.flush_deadline}); use None for size-triggered/"
+                f"explicit flushes only")
         if self.flush_deadline_ms is not None:
+            if self.flush_deadline_ms <= 0:
+                raise ValueError(
+                    f"flush_deadline_ms must be positive (got "
+                    f"{self.flush_deadline_ms}); use None for "
+                    f"size-triggered/explicit flushes only")
             self.flush_deadline = self.flush_deadline_ms / 1000.0
+        if self.deadline_s is not None and self.deadline_s <= 0:
+            raise ValueError(f"deadline_s must be positive "
+                             f"(got {self.deadline_s})")
+        if self.queue_cap is not None and self.queue_cap < 1:
+            raise ValueError(f"queue_cap must be >= 1 "
+                             f"(got {self.queue_cap})")
+        if self.queue_policy not in ("block", "shed-oldest", "shed-newest"):
+            raise ValueError(f"queue_policy must be block/shed-oldest/"
+                             f"shed-newest, got {self.queue_policy!r}")
+        if not 0.0 < self.govern_low <= self.govern_high <= 1.0:
+            raise ValueError(
+                f"governor thresholds need 0 < govern_low <= govern_high "
+                f"<= 1 (got {self.govern_low}, {self.govern_high})")
+        if self.govern_patience < 1 or self.govern_max_steps < 1:
+            raise ValueError("govern_patience and govern_max_steps "
+                             "must be >= 1")
+        if not 0.0 < self.govern_probe_frac <= 1.0:
+            raise ValueError(f"govern_probe_frac must be in (0, 1] "
+                             f"(got {self.govern_probe_frac})")
+        if self.scan_retries < 0 or self.scan_backoff_s < 0 \
+                or self.scan_backoff_max_s < 0:
+            raise ValueError("scan retry/backoff knobs must be "
+                             "non-negative")
 
 
 @dataclass
 class QueryResult:
     """Per-query serving outcome (the single-row mirror of
-    ``multiquery.BatchResult``)."""
+    ``multiquery.BatchResult``).
+
+    ``status`` is terminal: ``OK`` (full planned search), ``PARTIAL``
+    (latency budget expired — ``ids``/``dists`` are the running top-k at
+    the end of the last round and ``recall_estimate`` is the round
+    loop's refined APS estimate over what was actually scanned, 0.0
+    when the top-k never filled), ``SHED`` (dropped by admission
+    control, never searched) or ``FAILED`` (scan backend failed after
+    retries; ``error`` carries the cause).  Every admitted query gets
+    exactly one — docs/serving.md, failure semantics."""
     ids: np.ndarray                 # (k,) external ids, -1 on misses
     dists: np.ndarray               # (k,) minimization convention
     nprobe: int = 0                 # partitions this query consumed
@@ -158,6 +267,8 @@ class QueryResult:
     rounds: int = 0                 # scan rounds the query took cells in
     from_cache: bool = False
     latency_s: float = 0.0          # submit -> result wall time
+    status: str = STATUS_OK         # terminal status (see above)
+    error: str = ""                 # failure cause (FAILED only)
 
 
 def calibrate_radius_resident(index: QuakeIndex, k: int,
@@ -593,6 +704,8 @@ class _Pending:
     t_submit: float
     batch: int                 # admission group (riding accounting)
     rounds: int = 0            # rounds this query took cells in
+    deadline: Optional[float] = None  # absolute clock value the latency
+                               # budget expires at (None = no budget)
 
 
 class RoundScheduler:
@@ -627,17 +740,26 @@ class RoundScheduler:
                  target: float, rounds: Optional[int] = None,
                  early_exit: bool = False, b_bucket: int = 16,
                  record_stats: bool = True, scan_backend: str = "auto",
-                 clock: Optional[Callable[[], float]] = None):
+                 clock: Optional[Callable[[], float]] = None,
+                 faults: Optional[FaultInjector] = None,
+                 scan_retries: int = 2, scan_backoff_s: float = 0.001,
+                 scan_backoff_max_s: float = 0.05):
         self._lock = TrackedLock("RoundScheduler._lock")
         self._clock = clock or time.perf_counter
         self.ex = executor
         self.index = executor.index
         self.k = k
         self.target = target
+        self.probe_frac: Optional[float] = None  # governor probe-budget cap
         self.round_budget = rounds
         self.early_exit = early_exit
         self.b_bucket = max(b_bucket, 1)
         self.record_stats = record_stats
+        self.faults = faults
+        self.scan_retries = max(int(scan_retries), 0)
+        self.scan_backoff_s = float(scan_backoff_s)
+        self.scan_backoff_max_s = float(scan_backoff_max_s)
+        self._last_scan_error: Optional[BaseException] = None
         if scan_backend == "auto":
             import jax
             scan_backend = ("device" if jax.default_backend() == "tpu"
@@ -661,14 +783,34 @@ class RoundScheduler:
         self.partitions_streamed = 0
         self.vectors_streamed = 0
         self.comparisons = 0
+        # failure / degradation telemetry
+        self.partials = 0           # budget-expired retirements
+        self.failures = 0           # FAILED retirements
+        self.failed_batches = 0     # rounds whose scan exhausted retries
+        self.scan_faults = 0        # scan attempts that raised
+        self.scan_retries_used = 0  # backoff retries taken
+
+    def set_degradation(self, target: float,
+                        probe_frac: Optional[float]) -> None:
+        """Governor hook: effective recall target and per-query probe-
+        budget fraction for *subsequent* admissions (``None`` = no cap).
+        In-flight queries keep the plans they were admitted with."""
+        with self._lock:
+            self.target = float(target)
+            self.probe_frac = probe_frac
 
     # -- admission -----------------------------------------------------
 
     def admit(self, queries: np.ndarray, qids: Sequence[int],
-              t_submit: Optional[Sequence[float]] = None) -> None:
+              t_submit: Optional[Sequence[float]] = None,
+              deadlines: Optional[Sequence[Optional[float]]] = None) -> None:
         """Plan one coalesced batch and add its queries to the in-flight
         population.  All admissions between drains must see the same
-        snapshot fingerprint (writes barrier through the runtime)."""
+        snapshot fingerprint (writes barrier through the runtime).
+        ``deadlines`` are absolute clock values (same clock as the
+        scheduler's) at which each query's latency budget expires —
+        expired queries retire ``PARTIAL`` at the end of the round that
+        noticed (None entries have no budget)."""
         with self._lock:
             note_guarded(self, "active")
             q = np.ascontiguousarray(queries, dtype=np.float32)
@@ -707,11 +849,19 @@ class RoundScheduler:
             assert m == self._m, (m, self._m)
             now = self._clock()
             ts = t_submit if t_submit is not None else [now] * b
+            dls = deadlines if deadlines is not None else [None] * b
             qn = np.sum(q.astype(np.float64) ** 2, axis=1)
             batch_id = self._batches
             self._batches += 1
+            eff_counts = []
             for i in range(b):
                 count = int(rplan.counts[i])
+                if self.probe_frac is not None:
+                    # governor degradation: truncate the plan to a
+                    # fraction of its probe budget (footprint bound —
+                    # the serving-layer union_cap analog)
+                    count = max(1, int(np.ceil(count * self.probe_frac)))
+                eff_counts.append(count)
                 self.active.append(_Pending(
                     qid=int(qids[i]), q=q[i], q_norm_sq=float(qn[i]),
                     seq=rplan.seq[i], count=count,
@@ -721,11 +871,11 @@ class RoundScheduler:
                     r_est=float(rplan.recall_est[i]),
                     td=np.full(self._k_keep, MASK_DIST, dtype=np.float64),
                     ti=np.full(self._k_keep, -1, dtype=np.int64),
-                    t_submit=float(ts[i]), batch=batch_id))
+                    t_submit=float(ts[i]), batch=batch_id,
+                    deadline=None if dls[i] is None else float(dls[i])))
             self.plan_footprints.append(
                 np.unique(np.concatenate(
-                    [rplan.seq[i][:int(rplan.counts[i])]
-                     for i in range(b)])))
+                    [rplan.seq[i][:eff_counts[i]] for i in range(b)])))
             if self.record_stats:
                 lvl0 = self.index.levels[0]
                 lvl0.stats.ensure(lvl0.num_partitions)
@@ -775,39 +925,16 @@ class RoundScheduler:
         scanned |= take
 
         q_mat = np.stack([pq.q for pq in rows])
-        if self.scan_backend == "host":
-            d, flat, st = host_scan_round(
-                self.index, q_mat, seq_mat, take, kept, self._k_keep,
-                q_norm_sq=np.asarray([pq.q_norm_sq for pq in rows]))
-        else:
-            # pad the active rows on a geometric ladder (b_bucket * 2^i)
-            # so the jitted scan sees O(log B) distinct (B, M) shapes as
-            # the in-flight population grows/shrinks; pad rows carry
-            # take=False (inert under the scan mask)
-            b_pad = self.b_bucket
-            while b_pad < b:
-                b_pad *= 2
-            q_pad = q_mat
-            if b_pad > b:
-                q_pad = np.concatenate(
-                    [q_mat,
-                     np.zeros((b_pad - b, q_mat.shape[1]), np.float32)])
-                seq_pad = np.concatenate(
-                    [seq_mat, np.zeros((b_pad - b, m), seq_mat.dtype)])
-                take_pad = np.concatenate(
-                    [take, np.zeros((b_pad - b, m), bool)])
-            else:
-                seq_pad, take_pad = seq_mat, take
-            d, flat, st = self.ex.scan_probe_round(
-                jnp.asarray(q_pad), jnp.asarray(seq_pad.astype(np.int32)),
-                take_pad, kept, self._k_keep, snap=self._snap, u_pow2=True,
-                seq_host=seq_pad)
-            # the scheduler's running top-k folds on host because the row
-            # set churns every round (admissions/retirements) — one pull
-            # per round over the active rows
-            # quakecheck: allow-sync(per-round fold: host top-k over a churning row set)
-            d = np.asarray(d, dtype=np.float64)[:b]
-            flat = np.asarray(flat, dtype=np.int64)[:b]  # quakecheck: allow-sync(per-round fold)
+        if self.faults is not None:
+            self.faults.stall("slow_round")   # injected straggler round
+        scan = self._scan_with_retry(q_mat, seq_mat, take, kept, rows)
+        if scan is None:
+            # retries exhausted: fail the affected in-flight batch —
+            # every query gets a terminal FAILED result and the runtime
+            # (queue, ticker, future admissions) stays alive
+            self._fail_inflight(rows, scanned, within)
+            return bool(self.active)
+        d, flat, st = scan
 
         # fold into per-query running top-k (host side: rows churn)
         td = np.stack([pq.td for pq in rows])
@@ -837,7 +964,14 @@ class RoundScheduler:
             lvl0.stats.record_batch(parts, cnts, 0)
 
         finished = ~(within & ~scanned).any(axis=1)
-        if self.early_exit:
+        statuses = np.full(b, STATUS_OK, dtype=object)
+        now = self._clock()
+        expired = np.asarray([pq.deadline is not None and now >= pq.deadline
+                              for pq in rows])
+        if self.early_exit or bool((expired & ~finished).any()):
+            # refined APS estimate from the *running* k-th distance —
+            # the early-exit retirement test, and what a budget-expired
+            # query's PARTIAL result reports as the recall it earned
             kth = td[:, self.k - 1]
             full = kth < MASK_DIST
             if self.index.config.metric == "l2":
@@ -856,15 +990,121 @@ class RoundScheduler:
                 geo_mat[:, 0], geo_mat, cc_mat, rho_sq,
                 self.index._beta_table, valid)
             r = p0 + np.where(scanned & valid, probs, 0.0).sum(axis=1)
-            for i, pq in enumerate(rows):
-                if full[i]:
-                    pq.r_est = float(r[i])
-            finished |= full & (r >= self.target)
-        self._retire(rows, finished, scanned, within)
+            if self.early_exit:
+                for i, pq in enumerate(rows):
+                    if full[i]:
+                        pq.r_est = float(r[i])
+                finished |= full & (r >= self.target)
+            partial = expired & ~finished
+            if partial.any():
+                for i in np.nonzero(partial)[0]:
+                    # finite by construction: the refined estimate over
+                    # what was actually scanned, or 0.0 when the top-k
+                    # never filled (the honest lower bound) — never the
+                    # full-plan estimate the query didn't earn
+                    rows[i].r_est = float(r[i]) if full[i] else 0.0
+                statuses[partial] = STATUS_PARTIAL
+                self.partials += int(partial.sum())
+                finished |= partial
+        self._retire(rows, finished, scanned, within, statuses)
         return True
 
+    # -- fault handling ------------------------------------------------
+
+    def _scan_once(self, q_mat: np.ndarray, seq_mat: np.ndarray,
+                   take: np.ndarray, kept: np.ndarray,
+                   rows: List[_Pending]):
+        b, m = take.shape
+        if self.scan_backend == "host":
+            return host_scan_round(
+                self.index, q_mat, seq_mat, take, kept, self._k_keep,
+                q_norm_sq=np.asarray([pq.q_norm_sq for pq in rows]))
+        # pad the active rows on a geometric ladder (b_bucket * 2^i)
+        # so the jitted scan sees O(log B) distinct (B, M) shapes as
+        # the in-flight population grows/shrinks; pad rows carry
+        # take=False (inert under the scan mask)
+        b_pad = self.b_bucket
+        while b_pad < b:
+            b_pad *= 2
+        q_pad = q_mat
+        if b_pad > b:
+            q_pad = np.concatenate(
+                [q_mat,
+                 np.zeros((b_pad - b, q_mat.shape[1]), np.float32)])
+            seq_pad = np.concatenate(
+                [seq_mat, np.zeros((b_pad - b, m), seq_mat.dtype)])
+            take_pad = np.concatenate(
+                [take, np.zeros((b_pad - b, m), bool)])
+        else:
+            seq_pad, take_pad = seq_mat, take
+        d, flat, st = self.ex.scan_probe_round(
+            jnp.asarray(q_pad), jnp.asarray(seq_pad.astype(np.int32)),
+            take_pad, kept, self._k_keep, snap=self._snap, u_pow2=True,
+            seq_host=seq_pad)
+        # the scheduler's running top-k folds on host because the row
+        # set churns every round (admissions/retirements) — one pull
+        # per round over the active rows
+        # quakecheck: allow-sync(per-round fold: host top-k over a churning row set)
+        d = np.asarray(d, dtype=np.float64)[:b]
+        flat = np.asarray(flat, dtype=np.int64)[:b]  # quakecheck: allow-sync(per-round fold)
+        return d, flat, st
+
+    def _scan_with_retry(self, q_mat: np.ndarray, seq_mat: np.ndarray,
+                         take: np.ndarray, kept: np.ndarray,
+                         rows: List[_Pending]):
+        """One round scan with capped exponential backoff.  Returns the
+        scan triple, or None once ``scan_retries`` retries are exhausted
+        (the caller fails the in-flight batch).  A scan exception —
+        injected or real — never propagates out of the scheduler."""
+        attempt = 0
+        while True:
+            try:
+                if self.faults is not None:
+                    self.faults.check("scan")
+                return self._scan_once(q_mat, seq_mat, take, kept, rows)
+            except Exception as e:
+                self.scan_faults += 1
+                self._last_scan_error = e
+                if attempt >= self.scan_retries:
+                    return None
+                self.scan_retries_used += 1
+                self._sleep(min(self.scan_backoff_s * (2.0 ** attempt),
+                                self.scan_backoff_max_s))
+                attempt += 1
+
+    def _sleep(self, delay: float) -> None:
+        if delay <= 0:
+            return
+        fn = self.faults.sleep_fn if self.faults is not None else time.sleep
+        fn(delay)
+
+    def _fail_inflight(self, rows: List[_Pending], scanned: np.ndarray,
+                       within: np.ndarray) -> None:
+        """Retire every in-flight query with a terminal FAILED result
+        (ids -1 / dists inf) carrying the scan error.  Queued-but-not-
+        admitted queries are unaffected — only the batch whose scan
+        exhausted its retries fails."""
+        err = repr(self._last_scan_error)
+        self.failed_batches += 1
+        now = self._clock()
+        for i, pq in enumerate(rows):
+            res = QueryResult(
+                ids=np.full(self.k, -1, dtype=np.int64),
+                dists=np.full(self.k, np.inf, dtype=np.float64),
+                nprobe=int((scanned[i] & within[i]).sum()),
+                recall_estimate=0.0, rounds=pq.rounds,
+                latency_s=now - pq.t_submit,
+                status=STATUS_FAILED, error=err)
+            self.failures += 1
+            self.done.append((pq.qid, res, None, None))
+        self.active = []
+        logger.warning("round scan failed after %d retries (%s): "
+                       "failed %d in-flight queries",
+                       self.scan_retries, err, len(rows))
+
     def _retire(self, rows: List[_Pending], finished: np.ndarray,
-                scanned: np.ndarray, within: np.ndarray) -> None:
+                scanned: np.ndarray, within: np.ndarray,
+                statuses: Optional[np.ndarray] = None) -> None:
         idxs = np.nonzero(finished)[0]
         if len(idxs):
             now = self._clock()
@@ -883,11 +1123,17 @@ class RoundScheduler:
             dd = np.where(dd >= MASK_DIST, np.inf, dd)
             for row, i in enumerate(idxs):
                 pq = rows[i]
+                status = (STATUS_OK if statuses is None
+                          else str(statuses[i]))
                 res = QueryResult(
                     ids=ids[row].astype(np.int64), dists=dd[row],
                     nprobe=int((scanned[i] & within[i]).sum()),
                     recall_estimate=pq.r_est, rounds=pq.rounds,
-                    latency_s=now - pq.t_submit)
+                    latency_s=now - pq.t_submit,
+                    status=status)
+                # PARTIAL results never enter the cache (the caller
+                # checks status): the footprint is still the plan's, so
+                # pass it along for telemetry, not for caching
                 self.done.append((pq.qid, res, pq.q,
                                   pq.seq[:pq.count]))
         self.active = [pq for i, pq in enumerate(rows) if not finished[i]]
@@ -934,6 +1180,13 @@ class RoundScheduler:
                     len(f) for f in self.plan_footprints)),
                 "vectors_streamed": self.vectors_streamed,
                 "comparisons": self.comparisons,
+                "partials": self.partials,
+                "failures": self.failures,
+                "failed_batches": self.failed_batches,
+                "scan_faults": self.scan_faults,
+                "scan_retries_used": self.scan_retries_used,
+                "effective_target": self.target,
+                "probe_frac": self.probe_frac,
             }
 
 
@@ -976,7 +1229,8 @@ class ServingRuntime:
                  config: Optional[ServingConfig] = None,
                  maintainer: Optional[Maintainer] = None,
                  lam: Optional[LatencyModel] = None,
-                 clock: Optional[Callable[[], float]] = None):
+                 clock: Optional[Callable[[], float]] = None,
+                 faults: Optional[FaultInjector] = None):
         self.index = index
         self.cfg = config or ServingConfig()
         self.target = (self.cfg.recall_target
@@ -985,6 +1239,7 @@ class ServingRuntime:
         self._engine_lock = TrackedLock("ServingRuntime._engine_lock")
         self._lock = TrackedLock("ServingRuntime._lock")
         self._clock = clock or time.perf_counter
+        self._faults = faults
         self.executor = mq.BatchedSearchExecutor(
             index, impl=self.cfg.impl, storage_dtype=self.cfg.storage_dtype,
             planner=self.cfg.planner, rounds=self.cfg.rounds,
@@ -994,9 +1249,12 @@ class ServingRuntime:
                                   tol=self.cfg.cache_tol,
                                   seed=self.cfg.cache_seed)
                       if self.cfg.cache_entries > 0 else None)
+        maintainer = maintainer or Maintainer(index, lam
+                                              or LatencyModel(dim=index.dim))
+        if faults is not None:
+            maintainer.faults = faults
         self.maintenance = MaintenanceScheduler(
-            maintainer or Maintainer(index, lam
-                                     or LatencyModel(dim=index.dim)),
+            maintainer,
             MaintenanceTriggers(
                 min_ops=self.cfg.maint_min_ops,
                 dirty_frac=self.cfg.maint_dirty_frac,
@@ -1009,8 +1267,13 @@ class ServingRuntime:
             b_bucket=self.cfg.b_bucket,
             record_stats=self.cfg.record_stats,
             scan_backend=self.cfg.scan_backend,
-            clock=self._clock)
-        self._queue: List[Tuple[int, np.ndarray, float]] = []
+            clock=self._clock, faults=faults,
+            scan_retries=self.cfg.scan_retries,
+            scan_backoff_s=self.cfg.scan_backoff_s,
+            scan_backoff_max_s=self.cfg.scan_backoff_max_s)
+        # queue entries: (qid, query, t_submit, absolute deadline | None)
+        self._queue: List[Tuple[int, np.ndarray, float,
+                                Optional[float]]] = []
         self._maintaining = False
         self._next_qid = 0
         self.results: Dict[int, QueryResult] = {}
@@ -1020,27 +1283,53 @@ class ServingRuntime:
         self.queries_submitted = 0
         self.cache_hits = 0
         self.write_ops = 0
+        # failure / degradation telemetry (docs/serving.md)
+        self.shed_queries = 0
+        self._status_counts = {s: 0 for s in TERMINAL_STATUSES}
+        self.cache_errors = 0
+        self._cache_disabled = False
+        self.ticker_errors = 0
+        self.ticker_restarts = 0
+        self.ticker_wedged = False
+        self.maintenance_failures = 0
+        self._overflow_since_flush = False
+        self._base_target = self.target
+        self._govern_steps = 0
+        self._pressure_streak = 0
+        self._calm_streak = 0
+        self._govern_degrades = 0
+        self._govern_restores = 0
         self._closed = False
         self._ticker_wake = threading.Event()
         self._ticker_error: Optional[BaseException] = None
         self._ticker_thread: Optional[threading.Thread] = None
-        if self.cfg.flush_deadline is not None and self.cfg.ticker:
-            self._ticker_thread = threading.Thread(
-                target=self._ticker_loop, name="serving-ticker",
-                daemon=True)
-            self._ticker_thread.start()
+        self._ensure_ticker()
 
     # -- lifecycle -----------------------------------------------------
 
     def close(self) -> None:
         """Stop the deadline ticker (idempotent).  Queued / in-flight
-        work is left as is — call :meth:`drain` first to finish it."""
+        work is left as is — call :meth:`drain` first to finish it.
+
+        A ticker that fails to join within 5 s is *wedged* (stuck in a
+        scan or a lock) — that is logged, counted in
+        ``stats()['ticker_wedged']``, and the thread reference is kept
+        so the condition stays observable, instead of being silently
+        dropped."""
         self._closed = True
         self._ticker_wake.set()
         t = self._ticker_thread
         if t is not None:
             t.join(timeout=5.0)
-            self._ticker_thread = None
+            if t.is_alive():
+                with self._lock:
+                    self.ticker_wedged = True
+                logger.error(
+                    "serving ticker did not stop within 5s join budget "
+                    "(wedged in a scan or lock); thread left daemonized "
+                    "— see stats()['ticker_wedged']")
+            else:
+                self._ticker_thread = None
 
     def __enter__(self) -> "ServingRuntime":
         return self
@@ -1050,46 +1339,124 @@ class ServingRuntime:
 
     # -- admission -----------------------------------------------------
 
-    def submit_query(self, q: np.ndarray) -> int:
+    def submit_query(self, q: np.ndarray,
+                     deadline_s: Optional[float] = None) -> int:
         """Admit one query; returns its ticket (qid).  Thread-safe: the
         admission lock covers ticketing, the cache probe and enqueueing;
         the flush a size/deadline trigger forces runs *after* it drops
-        (blocking work never happens under the admission lock)."""
+        (blocking work never happens under the admission lock).
+
+        ``deadline_s`` is this query's latency budget (overrides
+        ``cfg.deadline_s``; None = config default): past it the query
+        retires at the end of the current round with its running top-k,
+        status ``PARTIAL``.  A full bounded queue applies
+        ``cfg.queue_policy``: ``shed-newest`` completes this query
+        immediately with status ``SHED``, ``shed-oldest`` sheds the
+        oldest queued query instead, ``block`` makes this submitter pay
+        for a flush and retry (backpressure)."""
         q = np.ascontiguousarray(q, dtype=np.float32).reshape(-1)
-        now = self._clock()
-        do_flush = False
-        with self._lock:
-            note_guarded(self, "_queue")
-            qid = self._next_qid
-            self._next_qid += 1
-            self.queries_submitted += 1
-            if self.cache is not None:
-                if self.index.version != self._cache_version:
-                    self._invalidate_cache_locked()  # out-of-band mutation
-                hit = self.cache.get(q, self.cfg.k)
-                if hit is not None:
-                    self.cache_hits += 1
-                    self.results[qid] = QueryResult(
-                        ids=hit["ids"].copy(), dists=hit["dists"].copy(),
-                        nprobe=hit["nprobe"],
-                        recall_estimate=hit["recall_estimate"],
-                        from_cache=True,
-                        latency_s=self._clock() - now)
-                    return qid
-            self._queue.append((qid, q, now))
-            do_flush = len(self._queue) >= self.cfg.flush_size or (
-                self.cfg.flush_deadline is not None
-                and now - self._queue[0][2] >= self.cfg.flush_deadline)
-        if do_flush:
-            self.flush()
+        if deadline_s is None:
+            deadline_s = self.cfg.deadline_s
+        elif deadline_s <= 0:
+            raise ValueError(f"deadline_s must be positive "
+                             f"(got {deadline_s})")
+        self._ensure_ticker()
+        while True:
+            now = self._clock()
+            do_flush = False
+            overflow = False
+            with self._lock:
+                note_guarded(self, "_queue")
+                cap = self.cfg.queue_cap
+                if cap is not None and len(self._queue) >= cap:
+                    policy = self.cfg.queue_policy
+                    if policy == "shed-newest":
+                        qid = self._alloc_qid_locked()
+                        self._shed_locked(qid, now, now)
+                        return qid
+                    elif policy == "shed-oldest":
+                        old_qid, _oq, old_t, _od = self._queue.pop(0)
+                        self._shed_locked(old_qid, old_t, now)
+                    else:   # block: this submitter pays for a flush,
+                            # then retries — backpressure without holding
+                            # the admission lock across blocking work
+                        self._overflow_since_flush = True
+                        overflow = True
+                if not overflow:
+                    qid = self._alloc_qid_locked()
+                    if self.cache is not None and not self._cache_disabled:
+                        if self.index.version != self._cache_version:
+                            self._invalidate_cache_locked()  # out-of-band
+                        hit = self._cache_guarded(
+                            self.cache.get, q, self.cfg.k)
+                        if hit is not None:
+                            self.cache_hits += 1
+                            self._status_counts[STATUS_OK] += 1
+                            self.results[qid] = QueryResult(
+                                ids=hit["ids"].copy(),
+                                dists=hit["dists"].copy(),
+                                nprobe=hit["nprobe"],
+                                recall_estimate=hit["recall_estimate"],
+                                from_cache=True,
+                                latency_s=self._clock() - now)
+                            return qid
+                    deadline = (None if deadline_s is None
+                                else now + deadline_s)
+                    self._queue.append((qid, q, now, deadline))
+                    do_flush = len(self._queue) >= self.cfg.flush_size or (
+                        self.cfg.flush_deadline is not None
+                        and now - self._queue[0][2]
+                        >= self.cfg.flush_deadline)
+            if overflow:
+                self.flush()
+                continue
+            if do_flush:
+                self.flush()
+            return qid
+
+    def _alloc_qid_locked(self) -> int:
+        # caller holds self._lock (propagated seed)
+        qid = self._next_qid
+        self._next_qid += 1
+        self.queries_submitted += 1
         return qid
 
-    def submit_batch(self, queries: np.ndarray) -> List[int]:
+    def _shed_locked(self, qid: int, t_submit: float, now: float) -> None:
+        # caller holds self._lock (propagated seed).  SHED is terminal:
+        # the query completes immediately, empty-handed but accounted.
+        self.shed_queries += 1
+        self._status_counts[STATUS_SHED] += 1
+        self.results[qid] = QueryResult(
+            ids=np.full(self.cfg.k, -1, dtype=np.int64),
+            dists=np.full(self.cfg.k, np.inf, dtype=np.float64),
+            recall_estimate=0.0, latency_s=now - t_submit,
+            status=STATUS_SHED)
+
+    def _cache_guarded(self, fn, *args, **kwargs):
+        """One cache-backend call; a failure degrades the runtime to
+        cache-off mode (counted, logged) instead of erroring the query
+        that happened to probe — the cache is an optimization, never a
+        correctness dependency."""
+        try:
+            if self._faults is not None:
+                self._faults.check("cache")
+            return fn(*args, **kwargs)
+        except Exception as e:
+            with self._lock:    # reentrant under the admission lock
+                self.cache_errors += 1
+                self._cache_disabled = True
+            logger.warning("cache backend failed (%r): degrading to "
+                           "cache-off mode", e)
+            return None
+
+    def submit_batch(self, queries: np.ndarray,
+                     deadline_s: Optional[float] = None) -> List[int]:
         """Admit a query batch (one qid per row)."""
         q = np.ascontiguousarray(queries, dtype=np.float32)
         if q.ndim == 1:
             q = q[None, :]
-        return [self.submit_query(q[i]) for i in range(q.shape[0])]
+        return [self.submit_query(q[i], deadline_s=deadline_s)
+                for i in range(q.shape[0])]
 
     # -- deadline ticker ----------------------------------------------
 
@@ -1104,6 +1471,8 @@ class ServingRuntime:
         deadline = self.cfg.flush_deadline
         if deadline is None:
             return False
+        if self._faults is not None:
+            self._faults.check("ticker")
         with self._lock:
             due = bool(self._queue) and (
                 self._clock() - self._queue[0][2] >= deadline)
@@ -1120,8 +1489,36 @@ class ServingRuntime:
                 break
             try:
                 self.tick()
-            except BaseException as e:  # keep ticking; surface in close/tests
+            except BaseException as e:
+                # record the death and exit; the next admission notices
+                # the dead thread and restarts the ticker (counted in
+                # stats()['ticker_restarts']) — deadline flushes degrade
+                # for at most one inter-arrival gap, never silently die
                 self._ticker_error = e
+                with self._lock:
+                    self.ticker_errors += 1
+                logger.warning("serving ticker died (%r); will restart "
+                               "on next admission", e)
+                break
+
+    def _ensure_ticker(self) -> None:
+        """Start — or restart, after a ticker death — the background
+        deadline ticker.  Called at construction and on every admission,
+        so a dead ticker is impossible to miss: the very next submit
+        revives it."""
+        if self.cfg.flush_deadline is None or not self.cfg.ticker \
+                or self._closed:
+            return
+        with self._lock:
+            t = self._ticker_thread
+            if t is not None and t.is_alive():
+                return
+            if t is not None:
+                self.ticker_restarts += 1
+            t = threading.Thread(target=self._ticker_loop,
+                                 name="serving-ticker", daemon=True)
+            self._ticker_thread = t
+            t.start()
 
     # -- scheduling ----------------------------------------------------
 
@@ -1146,6 +1543,10 @@ class ServingRuntime:
             note_guarded(self, "_queue")
             batch = list(self._queue)
             self._queue.clear()
+            overflow = self._overflow_since_flush
+            self._overflow_since_flush = False
+        if self.cfg.govern:
+            self._govern(len(batch), overflow)
         if batch:
             if (self.scheduler.has_active()
                     and self.executor._fingerprint()
@@ -1155,18 +1556,70 @@ class ServingRuntime:
             qids = [t[0] for t in batch]
             qs = np.stack([t[1] for t in batch])
             ts = [t[2] for t in batch]
+            dls = [t[3] for t in batch]
             gen = self.cache.generation if self.cache is not None else 0
             with self._lock:
                 for qid in qids:
                     self._admit_gen[qid] = gen
                 if self.cfg.record_admissions:
                     self._admission_log.append(("q", tuple(qids)))
-            self.scheduler.admit(qs, qids, ts)
+            self.scheduler.admit(qs, qids, ts, deadlines=dls)
             self.maintenance.note_op()
         for _ in range(max(self.cfg.interleave_rounds, 0)):
             if not self.scheduler.step():
                 break
         self._collect()
+
+    def _govern(self, batch_fill: int, overflow: bool) -> None:
+        """Degradation governor (docs/serving.md): under sustained queue
+        pressure, step the scheduler's effective recall target down
+        (``govern_step`` per step, floored at ``govern_min_target``) and
+        cap per-query probe budgets (``govern_probe_frac ** steps`` —
+        the serving-layer union_cap analog); restore stepwise on
+        sustained calm.  Pressure = an admission hit the queue cap since
+        the last flush, or the flush drained >= ``govern_high *
+        queue_cap`` queries; calm = no overflow and < ``govern_low *
+        queue_cap``.  ``govern_patience`` consecutive signals are
+        required per transition; every transition is counted."""
+        cap = self.cfg.queue_cap
+        if cap is None:
+            return
+        pressured = overflow or batch_fill >= self.cfg.govern_high * cap
+        calm = (not overflow) and batch_fill < self.cfg.govern_low * cap
+        with self._lock:
+            if pressured:
+                self._pressure_streak += 1
+                self._calm_streak = 0
+            elif calm:
+                self._calm_streak += 1
+                self._pressure_streak = 0
+            else:
+                self._pressure_streak = 0
+                self._calm_streak = 0
+            steps = self._govern_steps
+            if (pressured
+                    and self._pressure_streak >= self.cfg.govern_patience
+                    and steps < self.cfg.govern_max_steps):
+                steps += 1
+                self._pressure_streak = 0
+                self._govern_degrades += 1
+            elif (calm and self._calm_streak >= self.cfg.govern_patience
+                    and steps > 0):
+                steps -= 1
+                self._calm_streak = 0
+                self._govern_restores += 1
+            prev = self._govern_steps
+            if steps == prev:
+                return
+            self._govern_steps = steps
+        target = max(self.cfg.govern_min_target,
+                     self._base_target - self.cfg.govern_step * steps)
+        frac = (None if steps == 0
+                else self.cfg.govern_probe_frac ** steps)
+        self.scheduler.set_degradation(target, frac)
+        logger.info("governor %s to step %d (target %.3f, probe_frac %s)",
+                    "degraded" if steps > prev else "restored",
+                    steps, target, frac)
 
     def drain(self) -> None:
         """Flush the queue and run rounds until nothing is in flight.
@@ -1187,12 +1640,18 @@ class ServingRuntime:
             with self._lock:
                 note_guarded(self, "results")
                 self.results[qid] = res
+                self._status_counts[res.status] += 1
                 gen = self._admit_gen.pop(qid, None)
-            if self.cache is not None:
-                self.cache.put(q, self.cfg.k, res.ids, res.dists, footprint,
-                               nprobe=res.nprobe,
-                               recall_estimate=res.recall_estimate,
-                               gen=gen)
+                cache_on = (self.cache is not None
+                            and not self._cache_disabled)
+            # only OK results enter the cache: PARTIAL top-k is whatever
+            # the budget allowed (serving it to a later identical query
+            # would silently repeat the degradation), FAILED has no data
+            if cache_on and res.status == STATUS_OK and q is not None:
+                self._cache_guarded(
+                    self.cache.put, q, self.cfg.k, res.ids, res.dists,
+                    footprint, nprobe=res.nprobe,
+                    recall_estimate=res.recall_estimate, gen=gen)
 
     def result(self, qid: int) -> Optional[QueryResult]:
         """The query's result, or None while it is still in flight."""
@@ -1265,7 +1724,23 @@ class ServingRuntime:
                 if not force and self.maintenance.due() is None:
                     return None
                 self._drain_engine()
-                rep = self.maintenance.run_if_due(force=force)
+                ckpt = checkpoint_index(self.index)
+                try:
+                    rep = self.maintenance.run_if_due(force=force)
+                except Exception as e:
+                    # self-healing: a maintenance crash mid-recluster
+                    # rolls the index (levels, id map, journal version)
+                    # back to the pre-pass checkpoint, so snapshots,
+                    # planner caches and the result cache stay coherent.
+                    # Trigger state was not rebaselined, so the next
+                    # drift check retries the pass.
+                    restore_index(self.index, ckpt)
+                    with self._lock:
+                        self.maintenance_failures += 1
+                    logger.warning("maintenance pass crashed (%r): "
+                                   "rolled back, will retry on next "
+                                   "trigger", e)
+                    return None
                 if rep is not None:
                     with self._lock:
                         self._invalidate_cache_locked()
@@ -1292,6 +1767,19 @@ class ServingRuntime:
                 "queue_depth": len(self._queue),
                 "cache_hits": self.cache_hits,
                 "write_ops": self.write_ops,
+                "queries_shed": self.shed_queries,
+                "status_counts": dict(self._status_counts),
+                "cache_errors": self.cache_errors,
+                "cache_disabled": self._cache_disabled,
+                "ticker_errors": self.ticker_errors,
+                "ticker_restarts": self.ticker_restarts,
+                "ticker_wedged": self.ticker_wedged,
+                "maintenance_failures": self.maintenance_failures,
+                "governor": {
+                    "steps": self._govern_steps,
+                    "degrades": self._govern_degrades,
+                    "restores": self._govern_restores,
+                },
             }
         out["cache_entries"] = cache["entries"] if cache else 0
         out["cache_invalidated"] = cache["invalidated"] if cache else 0
@@ -1308,6 +1796,13 @@ class ServingRuntime:
             if planned else 0.0,
             "vectors_streamed": sch["vectors_streamed"],
             "comparisons": sch["comparisons"],
+            "partials": sch["partials"],
+            "failures": sch["failures"],
+            "failed_batches": sch["failed_batches"],
+            "scan_faults": sch["scan_faults"],
+            "scan_retries_used": sch["scan_retries_used"],
+            "effective_target": sch["effective_target"],
+            "probe_frac": sch["probe_frac"],
             "maintenance_runs": maint["runs"],
             "maintenance_reasons": maint["reasons"],
         })

@@ -25,6 +25,20 @@ from ..core import (LatencyModel, Maintainer, QuakeConfig, QuakeIndex,
                     ServingConfig, ServingRuntime)
 from ..data import wikipedia
 from ..data.workload import IncrementalGroundTruth
+from ..faults import FaultInjector
+
+
+def parse_fault_spec(spec: str, seed: int = 0) -> FaultInjector:
+    """``site=rate[,site=rate...]`` -> a seeded injector, e.g.
+    ``--faults scan=0.05,maintenance=1.0`` (sites: see FaultInjector)."""
+    rates = {}
+    for part in spec.split(","):
+        part = part.strip()
+        if not part:
+            continue
+        site, _, rate = part.partition("=")
+        rates[site.strip()] = float(rate)
+    return FaultInjector(seed=seed, rates=rates)
 
 
 def _recall(ids_rows, gt: np.ndarray, k: int) -> float:
@@ -58,7 +72,8 @@ def _warm_runtime(index, wl, scfg: ServingConfig) -> None:
 
 def replay_runtime(wl, cfg: QuakeConfig, scfg: ServingConfig,
                    verbose: bool = True, warm: bool = False,
-                   settle: bool = False) -> dict:
+                   settle: bool = False,
+                   faults: FaultInjector | None = None) -> dict:
     """Replay a workload through the serving runtime; returns the summary
     dict ``bench_serving`` consumes (wall-clock excludes ground truth;
     ``warm=True`` pre-compiles the jitted shapes so the measurement is
@@ -74,7 +89,7 @@ def replay_runtime(wl, cfg: QuakeConfig, scfg: ServingConfig,
         maintainer.run()
     if warm:
         _warm_runtime(index, wl, scfg)
-    rt = ServingRuntime(index, scfg, maintainer=maintainer)
+    rt = ServingRuntime(index, scfg, maintainer=maintainer, faults=faults)
     if verbose:
         print(f"built: {index.num_vectors} vectors, "
               f"{index.num_partitions} partitions ({time.time()-t0:.1f}s)")
@@ -135,13 +150,30 @@ def replay_runtime(wl, cfg: QuakeConfig, scfg: ServingConfig,
            "maintenance_reasons": st["maintenance_reasons"],
            "cache_hits": st["cache_hits"],
            "riding_savings": st["riding_savings"],
-           "rounds_run": st["rounds_run"]}
+           "rounds_run": st["rounds_run"],
+           "status_counts": dict(st["status_counts"]),
+           "queries_shed": st["queries_shed"]}
+    if faults is not None or st["maintenance_failures"] or \
+            st["cache_disabled"] or st["ticker_errors"]:
+        out["failure_telemetry"] = {
+            "scan_faults": st["scan_faults"],
+            "scan_retries_used": st["scan_retries_used"],
+            "failed_batches": st["failed_batches"],
+            "maintenance_failures": st["maintenance_failures"],
+            "cache_errors": st["cache_errors"],
+            "cache_disabled": st["cache_disabled"],
+            "ticker_errors": st["ticker_errors"],
+            "ticker_restarts": st["ticker_restarts"],
+            "governor": st["governor"]}
     if verbose:
         print(f"done. qps={out['qps']} recall={out['mean_recall']} "
               f"p99={out['p99_latency_us']}us maint={st['maintenance_runs']} "
               f"({','.join(st['maintenance_reasons']) or 'none'}) "
               f"cache_hits={st['cache_hits']} "
-              f"riding_savings={st['riding_savings']}")
+              f"riding_savings={st['riding_savings']} "
+              f"statuses={dict(st['status_counts'])}")
+        if "failure_telemetry" in out:
+            print(f"failure telemetry: {out['failure_telemetry']}")
     return out
 
 
@@ -230,6 +262,22 @@ def main(argv=None) -> None:
     ap.add_argument("--no-maintenance", action="store_true")
     ap.add_argument("--per-op", action="store_true",
                     help="legacy per-op replay (maintain after every op)")
+    # failure semantics (docs/serving.md): budgets, admission control,
+    # degradation governor, fault injection
+    ap.add_argument("--deadline-s", type=float, default=None,
+                    help="per-query latency budget; expired queries "
+                         "retire PARTIAL with their running top-k")
+    ap.add_argument("--queue-cap", type=int, default=None,
+                    help="bounded admission queue (default unbounded)")
+    ap.add_argument("--queue-policy", default="block",
+                    choices=["block", "shed-oldest", "shed-newest"])
+    ap.add_argument("--govern", action="store_true",
+                    help="enable the degradation governor (lower the "
+                         "effective recall target under queue pressure)")
+    ap.add_argument("--faults", default=None, metavar="SITE=RATE[,..]",
+                    help="inject seeded faults, e.g. "
+                         "scan=0.05,maintenance=1.0,cache=1.0")
+    ap.add_argument("--fault-seed", type=int, default=0)
     args = ap.parse_args(argv)
 
     wl = wikipedia.wikipedia_workload(
@@ -244,11 +292,15 @@ def main(argv=None) -> None:
         k=args.k, recall_target=args.recall_target, rounds=args.rounds,
         early_exit=args.early_exit, flush_size=args.flush_size,
         cache_entries=args.cache_entries, cache_bits=args.cache_bits,
-        cache_tol=args.cache_tol)
+        cache_tol=args.cache_tol,
+        deadline_s=args.deadline_s, queue_cap=args.queue_cap,
+        queue_policy=args.queue_policy, govern=args.govern)
     if args.no_maintenance:
         scfg.maint_min_ops = 10 ** 9      # triggers never reach min_ops
         scfg.maint_max_ops = None
-    replay_runtime(wl, cfg, scfg)
+    faults = (parse_fault_spec(args.faults, seed=args.fault_seed)
+              if args.faults else None)
+    replay_runtime(wl, cfg, scfg, faults=faults)
 
 
 if __name__ == "__main__":

@@ -1,0 +1,29 @@
+"""Seeded QK301 violations: runtime-path handlers that silently drop
+exceptions — the failure never reaches a terminal status, a counter, or
+a log line (docs/serving.md failure semantics)."""
+
+
+def tick_all(components):
+    for c in components:
+        try:
+            c.tick()
+        except Exception:           # QK301: broad catch, body only drops
+            pass
+
+
+def load_snapshot(path):
+    try:
+        with open(path) as fh:
+            return fh.read()
+    except:                         # QK301: bare except, nothing re-raised
+        return None
+
+
+def poll(sources):
+    out = []
+    for s in sources:
+        try:
+            out.append(s.read())
+        except (ValueError, BaseException):  # QK301: BaseException dropped
+            continue
+    return out

@@ -1,0 +1,38 @@
+"""Known-good twin of qk301_bad.py: every handler either narrows the
+catch, surfaces the failure (count / log / re-raise), or documents the
+intentional drop with an allow-swallow pragma."""
+import logging
+
+logger = logging.getLogger("repro.fixture")
+
+
+def tick_all(components, stats):
+    for c in components:
+        try:
+            c.tick()
+        except Exception as e:      # surfaced: counted and logged
+            stats["tick_errors"] += 1
+            logger.warning("tick failed: %r", e)
+
+
+def load_snapshot(path):
+    try:
+        with open(path) as fh:
+            return fh.read()
+    except OSError:                 # narrow catch is fine
+        return None
+
+
+def cleanup(tmp):
+    try:
+        tmp.unlink()
+    except Exception:  # quakecheck: allow-swallow(best-effort temp cleanup)
+        pass
+
+
+def guard(fn):
+    try:
+        return fn()
+    except:                         # bare, but re-raises — not a swallow
+        logger.exception("guarded call failed")
+        raise

@@ -27,6 +27,7 @@ def rules_in(path):
     ("QK202", "qk202_bad.py", "qk202_good.py"),
     ("QK203", "qk203_bad.py", "qk203_good.py"),
     ("QK204", "qk204_bad.py", "qk204_good.py"),
+    ("QK301", "repro/qk301_bad.py", "repro/qk301_good.py"),
 ])
 def test_rule_flags_bad_passes_good(rule, bad, good):
     assert rules_in(FIXTURES / bad) == [rule]
@@ -44,6 +45,7 @@ def test_bad_fixtures_have_expected_counts():
     assert len(lint_paths([str(FIXTURES / "qk202_bad.py")])) == 1
     assert len(lint_paths([str(FIXTURES / "qk203_bad.py")])) == 1
     assert len(lint_paths([str(FIXTURES / "qk204_bad.py")])) == 1
+    assert len(lint_paths([str(FIXTURES / "repro/qk301_bad.py")])) == 3
 
 
 def test_qk100_reasonless_allow_sync():
@@ -52,11 +54,25 @@ def test_qk100_reasonless_allow_sync():
     assert rules == ["QK100", "QK101"]
 
 
+def test_qk100_reasonless_allow_swallow():
+    # an allow-swallow with no reason is itself a finding, and it does
+    # not suppress the swallow it sits on (mirrors allow-sync)
+    src = ("def f(c):\n"
+           "    try:\n"
+           "        c.tick()\n"
+           "    except Exception:  # quakecheck: allow-swallow()\n"
+           "        pass\n")
+    rules = sorted({f.rule for f in lint_source(src, "src/repro/t.py")})
+    assert rules == ["QK100", "QK301"]
+    # outside a repro runtime path the swallow rule stays silent
+    assert all(f.rule != "QK301" for f in lint_source(src, "bench/t.py"))
+
+
 def test_fixture_dir_as_a_whole():
     findings = lint_paths([str(FIXTURES)])
     assert {f.rule for f in findings} == \
         {"QK100", "QK101", "QK102", "QK103", "QK104", "QK105",
-         "QK201", "QK202", "QK203", "QK204"}
+         "QK201", "QK202", "QK203", "QK204", "QK301"}
     assert all("good" not in f.path for f in findings)
 
 

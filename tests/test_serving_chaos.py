@@ -1,0 +1,155 @@
+"""Chaos hammer: the concurrency hammer of test_serving_concurrency
+run *under fault injection* (src/repro/faults.py) — scan faults with
+retry, every maintenance pass crashing mid-recluster, the cache failing
+closed, the ticker thread dying — while 8 threads mix submits (some
+with tight latency budgets), writes, and maintenance triggers.
+
+Contracts (ISSUE acceptance):
+  * every admitted query reaches exactly one terminal status
+    (``sum(status_counts.values()) == queries_submitted``) — no query
+    is lost to an injected fault;
+  * PARTIAL results carry finite recall estimates;
+  * no deadlocks: thread joins are watchdog-bounded, and the lock
+    sanitizer sees zero order/guarded violations even on fault paths;
+  * self-healing leaves the index byte-identical to a fault-free
+    replay of the surviving write operations (maintenance crashes roll
+    back completely; ``index_state_fingerprint`` compares).
+"""
+import threading
+
+import numpy as np
+import pytest
+
+from repro import sanitize
+from repro.core import QuakeConfig, QuakeIndex, ServingConfig, ServingRuntime
+from repro.core.serving import TERMINAL_STATUSES, STATUS_PARTIAL
+from repro.data import datasets
+from repro.faults import FaultInjector, index_state_fingerprint
+
+
+@pytest.fixture(scope="module")
+def ds():
+    return datasets.clustered(2000, 16, n_clusters=12, seed=0)
+
+
+def build(ds):
+    return QuakeIndex.build(ds.vectors, num_partitions=16, kmeans_iters=3,
+                            config=QuakeConfig())
+
+
+N_THREADS, OPS_PER_THREAD = 8, 25
+JOIN_TIMEOUT_S = 120.0           # deadlock watchdog, not an expectation
+
+
+def test_chaos_hammer_terminal_statuses_and_replay(ds):
+    idx = build(ds)
+    fi = FaultInjector(seed=11, rates={
+        "scan": 0.05,            # transient: retries absorb these
+        "maintenance": 1.0,      # every pass crashes mid-recluster
+        "cache": 1.0,            # first probe fails -> cache-off
+        "ticker": 0.2,           # ticker dies, restarts on admission
+    })
+    cfg = ServingConfig(k=10, flush_size=4, scan_backend="host",
+                        cache_entries=64, flush_deadline_ms=5.0,
+                        ticker=True, maint_min_ops=32,
+                        queue_cap=32, queue_policy="shed-newest",
+                        govern=True, govern_patience=2,
+                        scan_retries=6, scan_backoff_s=0.0005,
+                        scan_backoff_max_s=0.002,
+                        record_admissions=True)
+    qs = datasets.queries_near(ds, 64, seed=5).astype(np.float32)
+    qids, qids_lock = [], threading.Lock()
+    errors = []
+
+    def worker(tid, rt):
+        rng = np.random.default_rng(100 + tid)
+        my_ids = []
+        try:
+            for i in range(OPS_PER_THREAD):
+                r = rng.random()
+                if r < 0.60:
+                    qid = rt.submit_query(qs[rng.integers(len(qs))])
+                    with qids_lock:
+                        qids.append(qid)
+                elif r < 0.70:
+                    # tight budget: may retire PARTIAL mid-search
+                    qid = rt.submit_query(qs[rng.integers(len(qs))],
+                                          deadline_s=0.002)
+                    with qids_lock:
+                        qids.append(qid)
+                elif r < 0.80:
+                    eid = 500_000 + tid * 1000 + i
+                    rt.submit_insert(qs[None, rng.integers(len(qs))] + 0.01,
+                                     np.array([eid]))
+                    my_ids.append(eid)
+                elif r < 0.90 and my_ids:
+                    rt.submit_delete(np.array([my_ids.pop()]))
+                else:
+                    rt.maybe_maintain()      # crashes + rolls back (rate 1.0)
+                if i % 7 == 0:
+                    rt.stats()
+        except BaseException as e:   # noqa: BLE001 - surfaced below
+            errors.append((tid, e))
+
+    with ServingRuntime(idx, cfg, faults=fi) as rt:
+        with sanitize.sanitized(transfers=False, nans=False,
+                                compiles=False, locks=True), \
+                sanitize.LockOrderWatchdog() as wd:
+            threads = [threading.Thread(target=worker, args=(t, rt))
+                       for t in range(N_THREADS)]
+            for t in threads:
+                t.start()
+            for t in threads:
+                t.join(timeout=JOIN_TIMEOUT_S)
+            stuck = [t.name for t in threads if t.is_alive()]
+            assert not stuck, f"deadlocked worker threads: {stuck}"
+            rt.drain()
+            assert not errors, errors
+            # lock discipline holds on the fault paths too
+            assert wd.events.order_violations == 0
+            assert wd.events.guarded_violations == 0
+            assert wd.events.acquisitions > 0
+        st = rt.stats()
+        log = rt.admission_log()
+
+        # -- every query reached exactly one terminal status ------------
+        assert sum(st["status_counts"].values()) == st["queries_submitted"]
+        assert st["queue_depth"] == 0
+        assert st["in_flight"] == 0
+        for qid in qids:
+            res = rt.result(qid)
+            assert res is not None, f"query {qid} lost"
+            assert res.status in TERMINAL_STATUSES, (qid, res.status)
+            if res.status == STATUS_PARTIAL:
+                assert np.isfinite(res.recall_estimate)
+                assert 0.0 <= res.recall_estimate <= 1.0
+
+        # -- the injected faults actually fired and were survived -------
+        trips = fi.counters()["trips"]
+        assert trips.get("cache", 0) >= 1 and st["cache_disabled"] is True
+        if trips.get("maintenance", 0):
+            assert st["maintenance_failures"] >= 1
+            assert st["maintenance_runs"] == 0    # nothing ever committed
+        if st["scan_faults"]:                     # retries absorbed them
+            assert st["scan_retries_used"] >= 1
+
+        faulted_fp = index_state_fingerprint(idx)
+        idx.check_invariants()
+
+    # -- self-healing: fault-free replay of surviving writes ------------
+    # Maintenance always crashed and rolled back, so the post-chaos index
+    # must equal a fresh identical build plus the admission-log writes
+    # applied in engine-lock order, byte for byte.
+    twin = build(ds)
+    replay_cfg = ServingConfig(k=10, flush_size=10 ** 9,
+                               scan_backend="host", cache_entries=0,
+                               ticker=False, maint_min_ops=10 ** 9)
+    with ServingRuntime(twin, replay_cfg) as rt2:
+        for entry in log:
+            if entry[0] == "insert":
+                rt2.submit_insert(entry[1], entry[2])
+            elif entry[0] == "delete":
+                rt2.submit_delete(entry[1])
+        rt2.drain()
+    assert index_state_fingerprint(twin) == faulted_fp
+    twin.check_invariants()

@@ -110,6 +110,14 @@ GUARDED_BY = {
         "_admission_log": "_lock", "_admit_gen": "_lock",
         "queries_submitted": "_lock", "cache_hits": "_lock",
         "write_ops": "_lock",
+        # failure / degradation telemetry (docs/serving.md)
+        "shed_queries": "_lock", "_status_counts": "_lock",
+        "cache_errors": "_lock", "_cache_disabled": "_lock",
+        "ticker_errors": "_lock", "ticker_restarts": "_lock",
+        "ticker_wedged": "_lock", "maintenance_failures": "_lock",
+        "_overflow_since_flush": "_lock", "_govern_steps": "_lock",
+        "_pressure_streak": "_lock", "_calm_streak": "_lock",
+        "_govern_degrades": "_lock", "_govern_restores": "_lock",
     },
     "RoundScheduler": {
         "active": "_lock", "done": "_lock", "_epoch_key": "_lock",
@@ -117,6 +125,11 @@ GUARDED_BY = {
         "plan_footprints": "_lock", "partitions_streamed": "_lock",
         "vectors_streamed": "_lock", "comparisons": "_lock",
         "rounds_run": "_lock",
+        # failure / degradation telemetry
+        "partials": "_lock", "failures": "_lock",
+        "failed_batches": "_lock", "scan_faults": "_lock",
+        "scan_retries_used": "_lock", "_last_scan_error": "_lock",
+        "target": "_lock", "probe_frac": "_lock",
     },
     "ResultCache": {
         "_store": "_lock", "_by_key": "_lock", "_by_part": "_lock",
@@ -166,6 +179,15 @@ INSTANCE_ATTRS = {
     "maintenance": "MaintenanceScheduler",
 }
 
+# --------------------------------------------------------------------------
+# QK301 — swallowed exceptions (docs/serving.md failure semantics)
+# --------------------------------------------------------------------------
+# Directory (path fragment) the swallow rule applies to: runtime code under
+# src/repro/ must never silently drop an exception — every failure is
+# counted, degraded-to, retried, or documented with
+# ``# quakecheck: allow-swallow(<why>)``.
+SWALLOW_DIR_FRAGMENT = "repro"
+
 # Guarded fields whose values are immutable scalars: reading them without
 # the lock can tear a *snapshot* but can never leak a mutable alias, so
 # QK204 (escaping reference) skips them.
@@ -175,6 +197,12 @@ SCALAR_GUARDED = {
     "queries_submitted", "cache_hits", "write_ops", "ops_since",
     "partitions_streamed", "vectors_streamed", "comparisons",
     "rounds_run", "_gen", "_last_version", "_last_cost",
+    "shed_queries", "cache_errors", "_cache_disabled", "ticker_errors",
+    "ticker_restarts", "ticker_wedged", "maintenance_failures",
+    "_overflow_since_flush", "_govern_steps", "_pressure_streak",
+    "_calm_streak", "_govern_degrades", "_govern_restores",
+    "partials", "failures", "failed_batches", "scan_faults",
+    "scan_retries_used", "target", "probe_frac",
 }
 
 # Copy-producing wrappers: returning ``list(self._queue)`` (or

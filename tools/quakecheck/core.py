@@ -38,6 +38,7 @@ RULES = {
     "QK202": "lock acquired against the declared lock order",
     "QK203": "blocking call while holding an admission lock",
     "QK204": "guarded mutable state escapes its lock scope",
+    "QK301": "swallowed exception in runtime path",
 }
 
 
@@ -1150,6 +1151,70 @@ def check_qk2xx(tree: ast.AST, path: str, pragmas: FilePragmas,
 
 
 # ---------------------------------------------------------------------------
+# QK301 — swallowed exceptions in runtime paths (docs/serving.md failure
+# semantics: every failure is terminal-status-counted, degraded-to, or
+# retried — never silently dropped).  Scoped to config.SWALLOW_DIR_FRAGMENT
+# paths; an intentional drop carries # quakecheck: allow-swallow(<why>).
+# ---------------------------------------------------------------------------
+
+_BROAD_EXC_NAMES = {"Exception", "BaseException"}
+
+
+def _handler_only_drops(handler: ast.ExceptHandler) -> bool:
+    """True when the handler body does nothing but discard the error:
+    ``pass`` / ``...`` / ``continue`` statements only."""
+    for stmt in handler.body:
+        if isinstance(stmt, (ast.Pass, ast.Continue)):
+            continue
+        if (isinstance(stmt, ast.Expr)
+                and isinstance(stmt.value, ast.Constant)
+                and stmt.value.value is Ellipsis):
+            continue
+        return False
+    return True
+
+
+def _handler_reraises(handler: ast.ExceptHandler) -> bool:
+    return any(isinstance(n, ast.Raise) for n in ast.walk(handler))
+
+
+def _broad_exc_caught(type_node: ast.AST) -> bool:
+    nodes = (type_node.elts if isinstance(type_node, ast.Tuple)
+             else [type_node])
+    return any(leaf_name(n) in _BROAD_EXC_NAMES for n in nodes)
+
+
+def check_qk301(tree: ast.AST, path: str, pragmas: FilePragmas,
+                findings: List[Finding]) -> None:
+    parts = path.replace(os.sep, "/").split("/")
+    if config.SWALLOW_DIR_FRAGMENT not in parts:
+        return
+
+    def flag(node, msg):
+        if pragmas.disabled(node.lineno, "QK301"):
+            return
+        if pragmas.allows_swallow(node.lineno):
+            return
+        findings.append(Finding("QK301", path, node.lineno,
+                                node.col_offset, msg))
+
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Try):
+            continue
+        for h in node.handlers:
+            if h.type is None:
+                if not _handler_reraises(h):
+                    flag(h, "bare 'except:' swallows everything "
+                            "(including KeyboardInterrupt) — catch a "
+                            "concrete exception, re-raise, or document "
+                            "with # quakecheck: allow-swallow(<why>)")
+            elif _broad_exc_caught(h.type) and _handler_only_drops(h):
+                flag(h, "broad exception handler silently drops the "
+                        "error — count it, log it, degrade, or document "
+                        "with # quakecheck: allow-swallow(<why>)")
+
+
+# ---------------------------------------------------------------------------
 # QK100 — malformed pragmas
 # ---------------------------------------------------------------------------
 
@@ -1161,6 +1226,12 @@ def check_qk100(path: str, pragmas: FilePragmas,
                 "QK100", path, line, 0,
                 "allow-sync pragma without a reason — intentional syncs "
                 "must be documented: # quakecheck: allow-sync(<why>)"))
+        if p.allow_swallow and not p.allow_swallow_reason.strip():
+            findings.append(Finding(
+                "QK100", path, line, 0,
+                "allow-swallow pragma without a reason — intentional "
+                "swallows must be documented: "
+                "# quakecheck: allow-swallow(<why>)"))
         if p.bad_holds:
             findings.append(Finding(
                 "QK100", path, line, 0,
@@ -1187,6 +1258,7 @@ def lint_source(source: str, path: str,
     check_qk104(tree, path, pragmas, registry, findings)
     check_qk105(tree, path, pragmas, findings)
     check_qk2xx(tree, path, pragmas, findings)
+    check_qk301(tree, path, pragmas, findings)
     if select:
         # prefix match: --select QK2 picks the whole QK2xx family
         findings = [f for f in findings

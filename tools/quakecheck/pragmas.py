@@ -9,6 +9,12 @@ line a standalone pragma comment precedes):
       finding (QK100): the whole point is that intentional sync points
       are *documented*, not hidden.
 
+  ``# quakecheck: allow-swallow(<reason>)``
+      Documents an intentional broad exception swallow (QK301 only) —
+      a handler that really should drop everything, e.g. best-effort
+      telemetry.  Like allow-sync, the reason is mandatory; a reasonless
+      allow-swallow is itself a finding (QK100).
+
   ``# quakecheck: disable=QK102,QK105(<reason>)``
       Suppresses the listed rules on the line.  Reason optional but
       encouraged.
@@ -35,6 +41,8 @@ from dataclasses import dataclass, field
 from typing import Dict, List, Set
 
 _ALLOW_SYNC = re.compile(r"#\s*quakecheck:\s*allow-sync\s*(?:\((?P<reason>[^)]*)\))?")
+_ALLOW_SWALLOW = re.compile(
+    r"#\s*quakecheck:\s*allow-swallow\s*(?:\((?P<reason>[^)]*)\))?")
 _DISABLE = re.compile(r"#\s*quakecheck:\s*disable\s*=\s*(?P<rules>[A-Z0-9, ]+)"
                       r"\s*(?:\((?P<reason>[^)]*)\))?")
 _DEVICE_PATH = re.compile(r"#\s*quakecheck:\s*device-path\b")
@@ -45,6 +53,8 @@ _HOLDS = re.compile(r"#\s*quakecheck:\s*holds\s*\((?P<locks>[^)]*)\)")
 class LinePragmas:
     allow_sync: bool = False
     allow_sync_reason: str = ""
+    allow_swallow: bool = False
+    allow_swallow_reason: str = ""
     disabled: Set[str] = field(default_factory=set)
     device_path: bool = False
     holds: Set[str] = field(default_factory=set)
@@ -65,6 +75,14 @@ class FilePragmas:
     def bad_allow_sync(self, lineno: int) -> bool:
         p = self._line(lineno)
         return p.allow_sync and not p.allow_sync_reason.strip()
+
+    def allows_swallow(self, lineno: int) -> bool:
+        p = self._line(lineno)
+        return p.allow_swallow and bool(p.allow_swallow_reason.strip())
+
+    def bad_allow_swallow(self, lineno: int) -> bool:
+        p = self._line(lineno)
+        return p.allow_swallow and not p.allow_swallow_reason.strip()
 
     def disabled(self, lineno: int, rule: str) -> bool:
         return rule in self._line(lineno).disabled
@@ -117,6 +135,9 @@ def parse_pragmas(source: str) -> FilePragmas:
         if pragma.allow_sync:
             cur.allow_sync = True
             cur.allow_sync_reason = pragma.allow_sync_reason
+        if pragma.allow_swallow:
+            cur.allow_swallow = True
+            cur.allow_swallow_reason = pragma.allow_swallow_reason
         cur.disabled |= pragma.disabled
         cur.device_path = cur.device_path or pragma.device_path
         cur.holds |= pragma.holds
@@ -133,6 +154,11 @@ def _parse_comment(text: str) -> LinePragmas | None:
     if m:
         out.allow_sync = True
         out.allow_sync_reason = (m.group("reason") or "").strip()
+        hit = True
+    m = _ALLOW_SWALLOW.search(text)
+    if m:
+        out.allow_swallow = True
+        out.allow_swallow_reason = (m.group("reason") or "").strip()
         hit = True
     m = _DISABLE.search(text)
     if m:

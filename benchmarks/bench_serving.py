@@ -460,6 +460,142 @@ def run_chaos(n=20_000, dim=32, k=10, target=0.9, seed=0,
     return out
 
 
+def run_durability(n=20_000, dim=32, k=10, target=0.9, seed=0,
+                   write_ops=64, vectors_per_op=64,
+                   suffix_ladder=(16, 64, 256),
+                   max_durability_overhead=None,
+                   out_path=OUT_PATH, verbose=False):
+    """Durability cell (docs/durability.md): the WAL's write-path cost
+    and the recovery path's scaling.
+
+    Leg 1 replays an identical insert/delete stream through four
+    runtimes — no durability, then ``fsync=off`` / ``batch`` /
+    ``always`` — and reports per-op WAL append latency p50/p99 and the
+    write throughput each policy sustains.  ``--max-durability-overhead``
+    gates the fsync=batch throughput cost against the fsync=off leg
+    (the WAL framing itself is the off leg's cost).  Every durable leg
+    must also *recover*: after a clean close, ``recover_index`` must
+    reproduce the live index's fingerprint exactly.
+
+    Leg 2 measures recovery time against WAL-suffix length: one
+    checkpoint at attach, then L WAL-only write ops, then a timed
+    ``recover_index`` — the ladder shows replay cost growing with the
+    suffix, the checkpoint amortizing it away.
+    """
+    import copy
+    import tempfile
+
+    from repro.core.durability import recover_index
+    from repro.faults import index_state_fingerprint
+
+    ds = datasets.clustered(n, dim, n_clusters=max(n // 500, 16), seed=seed)
+    base = QuakeIndex.build(ds.vectors,
+                            config=QuakeConfig(metric=ds.metric,
+                                               recall_target=target))
+    rng = np.random.default_rng(seed + 3)
+    pool = datasets.queries_near(ds, 256, seed=seed + 1).astype(np.float32)
+    # one pre-generated write stream, replayed identically per leg (long
+    # enough for the largest recovery-ladder rung — fresh ids throughout)
+    ops, next_id = [], 10_000_000
+    for i in range(max(write_ops, *suffix_ladder)):
+        if i % 5 == 4 and next_id > 10_000_000:
+            drop = rng.integers(10_000_000, next_id, size=8)
+            ops.append(("delete", np.unique(drop)))
+        else:
+            x = pool[rng.integers(len(pool), size=vectors_per_op)] + \
+                rng.normal(0, 0.01, (vectors_per_op, dim)).astype(np.float32)
+            ids = np.arange(next_id, next_id + vectors_per_op)
+            next_id += vectors_per_op
+            ops.append(("insert", x.astype(np.float32), ids))
+
+    def replay_leg(policy, wal):
+        idx = copy.deepcopy(base)
+        scfg = ServingConfig(k=k, cache_entries=0, ticker=False,
+                             maint_min_ops=10 ** 9,
+                             wal_dir=wal, fsync=policy or "batch",
+                             ckpt_every_ops=None)
+        if wal is None:
+            scfg = ServingConfig(k=k, cache_entries=0, ticker=False,
+                                 maint_min_ops=10 ** 9)
+        lats = []
+        with ServingRuntime(idx, scfg) as rt:
+            t0 = time.perf_counter()
+            for op in ops[:write_ops]:
+                t1 = time.perf_counter()
+                if op[0] == "insert":
+                    rt.submit_insert(op[1], op[2])
+                else:
+                    rt.submit_delete(op[1])
+                lats.append(time.perf_counter() - t1)
+            wall = time.perf_counter() - t0
+            dstats = (rt.stats()["durability"] or {}) if wal else {}
+        lat = np.asarray(lats)
+        leg = {"ops_per_s": round(write_ops / max(wall, 1e-9), 1),
+               "p50_op_us": round(float(np.percentile(lat, 50)) * 1e6, 1),
+               "p99_op_us": round(float(np.percentile(lat, 99)) * 1e6, 1)}
+        if wal:
+            leg["wal_appends"] = dstats.get("wal_appends")
+            leg["wal_fsyncs"] = dstats.get("wal_fsyncs")
+            leg["wal_bytes"] = dstats.get("wal_bytes_written")
+            # recovery must reproduce the live index exactly
+            live_fp = index_state_fingerprint(idx)
+            rec, rep = recover_index(wal)
+            assert index_state_fingerprint(rec) == live_fp, \
+                f"{policy}: recovered fingerprint diverged from live index"
+            leg["recovered_ops"] = rep.write_ops_recovered
+        return leg
+
+    print(f"== serving durability: N={n} write_ops={write_ops} "
+          f"x{vectors_per_op} vectors ==")
+    legs = {}
+    with tempfile.TemporaryDirectory() as td:
+        legs["none"] = replay_leg(None, None)
+        for policy in ("off", "batch", "always"):
+            legs[policy] = replay_leg(policy, f"{td}/wal-{policy}")
+        for name, leg in legs.items():
+            print(f"  fsync={name:7s} {leg['ops_per_s']:>8} ops/s  "
+                  f"p50={leg['p50_op_us']}us p99={leg['p99_op_us']}us")
+
+        # -- leg 2: recovery time vs WAL-suffix length -----------------
+        ladder = []
+        for L in suffix_ladder:
+            wal = f"{td}/ladder-{L}"
+            idx = copy.deepcopy(base)
+            scfg = ServingConfig(k=k, cache_entries=0, ticker=False,
+                                 maint_min_ops=10 ** 9, wal_dir=wal,
+                                 fsync="off", ckpt_every_ops=None)
+            with ServingRuntime(idx, scfg) as rt:
+                for op in ops[:L]:
+                    if op[0] == "insert":
+                        rt.submit_insert(op[1], op[2])
+                    else:
+                        rt.submit_delete(op[1])
+            t0 = time.perf_counter()
+            rec, rep = recover_index(wal)
+            dt = time.perf_counter() - t0
+            ladder.append({"suffix_ops": int(min(L, len(ops))),
+                           "records_replayed": rep.records_replayed,
+                           "recovery_s": round(dt, 4)})
+            print(f"  recover: suffix={ladder[-1]['suffix_ops']:4d} ops  "
+                  f"{dt*1e3:7.1f}ms "
+                  f"({rep.records_replayed} records replayed)")
+
+    overhead = 1.0 - legs["batch"]["ops_per_s"] / \
+        max(legs["off"]["ops_per_s"], 1e-9)
+    out = {"n": n, "dim": dim, "write_ops": write_ops,
+           "vectors_per_op": vectors_per_op,
+           "legs": legs, "recovery_ladder": ladder,
+           "batch_vs_off_overhead": round(overhead, 4)}
+    print(f"durability: fsync=batch costs {overhead:+.1%} write "
+          f"throughput vs fsync=off; recovery verified on all legs")
+    merge_results(out_path, "serving_durability", out)
+    if max_durability_overhead is not None:
+        assert overhead <= max_durability_overhead, \
+            (f"fsync=batch overhead {overhead:.1%} > allowed "
+             f"{max_durability_overhead:.1%}")
+    return out
+
+
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--n", type=int, default=20_000)
@@ -476,7 +612,7 @@ if __name__ == "__main__":
     ap.add_argument("--max-recall-gap", type=float, default=None)
     ap.add_argument("--cell", default=None,
                     help="comma list of cells to run: replay, open-loop, "
-                         "overload, chaos (default: replay)")
+                         "overload, chaos, durability (default: replay)")
     ap.add_argument("--open-loop", action="store_true",
                     help="legacy alias for --cell open-loop")
     ap.add_argument("--threads", type=int, default=8)
@@ -497,6 +633,11 @@ if __name__ == "__main__":
     ap.add_argument("--ops-per-thread", type=int, default=40,
                     help="chaos cell: hammer ops per worker thread")
     ap.add_argument("--scan-fault-rate", type=float, default=0.05)
+    ap.add_argument("--write-ops", type=int, default=64,
+                    help="durability cell: write ops per leg")
+    ap.add_argument("--max-durability-overhead", type=float, default=None,
+                    help="durability cell gate: fsync=batch write-"
+                         "throughput cost vs fsync=off (e.g. 0.15)")
     ap.add_argument("--verbose", action="store_true")
     args = ap.parse_args()
     cells = (args.cell.split(",") if args.cell
@@ -528,6 +669,12 @@ if __name__ == "__main__":
                       ops_per_thread=args.ops_per_thread,
                       scan_rate=args.scan_fault_rate,
                       verbose=args.verbose)
+        elif cell == "durability":
+            run_durability(n=args.n, dim=args.dim, k=args.k,
+                           target=args.target, write_ops=args.write_ops,
+                           max_durability_overhead=(
+                               args.max_durability_overhead),
+                           verbose=args.verbose)
         elif cell == "replay":
             run(n=args.n, dim=args.dim, n_ops=args.ops,
                 queries_per_op=args.queries_per_op, k=args.k,

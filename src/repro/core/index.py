@@ -515,6 +515,28 @@ class QuakeIndex:
         return removed
 
     # ------------------------------------------------------------------
+    # Durability (core/durability.py, docs/durability.md)
+    # ------------------------------------------------------------------
+
+    def save(self, root: str) -> dict:
+        """Durable save: a full atomic checkpoint under ``root`` (next
+        free generation, CRC-manifested, fingerprinted).  Returns the
+        manifest.  ``root`` may already hold a WAL + older generations —
+        the new checkpoint supersedes them."""
+        from .durability import save_index  # late: avoid import cycle
+        return save_index(self, root)
+
+    @classmethod
+    def load(cls, root: str) -> "QuakeIndex":
+        """Load the newest *valid* checkpoint under ``root``, replay any
+        WAL suffix, and verify the stored fingerprint — the full
+        recovery path (``durability.recover_index``).  Raises
+        ``durability.RecoveryError`` when nothing valid survives."""
+        from .durability import recover_index  # late: avoid import cycle
+        idx, _report = recover_index(root)
+        return idx
+
+    # ------------------------------------------------------------------
     # Introspection
     # ------------------------------------------------------------------
 

@@ -62,6 +62,12 @@ class MutationJournal:
         self.max_entries = max_entries
         self._entries: Deque[JournalEntry] = deque()
         self._floor = 0            # deltas from versions < _floor are lost
+        self.overflowed = False    # ever trimmed? consumers older than the
+                                   # floor silently lose their delta path
+                                   # (delta_since -> None -> full rebuild),
+                                   # so the loss window is surfaced
+                                   # explicitly (ServingRuntime.stats())
+        self.overflow_count = 0    # entries trimmed so far
 
     # ------------------------------------------------------------------
     # Producer side (QuakeIndex / Maintainer)
@@ -78,6 +84,8 @@ class MutationJournal:
             structural=structural, reason=reason))
         while len(self._entries) > self.max_entries:
             self._floor = self._entries.popleft().version
+            self.overflowed = True
+            self.overflow_count += 1
         return self.version
 
     # ------------------------------------------------------------------

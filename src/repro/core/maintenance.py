@@ -66,6 +66,8 @@ def checkpoint_index(index: QuakeIndex) -> dict:
         "journal_version": j.version,
         "journal_entries": list(j._entries),
         "journal_floor": j._floor,
+        "journal_overflowed": j.overflowed,
+        "journal_overflow_count": j.overflow_count,
     }
 
 
@@ -80,6 +82,11 @@ def restore_index(index: QuakeIndex, ckpt: dict) -> None:
     j.version = ckpt["journal_version"]
     j._entries = deque(ckpt["journal_entries"])
     j._floor = ckpt["journal_floor"]
+    # .get: tolerate pre-overflow-flag checkpoints (dicts are in-process
+    # only, but restore must not KeyError on one taken before the flag
+    # existed in a mixed-version test)
+    j.overflowed = ckpt.get("journal_overflowed", j.overflowed)
+    j.overflow_count = ckpt.get("journal_overflow_count", j.overflow_count)
 
 
 @dataclass

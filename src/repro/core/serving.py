@@ -50,7 +50,7 @@ import logging
 import threading
 import time
 from collections import OrderedDict
-from dataclasses import dataclass, field
+from dataclasses import dataclass, field, replace
 from typing import Callable, Dict, Iterable, List, Optional, Sequence, Tuple
 
 import jax.numpy as jnp
@@ -62,6 +62,7 @@ from ..sanitize import TrackedLock, note_guarded
 from . import aps as aps_mod
 from . import multiquery as mq
 from .cost_model import LatencyModel
+from .durability import DurabilityManager, RecoveryReport, recover_index
 from .index import QuakeIndex
 from .maintenance import (Maintainer, MaintenanceReport, checkpoint_index,
                           restore_index)
@@ -165,6 +166,21 @@ class ServingConfig:
     maint_cost_drift: float = 0.15
     maint_access_shift: float = 0.6
     maint_max_ops: Optional[int] = 64
+    # --- durability (core/durability.py, docs/durability.md) ---
+    wal_dir: Optional[str] = None      # WAL + checkpoint directory; None
+                                       # disables durability (everything
+                                       # stays memory-resident)
+    fsync: str = "batch"               # WAL fsync policy: "always" (per
+                                       # append), "batch" (every
+                                       # wal_batch_ops appends), "off"
+                                       # (flush to OS only — a crash may
+                                       # lose the whole unsynced tail)
+    wal_batch_ops: int = 32            # fsync cadence under "batch"
+    ckpt_every_ops: Optional[int] = 256  # checkpoint every N logged write
+                                       # ops (None = only the attach
+                                       # baseline and forced /
+                                       # post-maintenance checkpoints)
+    keep_checkpoints: int = 2          # generations retained after prune
     # --- per-query latency budgets (docs/serving.md failure semantics) ---
     deadline_s: Optional[float] = None  # default per-query budget; a query
                                        # whose budget expires retires at
@@ -245,6 +261,18 @@ class ServingConfig:
                 or self.scan_backoff_max_s < 0:
             raise ValueError("scan retry/backoff knobs must be "
                              "non-negative")
+        if self.fsync not in ("always", "batch", "off"):
+            raise ValueError(f"fsync must be always/batch/off, "
+                             f"got {self.fsync!r}")
+        if self.wal_batch_ops < 1:
+            raise ValueError(f"wal_batch_ops must be >= 1 "
+                             f"(got {self.wal_batch_ops})")
+        if self.ckpt_every_ops is not None and self.ckpt_every_ops < 1:
+            raise ValueError(f"ckpt_every_ops must be >= 1 or None "
+                             f"(got {self.ckpt_every_ops})")
+        if self.keep_checkpoints < 1:
+            raise ValueError(f"keep_checkpoints must be >= 1 "
+                             f"(got {self.keep_checkpoints})")
 
 
 @dataclass
@@ -1271,6 +1299,17 @@ class ServingRuntime:
             scan_retries=self.cfg.scan_retries,
             scan_backoff_s=self.cfg.scan_backoff_s,
             scan_backoff_max_s=self.cfg.scan_backoff_max_s)
+        # durability: WAL + checkpoint store (docs/durability.md).  The
+        # attach writes a baseline checkpoint of the index as handed in;
+        # fault injection arms only after that (startup is not a
+        # steady-state crash point)
+        self.durability = (DurabilityManager(
+            index, self.cfg.wal_dir, fsync=self.cfg.fsync,
+            wal_batch_ops=self.cfg.wal_batch_ops,
+            ckpt_every_ops=self.cfg.ckpt_every_ops,
+            keep_checkpoints=self.cfg.keep_checkpoints, faults=faults)
+            if self.cfg.wal_dir is not None else None)
+        self.recovery_report: Optional[RecoveryReport] = None
         # queue entries: (qid, query, t_submit, absolute deadline | None)
         self._queue: List[Tuple[int, np.ndarray, float,
                                 Optional[float]]] = []
@@ -1330,12 +1369,33 @@ class ServingRuntime:
                     "— see stats()['ticker_wedged']")
             else:
                 self._ticker_thread = None
+        if self.durability is not None:
+            self.durability.close()
 
     def __enter__(self) -> "ServingRuntime":
         return self
 
     def __exit__(self, *exc) -> None:
         self.close()
+
+    @classmethod
+    def recover(cls, wal_dir: str,
+                config: Optional[ServingConfig] = None,
+                **kwargs) -> "ServingRuntime":
+        """Crash recovery entry point: rebuild the index from the newest
+        *valid* checkpoint plus the WAL suffix under ``wal_dir``
+        (fingerprint-verified, torn tail truncated —
+        ``durability.recover_index``), then serve it with durability
+        re-attached to the same directory.  The attach writes a fresh
+        baseline checkpoint of the recovered state, so the next crash
+        recovers from here even if the old WAL was damaged.  Details of
+        what was recovered are on ``runtime.recovery_report``."""
+        idx, report = recover_index(wal_dir)
+        cfg = replace(config, wal_dir=wal_dir) if config is not None \
+            else ServingConfig(wal_dir=wal_dir)
+        rt = cls(idx, cfg, **kwargs)
+        rt.recovery_report = report
+        return rt
 
     # -- admission -----------------------------------------------------
 
@@ -1664,6 +1724,11 @@ class ServingRuntime:
     def submit_insert(self, x: np.ndarray, ids: np.ndarray) -> None:
         with self._engine_lock:
             self._drain_engine()
+            if self.durability is not None:
+                # write-ahead, in engine-lock (= admission) order: if the
+                # append crashes, the op was never applied — recovery
+                # lands on the prefix before it
+                self.durability.log_insert(x, ids)
             self.index.insert(x, ids)
             if self.cfg.record_admissions:
                 with self._lock:
@@ -1675,6 +1740,8 @@ class ServingRuntime:
     def submit_delete(self, ids: np.ndarray) -> int:
         with self._engine_lock:
             self._drain_engine()
+            if self.durability is not None:
+                self.durability.log_delete(ids)
             removed = self.index.delete(ids)
             if self.cfg.record_admissions:
                 with self._lock:
@@ -1689,6 +1756,12 @@ class ServingRuntime:
             self._invalidate_cache_locked()
         self.maintenance.note_op()
         self.maybe_maintain()
+        # cadence checkpoint (callers hold the engine lock; never under
+        # the admission lock — this is disk I/O).  A post-maintenance
+        # forced checkpoint just above resets the cadence, so at most
+        # one checkpoint runs per write
+        if self.durability is not None and self.durability.checkpoint_due():
+            self.durability.checkpoint()
 
     def _invalidate_cache_locked(self) -> None:
         # callers hold self._lock (propagated seed); serializing the
@@ -1724,6 +1797,7 @@ class ServingRuntime:
                 if not force and self.maintenance.due() is None:
                     return None
                 self._drain_engine()
+                ver_before = self.index.version
                 ckpt = checkpoint_index(self.index)
                 try:
                     rep = self.maintenance.run_if_due(force=force)
@@ -1744,6 +1818,21 @@ class ServingRuntime:
                 if rep is not None:
                     with self._lock:
                         self._invalidate_cache_locked()
+                    if self.durability is not None \
+                            and self.index.version != ver_before:
+                        # maintenance effects are NOT replayable from the
+                        # WAL (they depend on served access statistics
+                        # the log does not carry), so a committed pass is
+                        # made durable immediately, before serving
+                        # resumes.  A crash before this checkpoint's
+                        # rename loses the pass — the same rollback
+                        # semantics as an in-process maintenance crash;
+                        # consistent, because no write follows it yet.
+                        self.durability.log_maintenance(
+                            f"splits={rep.splits},merges={rep.merges},"
+                            f"level_added={rep.level_added},"
+                            f"level_removed={rep.level_removed}")
+                        self.durability.checkpoint(force=True)
                 return rep
             finally:
                 with self._lock:
@@ -1806,4 +1895,12 @@ class ServingRuntime:
             "maintenance_runs": maint["runs"],
             "maintenance_reasons": maint["reasons"],
         })
+        # journal overflow surfaces the silent data-loss window: past the
+        # trim floor, delta consumers (snapshot caches, incremental
+        # checkpoints) fall back to full rebuilds (GIL-atomic scalars;
+        # no lock needed)
+        out["journal_overflowed"] = self.index.journal.overflowed
+        out["journal_overflow_count"] = self.index.journal.overflow_count
+        out["durability"] = (self.durability.stats()
+                             if self.durability is not None else None)
         return out

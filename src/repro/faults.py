@@ -29,6 +29,27 @@ survive:
                     ticker survives (counted), and a dead ticker thread
                     is restarted on the next admission.
 
+Durability I/O sites (``core/durability.py``, docs/durability.md) —
+these model *crashes*, not transient errors; after one fires the WAL
+tail is damaged and the process under test is considered dead until it
+recovers:
+
+  ``wal_torn_write``       a crash mid-append: a strict prefix of the
+                           framed record reaches the file, then
+                           :class:`InjectedFault` — recovery must
+                           truncate back to the last valid frame.
+  ``wal_corrupt_record``   a bit flip in the written frame (bad sector)
+                           — the CRC rejects it and recovery lands on
+                           the prefix before it.
+  ``ckpt_crash_before_rename``  the checkpoint temp directory is fully
+                           written and fsynced but the process dies
+                           before the atomic rename — recovery must
+                           fall back to the previous generation.
+  ``fsync_dropped``        fsync silently does nothing (lying disk /
+                           dropped barrier); no exception — the damage
+                           only shows at the next simulated crash,
+                           which loses the unsynced tail.
+
 Determinism: each site draws from its own ``numpy`` generator seeded by
 ``(seed, site)``, so whether the N-th *arrival at a site* fires is
 reproducible regardless of how threads interleave across sites.  A
@@ -69,7 +90,9 @@ class FaultInjector:
     ``slow_round`` fires.
     """
 
-    SITES = ("scan", "slow_round", "maintenance", "cache", "ticker")
+    SITES = ("scan", "slow_round", "maintenance", "cache", "ticker",
+             "wal_torn_write", "wal_corrupt_record",
+             "ckpt_crash_before_rename", "fsync_dropped")
 
     def __init__(self, seed: int = 0, rates: Optional[Dict[str, float]] = None,
                  delay_s: float = 0.0,
@@ -127,13 +150,37 @@ class FaultInjector:
 
 
 def index_state_fingerprint(index) -> bytes:
-    """Deterministic digest of an index's logical state: per-partition
-    (sorted external ids, vectors in id order) plus centroids, per
-    level.  Two indexes that served the same surviving operation stream
-    — e.g. a chaos run whose maintenance crashes all rolled back vs a
-    fault-free replay — must produce identical digests (the recovery
-    acceptance check in tests/test_serving_chaos.py and
-    ``bench_serving --chaos``)."""
+    """Deterministic digest of an index's logical state.  Two indexes
+    that served the same surviving operation stream — e.g. a chaos run
+    whose maintenance crashes all rolled back vs a fault-free replay,
+    or a crash-recovered index vs a replay of its recovered write
+    prefix — must produce identical digests (the recovery acceptance
+    checks in tests/test_serving_chaos.py, tests/test_durability.py,
+    and ``bench_serving --cell chaos,durability``).
+
+    Canonical-ordering contract (what makes the digest stable):
+
+    * Levels are hashed top-down in list order; per level, the centroid
+      matrix is hashed **verbatim** (contiguous float64) — partition
+      *numbering* is physical state, not presentation, because it feeds
+      ``kmeans.assign`` tie-breaks when routing future inserts.
+    * Upper levels hash each child array **sorted**: child-set
+      membership is logical state, but the in-array order is not hashed
+      here (it is preserved exactly by checkpoints for replay
+      determinism; see durability.write_checkpoint).
+    * Base-level partitions hash ``(ids sorted ascending, vectors
+      re-ordered to match)`` — so the *arrival order* of rows inside a
+      partition is canonicalized away.  Insert/delete sequences that
+      commute (touch disjoint ids and route to the same partitions)
+      therefore fingerprint identically regardless of interleaving.
+    * Everything else — sqnorms, journal, partition stats, maintenance
+      log, caches — is derived or session state and is deliberately
+      excluded; save/load round-trips must preserve the digest
+      (tests/test_durability.py::test_fingerprint_*).
+
+    Vectors and centroids are hashed as float64 *widenings* of their
+    stored float32 values, which is exact, so a digest match means
+    bit-identical stored state."""
     import hashlib
     h = hashlib.sha256()
     for level in index.levels:

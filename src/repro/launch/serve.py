@@ -278,7 +278,40 @@ def main(argv=None) -> None:
                     help="inject seeded faults, e.g. "
                          "scan=0.05,maintenance=1.0,cache=1.0")
     ap.add_argument("--fault-seed", type=int, default=0)
+    # crash-consistent durability (docs/durability.md)
+    ap.add_argument("--wal-dir", default=None,
+                    help="durability root: write-ahead log + checkpoints "
+                         "(off by default)")
+    ap.add_argument("--fsync", default="batch",
+                    choices=["always", "batch", "off"],
+                    help="WAL fsync policy (default batch)")
+    ap.add_argument("--recover", action="store_true",
+                    help="recover the index from --wal-dir (newest valid "
+                         "checkpoint + WAL replay), print the recovery "
+                         "report, and exit")
     args = ap.parse_args(argv)
+
+    if args.recover:
+        if args.wal_dir is None:
+            ap.error("--recover requires --wal-dir")
+        from ..core.serving import ServingRuntime as _RT
+        rt = _RT.recover(args.wal_dir,
+                         ServingConfig(k=args.k, fsync=args.fsync))
+        rep = rt.recovery_report
+        print(f"recovered {rt.index.num_vectors} vectors / "
+              f"{rt.index.num_partitions} partitions from {rep.root}")
+        print(f"  checkpoint generation {rep.generation} "
+              f"(wal_lsn={rep.ckpt_wal_lsn})")
+        print(f"  wal: last_lsn={rep.wal_last_lsn} tail={rep.wal_reason} "
+              f"truncated={rep.wal_truncated_bytes}B")
+        print(f"  replayed {rep.records_replayed} records "
+              f"({rep.inserts_replayed} inserts, "
+              f"{rep.deletes_replayed} deletes, "
+              f"{rep.fingerprint_checks} fingerprint checks)")
+        print(f"  write ops recovered: {rep.write_ops_recovered}")
+        print(f"  fingerprint: {rep.fingerprint}")
+        rt.close()
+        return
 
     wl = wikipedia.wikipedia_workload(
         n_total=args.n, dim=args.dim, months=args.months,
@@ -294,7 +327,8 @@ def main(argv=None) -> None:
         cache_entries=args.cache_entries, cache_bits=args.cache_bits,
         cache_tol=args.cache_tol,
         deadline_s=args.deadline_s, queue_cap=args.queue_cap,
-        queue_policy=args.queue_policy, govern=args.govern)
+        queue_policy=args.queue_policy, govern=args.govern,
+        wal_dir=args.wal_dir, fsync=args.fsync)
     if args.no_maintenance:
         scfg.maint_min_ops = 10 ** 9      # triggers never reach min_ops
         scfg.maint_max_ops = None

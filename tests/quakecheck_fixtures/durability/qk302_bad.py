@@ -1,0 +1,18 @@
+"""Seeded QK302 violations: durability-path writes that skip the fsync
+pairing and a manifest published in place instead of via temp+rename.
+Three findings: the unsynced WAL append, and the in-place manifest open
+(which is both unsynced and non-atomic)."""
+import os
+
+
+def append_record(path, frame):
+    # unsynced append: the OS may still be buffering this when power cuts
+    with open(path, "ab") as f:
+        f.write(frame)
+
+
+def write_manifest(root, payload):
+    # in-place manifest write: a crash mid-write leaves a torn file that
+    # recovery will select as the newest checkpoint (also unsynced)
+    with open(os.path.join(root, "MANIFEST.json"), "w") as f:
+        f.write(payload)

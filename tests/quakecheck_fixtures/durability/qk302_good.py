@@ -1,0 +1,32 @@
+"""Known-good twin of qk302_bad.py: every durable write fsyncs before
+closing, the manifest goes through temp + rename, a deliberate unsynced
+write carries a reasoned allow-nosync pragma, and read-mode opens are
+out of scope."""
+import os
+
+
+def append_record(path, frame):
+    with open(path, "ab") as f:
+        f.write(frame)
+        f.flush()
+        os.fsync(f.fileno())
+
+
+def write_manifest(root, payload):
+    tmp = os.path.join(root, ".tmp-MANIFEST.json")
+    with open(tmp, "w") as f:
+        f.write(payload)
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(tmp, os.path.join(root, "MANIFEST.json"))
+
+
+def tear_tail(path, size):
+    # quakecheck: allow-nosync(test helper models post-crash disk state)
+    with open(path, "r+b") as f:
+        f.truncate(size)
+
+
+def read_manifest(root):
+    with open(os.path.join(root, "MANIFEST.json"), "r") as f:
+        return f.read()

@@ -28,6 +28,7 @@ def rules_in(path):
     ("QK203", "qk203_bad.py", "qk203_good.py"),
     ("QK204", "qk204_bad.py", "qk204_good.py"),
     ("QK301", "repro/qk301_bad.py", "repro/qk301_good.py"),
+    ("QK302", "durability/qk302_bad.py", "durability/qk302_good.py"),
 ])
 def test_rule_flags_bad_passes_good(rule, bad, good):
     assert rules_in(FIXTURES / bad) == [rule]
@@ -46,6 +47,9 @@ def test_bad_fixtures_have_expected_counts():
     assert len(lint_paths([str(FIXTURES / "qk203_bad.py")])) == 1
     assert len(lint_paths([str(FIXTURES / "qk204_bad.py")])) == 1
     assert len(lint_paths([str(FIXTURES / "repro/qk301_bad.py")])) == 3
+    # qk302_bad: unsynced append + manifest open that is both unsynced
+    # and written in place
+    assert len(lint_paths([str(FIXTURES / "durability/qk302_bad.py")])) == 3
 
 
 def test_qk100_reasonless_allow_sync():
@@ -68,11 +72,26 @@ def test_qk100_reasonless_allow_swallow():
     assert all(f.rule != "QK301" for f in lint_source(src, "bench/t.py"))
 
 
+def test_qk100_reasonless_allow_nosync():
+    # an allow-nosync with no reason is itself a finding, and it does
+    # not suppress the unsynced write it sits on (mirrors allow-sync)
+    src = ("def tear(path, size):\n"
+           "    with open(path, 'r+b') as f:"
+           "  # quakecheck: allow-nosync()\n"
+           "        f.truncate(size)\n")
+    rules = sorted({f.rule for f in
+                    lint_source(src, "src/repro/core/durability.py")})
+    assert rules == ["QK100", "QK302"]
+    # outside a durability path the rule stays silent (pragma still bad)
+    assert sorted({f.rule for f in lint_source(src, "bench/t.py")}) \
+        == ["QK100"]
+
+
 def test_fixture_dir_as_a_whole():
     findings = lint_paths([str(FIXTURES)])
     assert {f.rule for f in findings} == \
         {"QK100", "QK101", "QK102", "QK103", "QK104", "QK105",
-         "QK201", "QK202", "QK203", "QK204", "QK301"}
+         "QK201", "QK202", "QK203", "QK204", "QK301", "QK302"}
     assert all("good" not in f.path for f in findings)
 
 

@@ -188,6 +188,25 @@ INSTANCE_ATTRS = {
 # ``# quakecheck: allow-swallow(<why>)``.
 SWALLOW_DIR_FRAGMENT = "repro"
 
+# --------------------------------------------------------------------------
+# QK302 — durability I/O discipline (docs/durability.md)
+# --------------------------------------------------------------------------
+# Path fragment the durability rules apply to: a path component equal to
+# "durability" (fixture dirs) or starting with "durability." (the module
+# itself).  In scope, every write-mode ``open`` must be paired with an
+# fsync in the same function (or carry # quakecheck: allow-nosync(<why>)),
+# and manifest/checkpoint files must be written via the temp + rename
+# idiom, never in place.
+DURABILITY_PATH_FRAGMENT = "durability"
+# Call leaf names that count as making the write durable.
+FSYNC_CALLS = {"fsync", "_fsync", "sync", "fdatasync"}
+# Call leaf names that count as the atomic-publish step.
+RENAME_CALLS = {"rename", "replace", "renames"}
+# Lowercase substrings of a written path literal that mark it as a
+# manifest / checkpoint (the files whose partial state must never be
+# observable in place).
+MANIFEST_HINTS = ("manifest", "ckpt", "checkpoint")
+
 # Guarded fields whose values are immutable scalars: reading them without
 # the lock can tear a *snapshot* but can never leak a mutable alias, so
 # QK204 (escaping reference) skips them.

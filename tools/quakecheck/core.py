@@ -39,6 +39,7 @@ RULES = {
     "QK203": "blocking call while holding an admission lock",
     "QK204": "guarded mutable state escapes its lock scope",
     "QK301": "swallowed exception in runtime path",
+    "QK302": "durability write without fsync / atomic-rename discipline",
 }
 
 
@@ -1215,6 +1216,109 @@ def check_qk301(tree: ast.AST, path: str, pragmas: FilePragmas,
 
 
 # ---------------------------------------------------------------------------
+# QK302 — durability I/O discipline (docs/durability.md).  Scoped to
+# config.DURABILITY_PATH_FRAGMENT paths; in scope, a write-mode open()
+# must be paired with an fsync in the same function (a write the OS may
+# still be buffering is not durable), and manifest/checkpoint files must
+# be published via temp + rename, never written in place.  An intentional
+# unsynced write carries # quakecheck: allow-nosync(<why>).
+# ---------------------------------------------------------------------------
+
+_WRITE_MODE_CHARS = set("wax+")
+
+
+def _in_durability_path(path: str) -> bool:
+    parts = path.replace(os.sep, "/").split("/")
+    frag = config.DURABILITY_PATH_FRAGMENT
+    return any(p == frag or p.startswith(frag + ".") for p in parts)
+
+
+def _open_write_mode(call: ast.Call) -> bool:
+    """True for ``open(..., mode)`` calls whose mode literal writes."""
+    if leaf_name(call.func) != "open":
+        return False
+    mode: Optional[ast.AST] = None
+    if len(call.args) >= 2:
+        mode = call.args[1]
+    for kw in call.keywords:
+        if kw.arg == "mode":
+            mode = kw.value
+    if not (isinstance(mode, ast.Constant) and isinstance(mode.value, str)):
+        return False   # default "r", or dynamic — not provably a write
+    return bool(_WRITE_MODE_CHARS & set(mode.value))
+
+
+def _path_arg_hints_manifest(call: ast.Call) -> bool:
+    """True when the path operand of ``open`` contains a string literal
+    naming a manifest/checkpoint (config.MANIFEST_HINTS)."""
+    target: Optional[ast.AST] = call.args[0] if call.args else None
+    for kw in call.keywords:
+        if kw.arg == "file":
+            target = kw.value
+    if target is None:
+        return False
+    for n in ast.walk(target):
+        if isinstance(n, ast.Constant) and isinstance(n.value, str):
+            low = n.value.lower()
+            if any(h in low for h in config.MANIFEST_HINTS):
+                return True
+    return False
+
+
+def _shallow_nodes(func: ast.AST) -> Iterable[ast.AST]:
+    """Walk a function body without descending into nested defs/classes —
+    the pairing contract is per-function."""
+    stack = list(func.body)
+    while stack:
+        node = stack.pop()
+        yield node
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.ClassDef)):
+            continue
+        stack.extend(ast.iter_child_nodes(node))
+
+
+def check_qk302(tree: ast.AST, path: str, pragmas: FilePragmas,
+                findings: List[Finding]) -> None:
+    if not _in_durability_path(path):
+        return
+
+    for func in ast.walk(tree):
+        if not isinstance(func, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue
+        write_opens: List[ast.Call] = []
+        has_fsync = False
+        has_rename = False
+        for node in _shallow_nodes(func):
+            if not isinstance(node, ast.Call):
+                continue
+            if _open_write_mode(node):
+                write_opens.append(node)
+            name = leaf_name(node.func)
+            if name in config.FSYNC_CALLS:
+                has_fsync = True
+            if name in config.RENAME_CALLS:
+                has_rename = True
+        for call in write_opens:
+            if pragmas.disabled(call.lineno, "QK302"):
+                continue
+            if not has_fsync and not pragmas.allows_nosync(call.lineno):
+                findings.append(Finding(
+                    "QK302", path, call.lineno, call.col_offset,
+                    f"write-mode open in '{func.name}' with no fsync in "
+                    "the same function — an unsynced write is not "
+                    "durable: fsync before closing, or document with "
+                    "# quakecheck: allow-nosync(<why>)"))
+            if _path_arg_hints_manifest(call) and not has_rename:
+                findings.append(Finding(
+                    "QK302", path, call.lineno, call.col_offset,
+                    f"manifest/checkpoint written in place in "
+                    f"'{func.name}' — a crash mid-write leaves a torn "
+                    "file that validates as the newest state: write to "
+                    "a temp name and publish with os.rename/os.replace"))
+
+
+# ---------------------------------------------------------------------------
 # QK100 — malformed pragmas
 # ---------------------------------------------------------------------------
 
@@ -1232,6 +1336,12 @@ def check_qk100(path: str, pragmas: FilePragmas,
                 "allow-swallow pragma without a reason — intentional "
                 "swallows must be documented: "
                 "# quakecheck: allow-swallow(<why>)"))
+        if p.allow_nosync and not p.allow_nosync_reason.strip():
+            findings.append(Finding(
+                "QK100", path, line, 0,
+                "allow-nosync pragma without a reason — intentional "
+                "unsynced writes must be documented: "
+                "# quakecheck: allow-nosync(<why>)"))
         if p.bad_holds:
             findings.append(Finding(
                 "QK100", path, line, 0,
@@ -1259,6 +1369,7 @@ def lint_source(source: str, path: str,
     check_qk105(tree, path, pragmas, findings)
     check_qk2xx(tree, path, pragmas, findings)
     check_qk301(tree, path, pragmas, findings)
+    check_qk302(tree, path, pragmas, findings)
     if select:
         # prefix match: --select QK2 picks the whole QK2xx family
         findings = [f for f in findings

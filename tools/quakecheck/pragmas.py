@@ -15,6 +15,12 @@ line a standalone pragma comment precedes):
       telemetry.  Like allow-sync, the reason is mandatory; a reasonless
       allow-swallow is itself a finding (QK100).
 
+  ``# quakecheck: allow-nosync(<reason>)``
+      Documents an intentional unsynced file write in a durability path
+      (QK302 only) — e.g. a test helper that deliberately models a
+      crash's half-written state.  The reason is mandatory; a reasonless
+      allow-nosync is itself a finding (QK100).
+
   ``# quakecheck: disable=QK102,QK105(<reason>)``
       Suppresses the listed rules on the line.  Reason optional but
       encouraged.
@@ -43,6 +49,8 @@ from typing import Dict, List, Set
 _ALLOW_SYNC = re.compile(r"#\s*quakecheck:\s*allow-sync\s*(?:\((?P<reason>[^)]*)\))?")
 _ALLOW_SWALLOW = re.compile(
     r"#\s*quakecheck:\s*allow-swallow\s*(?:\((?P<reason>[^)]*)\))?")
+_ALLOW_NOSYNC = re.compile(
+    r"#\s*quakecheck:\s*allow-nosync\s*(?:\((?P<reason>[^)]*)\))?")
 _DISABLE = re.compile(r"#\s*quakecheck:\s*disable\s*=\s*(?P<rules>[A-Z0-9, ]+)"
                       r"\s*(?:\((?P<reason>[^)]*)\))?")
 _DEVICE_PATH = re.compile(r"#\s*quakecheck:\s*device-path\b")
@@ -55,6 +63,8 @@ class LinePragmas:
     allow_sync_reason: str = ""
     allow_swallow: bool = False
     allow_swallow_reason: str = ""
+    allow_nosync: bool = False
+    allow_nosync_reason: str = ""
     disabled: Set[str] = field(default_factory=set)
     device_path: bool = False
     holds: Set[str] = field(default_factory=set)
@@ -83,6 +93,14 @@ class FilePragmas:
     def bad_allow_swallow(self, lineno: int) -> bool:
         p = self._line(lineno)
         return p.allow_swallow and not p.allow_swallow_reason.strip()
+
+    def allows_nosync(self, lineno: int) -> bool:
+        p = self._line(lineno)
+        return p.allow_nosync and bool(p.allow_nosync_reason.strip())
+
+    def bad_allow_nosync(self, lineno: int) -> bool:
+        p = self._line(lineno)
+        return p.allow_nosync and not p.allow_nosync_reason.strip()
 
     def disabled(self, lineno: int, rule: str) -> bool:
         return rule in self._line(lineno).disabled
@@ -138,6 +156,9 @@ def parse_pragmas(source: str) -> FilePragmas:
         if pragma.allow_swallow:
             cur.allow_swallow = True
             cur.allow_swallow_reason = pragma.allow_swallow_reason
+        if pragma.allow_nosync:
+            cur.allow_nosync = True
+            cur.allow_nosync_reason = pragma.allow_nosync_reason
         cur.disabled |= pragma.disabled
         cur.device_path = cur.device_path or pragma.device_path
         cur.holds |= pragma.holds
@@ -159,6 +180,11 @@ def _parse_comment(text: str) -> LinePragmas | None:
     if m:
         out.allow_swallow = True
         out.allow_swallow_reason = (m.group("reason") or "").strip()
+        hit = True
+    m = _ALLOW_NOSYNC.search(text)
+    if m:
+        out.allow_nosync = True
+        out.allow_nosync_reason = (m.group("reason") or "").strip()
         hit = True
     m = _DISABLE.search(text)
     if m:

@@ -31,10 +31,21 @@ import numpy as np
 from repro.core import QuakeConfig, QuakeIndex, ServingConfig, ServingRuntime
 from repro.data import datasets, workload
 from repro.launch.serve import replay_per_op, replay_runtime
+from repro.obs import summarize
 
 from .common import merge_results
 
 OUT_PATH = "results/perf_quake.json"
+
+
+def _metrics_subset(snapshot: dict, prefixes) -> dict:
+    """The registry-backed slice of a runtime's unified metrics snapshot
+    that a cell reports — keys are the stable dotted exposition names
+    (docs/observability.md), so downstream dashboards can consume the
+    bench JSON and the Prometheus dump interchangeably."""
+    pre = tuple(prefixes)
+    return {k_: v for k_, v in sorted(snapshot.items())
+            if k_.startswith(pre)}
 
 
 def skewed_mix(n=20_000, dim=32, n_ops=24, queries_per_op=256,
@@ -183,13 +194,14 @@ def run_open_loop(n=20_000, dim=32, k=10, target=0.9, seed=0,
         rt.drain()
         wall = time.perf_counter() - t0
         assert not errors, errors
-        lat = np.asarray([rt.result(q).latency_s for q in qids])
+        lat = summarize([rt.result(q).latency_s for q in qids])
         st = rt.stats()
+        ms = rt.metrics_snapshot()
         assert st["queue_depth"] == 0
         assert rt._ticker_error is None
 
-    p50 = float(np.percentile(lat, 50)) * 1e6
-    p99 = float(np.percentile(lat, 99)) * 1e6
+    p50 = lat["p50"] * 1e6
+    p99 = lat["p99"] * 1e6
     assert np.isfinite(p50) and np.isfinite(p99), \
         f"open-loop latency percentiles not finite: p50={p50} p99={p99}"
     out = {"n": n, "dim": dim, "threads": threads,
@@ -198,9 +210,12 @@ def run_open_loop(n=20_000, dim=32, k=10, target=0.9, seed=0,
            "achieved_qps": round(len(qids) / max(wall, 1e-9), 1),
            "p50_latency_us": round(p50, 1),
            "p99_latency_us": round(p99, 1),
-           "mean_latency_us": round(float(lat.mean()) * 1e6, 1),
+           "mean_latency_us": round(lat["mean"] * 1e6, 1),
            "admitted_batches": st["admitted_batches"],
-           "riding_savings": st["riding_savings"]}
+           "riding_savings": st["riding_savings"],
+           "metrics": _metrics_subset(ms, (
+               "serving.latency_s.", "serving.queue_wait_s.",
+               "scheduler.", "serving.flushes"))}
     print(f"open-loop: {out['achieved_qps']} qps achieved "
           f"(offered {rate}), p50={out['p50_latency_us']}us "
           f"p99={out['p99_latency_us']}us over "
@@ -287,6 +302,7 @@ def run_overload(n=20_000, dim=32, k=10, target=0.9, seed=0,
         wall = time.perf_counter() - t0
         assert not errors, errors
         st = rt.stats()
+        ms = rt.metrics_snapshot()
         results = [rt.result(q) for q in qids]
 
     # -- acceptance: zero non-terminal queries -------------------------
@@ -299,10 +315,9 @@ def run_overload(n=20_000, dim=32, k=10, target=0.9, seed=0,
     n_sub = len(results)
     counts = st["status_counts"]
     answered = [r for r in results if r.status != "SHED"]
-    lat = np.asarray([r.latency_s for r in answered]) if answered else \
-        np.asarray([0.0])
-    p50 = float(np.percentile(lat, 50)) * 1e3
-    p99 = float(np.percentile(lat, 99)) * 1e3
+    lat = summarize([r.latency_s for r in answered])
+    p50 = lat["p50"] * 1e3
+    p99 = lat["p99"] * 1e3
     out = {"n": n, "dim": dim, "threads": threads,
            "sustainable_qps": round(sustainable, 1),
            "offered_rate_qps": round(rate, 1),
@@ -317,7 +332,11 @@ def run_overload(n=20_000, dim=32, k=10, target=0.9, seed=0,
            "p99_latency_ms": round(p99, 2),
            "governor": st["governor"],
            "effective_target": st["effective_target"],
-           "probe_frac": st["probe_frac"]}
+           "probe_frac": st["probe_frac"],
+           "metrics": _metrics_subset(ms, (
+               "serving.latency_s.", "serving.queue_wait_s.",
+               "serving.status.", "serving.governor.",
+               "calibration.", "scheduler.rounds"))}
     print(f"overload: {out['achieved_qps']} qps absorbed, "
           f"shed={out['shed_fraction']:.1%} "
           f"partial={out['partial_fraction']:.1%} "
@@ -411,6 +430,7 @@ def run_chaos(n=20_000, dim=32, k=10, target=0.9, seed=0,
         wall = time.perf_counter() - t0
         assert not errors, errors
         st = rt.stats()
+        ms = rt.metrics_snapshot()
         log = rt.admission_log()
         results = [rt.result(q) for q in qids]
         fp = index_state_fingerprint(idx)
@@ -452,7 +472,10 @@ def run_chaos(n=20_000, dim=32, k=10, target=0.9, seed=0,
            "cache_disabled": st["cache_disabled"],
            "ticker_errors": st["ticker_errors"],
            "ticker_restarts": st["ticker_restarts"],
-           "replay_fingerprint_match": replay_ok}
+           "replay_fingerprint_match": replay_ok,
+           "metrics": _metrics_subset(ms, (
+               "serving.status.", "faults.", "sanitize.",
+               "maintenance.", "trace."))}
     print(f"chaos: {st['queries_submitted']} queries all terminal "
           f"{dict(st['status_counts'])}; trips={out['fault_trips']}; "
           f"replay fingerprint match={replay_ok}")
@@ -529,14 +552,17 @@ def run_durability(n=20_000, dim=32, k=10, target=0.9, seed=0,
                 lats.append(time.perf_counter() - t1)
             wall = time.perf_counter() - t0
             dstats = (rt.stats()["durability"] or {}) if wal else {}
-        lat = np.asarray(lats)
+            dmetrics = _metrics_subset(rt.metrics_snapshot(),
+                                       ("durability.",)) if wal else {}
+        lat = summarize(lats)
         leg = {"ops_per_s": round(write_ops / max(wall, 1e-9), 1),
-               "p50_op_us": round(float(np.percentile(lat, 50)) * 1e6, 1),
-               "p99_op_us": round(float(np.percentile(lat, 99)) * 1e6, 1)}
+               "p50_op_us": round(lat["p50"] * 1e6, 1),
+               "p99_op_us": round(lat["p99"] * 1e6, 1)}
         if wal:
             leg["wal_appends"] = dstats.get("wal_appends")
             leg["wal_fsyncs"] = dstats.get("wal_fsyncs")
             leg["wal_bytes"] = dstats.get("wal_bytes_written")
+            leg["metrics"] = dmetrics
             # recovery must reproduce the live index exactly
             live_fp = index_state_fingerprint(idx)
             rec, rep = recover_index(wal)
@@ -596,6 +622,150 @@ def run_durability(n=20_000, dim=32, k=10, target=0.9, seed=0,
     return out
 
 
+def run_obs_overhead(n=20_000, dim=32, k=10, target=0.9, seed=0,
+                     n_queries=2000, flush_size=32, repeats=20,
+                     max_obs_overhead=None, out_path=OUT_PATH,
+                     verbose=False):
+    """Obs-overhead cell (docs/observability.md): the cost of the
+    metrics registry + query tracer + calibration tracker on the hot
+    serving path.
+
+    Two closed-loop legs over the *same* prebuilt index replay an
+    identical query stream with ``ServingConfig.metrics`` on and off
+    (``record_stats=False`` on both, so the delta is observability
+    alone).  The legs are *interleaved batch-by-batch*: each query
+    batch is served by both runtimes back-to-back (order alternating
+    per batch), so slowly-drifting machine noise — thermal ramps,
+    allocator state, scheduler placement — hits both sides of a pair
+    nearly identically and cancels in the ratio.  The gate
+    (``--max-obs-overhead``) bounds the **median paired per-batch
+    ratio** ``dt_on / dt_off`` minus one, over every repeat after the
+    first (the warmup repeat re-touches both runtimes' caches and is
+    excluded).  Per-leg p50s (the shared ``summarize`` path) are
+    reported alongside for context.
+
+    The on-leg also exercises the calibration tracker end to end:
+    estimated recall per query is compared against brute-force ground
+    truth and the rolling latency/recall calibration errors are
+    reported as registry metrics.
+    """
+    ds = datasets.clustered(n, dim, n_clusters=max(n // 500, 16), seed=seed)
+    idx = QuakeIndex.build(ds.vectors,
+                           config=QuakeConfig(metric=ds.metric,
+                                              recall_target=target))
+    pool = datasets.queries_near(ds, 512, seed=seed + 1).astype(np.float32)
+    order = np.random.default_rng(seed + 5).integers(
+        len(pool), size=n_queries)
+
+    from repro.data.workload import IncrementalGroundTruth
+    gt = IncrementalGroundTruth(ds, np.arange(n)).topk(pool, k)
+
+    def make_rt(metrics_on):
+        scfg = ServingConfig(k=k, recall_target=target,
+                             flush_size=flush_size, ticker=False,
+                             cache_entries=0, maint_min_ops=10 ** 9,
+                             record_stats=False, metrics=metrics_on)
+        rt = ServingRuntime(idx, scfg)
+        rt.submit_batch(pool[:flush_size])     # warm the scan shapes
+        rt.drain()
+        return rt
+
+    def measure_pair(rep, rt_on, rt_off):
+        """One interleaved replay: every batch is served by BOTH
+        runtimes back-to-back (order flipping per batch index so warm
+        caches from the first pass don't systematically favour one
+        side).  Returns per-leg per-batch-index latency lists and the
+        on-leg's qid->pool-row pairs (for the calibration pass).  GC
+        is paused
+        for the timed region — the tracer's span dicts are garbage the
+        metrics-off leg never allocates, and an unlucky collection
+        inside a batch would otherwise swamp the few-percent effect
+        under measurement."""
+        import gc
+        lats = {True: [], False: []}
+        ratios, pairs_on = [], []
+        gc.collect()
+        gc_was_on = gc.isenabled()
+        gc.disable()
+        try:
+            for bi, i in enumerate(range(0, len(order), flush_size)):
+                rows = order[i:i + flush_size]
+                dt = {}
+                sides = ((True, rt_on), (False, rt_off))
+                if (rep + bi) % 2:
+                    sides = sides[::-1]
+                for on, rt in sides:
+                    t0 = time.perf_counter()
+                    qids_ = rt.submit_batch(pool[rows])
+                    rt.drain()
+                    dt[on] = ((time.perf_counter() - t0)
+                              / max(len(rows), 1))
+                    lats[on].append(dt[on])
+                    if on:
+                        pairs_on.extend(zip(qids_, rows))
+                ratios.append(dt[True] / max(dt[False], 1e-12))
+        finally:
+            if gc_was_on:
+                gc.enable()
+        return lats, ratios, pairs_on
+
+    print(f"== serving obs-overhead: N={n} queries={n_queries} "
+          f"flush={flush_size} repeats={repeats} ==")
+    all_lats = {True: [], False: []}
+    all_ratios = []
+    rt_on, rt_off = make_rt(True), make_rt(False)
+    try:
+        for rep in range(repeats):
+            lats, ratios, pairs = measure_pair(rep, rt_on, rt_off)
+            all_lats[True].extend(lats[True])
+            all_lats[False].extend(lats[False])
+            if rep > 0:            # repeat 0 is warmup
+                all_ratios.extend(ratios)
+            for qid, row in pairs:
+                r = rt_on.result(qid)
+                true_rec = len(set(np.asarray(r.ids).tolist())
+                               & set(gt[row].tolist())) / k
+                if np.isfinite(r.recall_estimate):
+                    rt_on.obs.calibration.record_recall(
+                        r.recall_estimate, true_rec)
+        assert rt_off.obs is None and rt_on.obs is not None
+        ms = rt_on.metrics_snapshot()
+    finally:
+        rt_on.close()
+        rt_off.close()
+
+    best = {on: summarize(all_lats[on]) for on in (True, False)}
+    p50_on, p50_off = best[True]["p50"], best[False]["p50"]
+    # gate on the median paired ratio: each ratio compares the same
+    # batch served by both runtimes within ~1 ms, so machine-noise
+    # drift (±10%+ between runs on shared containers) cancels, and the
+    # median over a few hundred pairs shrinks the per-pair jitter
+    overhead = float(np.median(all_ratios)) - 1.0
+    out = {"n": n, "dim": dim, "n_queries": n_queries,
+           "flush_size": flush_size, "repeats": repeats,
+           "p50_on_us": round(p50_on * 1e6, 2),
+           "p50_off_us": round(p50_off * 1e6, 2),
+           "p99_on_us": round(best[True]["p99"] * 1e6, 2),
+           "p99_off_us": round(best[False]["p99"] * 1e6, 2),
+           "obs_overhead": round(overhead, 4),
+           "paired_batches": len(all_ratios),
+           "calibration": _metrics_subset(ms, ("calibration.",)),
+           "metrics": _metrics_subset(ms, (
+               "serving.latency_s.", "scheduler.", "trace."))}
+    print(f"obs-overhead: p50 on={out['p50_on_us']}us "
+          f"off={out['p50_off_us']}us; paired median {overhead:+.2%}; "
+          f"latency_rel_err="
+          f"{out['calibration'].get('calibration.latency.rel_err')} "
+          f"recall_abs_err="
+          f"{out['calibration'].get('calibration.recall.abs_err')}")
+    merge_results(out_path, "serving_obs_overhead", out)
+    if max_obs_overhead is not None:
+        assert overhead <= max_obs_overhead, \
+            (f"observability overhead {overhead:+.2%} > allowed "
+             f"{max_obs_overhead:.0%} (median paired per-batch ratio)")
+    return out
+
+
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--n", type=int, default=20_000)
@@ -612,7 +782,8 @@ if __name__ == "__main__":
     ap.add_argument("--max-recall-gap", type=float, default=None)
     ap.add_argument("--cell", default=None,
                     help="comma list of cells to run: replay, open-loop, "
-                         "overload, chaos, durability (default: replay)")
+                         "overload, chaos, durability, obs-overhead "
+                         "(default: replay)")
     ap.add_argument("--open-loop", action="store_true",
                     help="legacy alias for --cell open-loop")
     ap.add_argument("--threads", type=int, default=8)
@@ -638,6 +809,12 @@ if __name__ == "__main__":
     ap.add_argument("--max-durability-overhead", type=float, default=None,
                     help="durability cell gate: fsync=batch write-"
                          "throughput cost vs fsync=off (e.g. 0.15)")
+    ap.add_argument("--max-obs-overhead", type=float, default=None,
+                    help="obs-overhead cell gate: metrics+tracing cost "
+                         "on p50 per-op latency vs metrics-off "
+                         "(e.g. 0.05)")
+    ap.add_argument("--obs-repeats", type=int, default=20,
+                    help="obs-overhead cell: alternating repeats per leg")
     ap.add_argument("--verbose", action="store_true")
     args = ap.parse_args()
     cells = (args.cell.split(",") if args.cell
@@ -675,6 +852,14 @@ if __name__ == "__main__":
                            max_durability_overhead=(
                                args.max_durability_overhead),
                            verbose=args.verbose)
+        elif cell == "obs-overhead":
+            run_obs_overhead(n=args.n, dim=args.dim, k=args.k,
+                             target=args.target,
+                             n_queries=args.open_loop_queries,
+                             flush_size=args.flush_size,
+                             repeats=args.obs_repeats,
+                             max_obs_overhead=args.max_obs_overhead,
+                             verbose=args.verbose)
         elif cell == "replay":
             run(n=args.n, dim=args.dim, n_ops=args.ops,
                 queries_per_op=args.queries_per_op, k=args.k,

@@ -46,6 +46,16 @@ class LatencyModel:
         return replace(self, c_fixed=self.c_fixed * factor,
                        c_lin=self.c_lin * factor, c_sel=self.c_sel * factor)
 
+    def predict_scan_ns(self, sizes) -> float:
+        """Predicted wall time (ns) of one scan over partitions of the
+        given sizes: Eq. (2) with A=1 per scanned partition.  This is the
+        prediction the calibration tracker (repro.obs) compares against
+        observed scan wall time — its rolling error is the drift signal."""
+        s = np.asarray(sizes, dtype=np.float64)
+        if s.size == 0:
+            return 0.0
+        return float(np.sum(self(s)))
+
 
 def fit_latency_model(sizes: np.ndarray, lats_ns: np.ndarray,
                       dim: int = 0) -> LatencyModel:

@@ -117,6 +117,13 @@ class Level:
             return np.asarray([len(self.vectors[j]) for j in range(n)])
         return np.asarray([len(self.children[j]) for j in range(n)])
 
+    def sizes_of(self, idx) -> np.ndarray:
+        """Sizes of just the given partitions — the per-round
+        calibration hook uses this instead of ``sizes()[idx]`` so the
+        cost scales with the scanned set, not the level width."""
+        store = self.vectors if self.vectors is not None else self.children
+        return np.asarray([len(store[j]) for j in np.asarray(idx).ravel()])
+
 
 @dataclass
 class SearchResult:

@@ -891,8 +891,13 @@ def run_round_loop(plan: RoundPlan, k: int, target: float, table,
     cols = np.arange(m)[None, :]
     within = cols < counts[:, None]
     p_hi = int(plan.seq.max()) + 1
+    # the pinned per-round trace schema (docs/observability.md; a test
+    # in tests/test_observability.py asserts these exact keys): parallel
+    # per-round lists plus two scalar outcome flags — the serving trace
+    # emitter and benchmarks/common.round_trajectory both rely on it
     trace = {"round_live": [], "round_partitions": [],
              "round_vectors": [], "round_comparisons": [],
+             "round_kth": [], "round_wall_s": [],
              "budget_expired": False, "timed_out_rows": 0}
     clock = clock or time.perf_counter
     t0 = clock()
@@ -917,6 +922,7 @@ def run_round_loop(plan: RoundPlan, k: int, target: float, table,
         take = avail & in_union[plan.seq]
         scanned |= take
         n_rounds += 1
+        t_round = clock()
         trace["round_live"].append(int(live.sum()))
         d, i, st = scan_round(take, kept)
         td, ti = ops.topk_merge(td, ti, d, i, k_keep)
@@ -936,6 +942,12 @@ def run_round_loop(plan: RoundPlan, k: int, target: float, table,
                           0.0).sum(axis=1)
         r_est[rows[full_heap]] = r[full_heap]
         live[rows[full_heap & (r >= target)]] = False
+        # per-round running k-th distance (median over rows whose heap
+        # is full) and round wall time — the topk_merge above already
+        # synced, so kth is host data and this costs no extra pull
+        trace["round_kth"].append(
+            float(np.median(kth[full_heap])) if full_heap.any() else None)
+        trace["round_wall_s"].append(clock() - t_round)
     stats = {k_: int(np.sum(v)) for k_, v in
              (("partitions", trace["round_partitions"]),
               ("vectors", trace["round_vectors"]),

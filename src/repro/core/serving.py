@@ -58,7 +58,8 @@ import numpy as np
 
 from ..faults import FaultInjector
 from ..kernels.ref import MASK_DIST
-from ..sanitize import TrackedLock, note_guarded
+from ..obs import Observability
+from ..sanitize import TrackedLock, note_guarded, observability_counters
 from . import aps as aps_mod
 from . import multiquery as mq
 from .cost_model import LatencyModel
@@ -224,6 +225,19 @@ class ServingConfig:
     scan_backoff_s: float = 0.001      # first-retry backoff; doubles per
                                        # attempt ...
     scan_backoff_max_s: float = 0.05   # ... up to this cap
+    # --- observability (repro.obs, docs/observability.md) ---
+    metrics: bool = True               # wire the Observability bundle
+                                       # (metrics registry + per-query
+                                       # trace spans + calibration
+                                       # tracker) into the runtime.  Off:
+                                       # every hook is a None check —
+                                       # results are byte-identical either
+                                       # way (a test asserts it)
+    trace_capacity: int = 1024         # completed trace spans retained in
+                                       # the tracer's ring buffer
+    calibration_window: int = 256      # rolling window (samples) for the
+                                       # predicted-vs-observed calibration
+                                       # error gauges
 
     def __post_init__(self) -> None:
         if self.flush_deadline is not None and self.flush_deadline <= 0:
@@ -273,6 +287,12 @@ class ServingConfig:
         if self.keep_checkpoints < 1:
             raise ValueError(f"keep_checkpoints must be >= 1 "
                              f"(got {self.keep_checkpoints})")
+        if self.trace_capacity < 1:
+            raise ValueError(f"trace_capacity must be >= 1 "
+                             f"(got {self.trace_capacity})")
+        if self.calibration_window < 1:
+            raise ValueError(f"calibration_window must be >= 1 "
+                             f"(got {self.calibration_window})")
 
 
 @dataclass
@@ -297,6 +317,10 @@ class QueryResult:
     latency_s: float = 0.0          # submit -> result wall time
     status: str = STATUS_OK         # terminal status (see above)
     error: str = ""                 # failure cause (FAILED only)
+    t_submit: float = 0.0           # admission clock value (trace spans)
+    batch: int = -1                 # coalesced admission group, -1 if
+                                    # the query never reached the
+                                    # scheduler (cache hit / shed)
 
 
 def calibrate_radius_resident(index: QuakeIndex, k: int,
@@ -771,9 +795,13 @@ class RoundScheduler:
                  clock: Optional[Callable[[], float]] = None,
                  faults: Optional[FaultInjector] = None,
                  scan_retries: int = 2, scan_backoff_s: float = 0.001,
-                 scan_backoff_max_s: float = 0.05):
+                 scan_backoff_max_s: float = 0.05, obs=None):
         self._lock = TrackedLock("RoundScheduler._lock")
         self._clock = clock or time.perf_counter
+        # repro.obs.Observability bundle or None; its locks rank after
+        # RoundScheduler._lock in sanitize.LOCK_ORDER, so recording from
+        # inside a locked step can never invert the order
+        self.obs = obs
         self.ex = executor
         self.index = executor.index
         self.k = k
@@ -817,6 +845,18 @@ class RoundScheduler:
         self.failed_batches = 0     # rounds whose scan exhausted retries
         self.scan_faults = 0        # scan attempts that raised
         self.scan_retries_used = 0  # backoff retries taken
+        # deferred hot-path observability: per-round samples accumulate
+        # here as plain appends under the already-held scheduler lock
+        # and drain through ``flush_obs`` in ONE registry update + ONE
+        # tracer emit per collect pass — even a batched TrackedLock
+        # acquisition per round is measurable against a ~100us query
+        # (the obs-overhead bench cell gates this path's cost)
+        self._obs_walls: List[float] = []
+        self._obs_parts = 0
+        self._obs_vecs = 0
+        self._obs_rounds: List[dict] = []
+        self._obs_flushes: List[dict] = []
+        self._cal_tick = 0
 
     def set_degradation(self, target: float,
                         probe_frac: Optional[float]) -> None:
@@ -881,6 +921,12 @@ class RoundScheduler:
             qn = np.sum(q.astype(np.float64) ** 2, axis=1)
             batch_id = self._batches
             self._batches += 1
+            if self.obs is not None:
+                # flush metadata for span synthesis: spans reference it
+                # through their batch id (QueryTracer.note_flushes)
+                # instead of paying a per-query flush event here
+                self._obs_flushes.append(
+                    {"batch": batch_id, "t": now, "n": b})
             eff_counts = []
             for i in range(b):
                 count = int(rplan.counts[i])
@@ -955,6 +1001,7 @@ class RoundScheduler:
         q_mat = np.stack([pq.q for pq in rows])
         if self.faults is not None:
             self.faults.stall("slow_round")   # injected straggler round
+        t_scan = self._clock()
         scan = self._scan_with_retry(q_mat, seq_mat, take, kept, rows)
         if scan is None:
             # retries exhausted: fail the affected in-flight batch —
@@ -974,17 +1021,43 @@ class RoundScheduler:
         ti = np.take_along_axis(cat_i, order, axis=1)
 
         took = take.any(axis=1)
+        takers = [] if self.obs is not None else None
         for i, pq in enumerate(rows):
             pq.scanned = scanned[i]
             pq.td = td[i]
             pq.ti = ti[i]
             pq.rounds += int(took[i])
+            if takers is not None and took[i]:
+                takers.append(pq.qid)
 
         self.rounds_run += 1
         self.round_streams.append(kept)
         self.partitions_streamed += st["partitions"]
         self.vectors_streamed += st["vectors"]
         self.comparisons += st["comparisons"]
+        if self.obs is not None:
+            t_now = self._clock()
+            dt_scan = t_now - t_scan
+            self._obs_walls.append(dt_scan)
+            self._obs_parts += int(st["partitions"])
+            self._obs_vecs += int(st["vectors"])
+            # predicted-vs-observed scan cost, sampled every 4th round
+            # (first round always): ``predict_scan_ns`` over the folded
+            # sizes is a numpy pass per call, and roughly-one-sample-
+            # per-flush keeps the rolling error just as live at a
+            # quarter of the cost
+            self._cal_tick += 1
+            if self._cal_tick % 4 == 1:
+                self.obs.calibration.record_scan(
+                    self.index.levels[0].sizes_of(kept), dt_scan)
+            # one metadata record per round — the taker qids are how
+            # spans recover per-round scan events at read time
+            # (QueryTracer.note_rounds); no per-query work here
+            self._obs_rounds.append({
+                "t": t_now, "round": self.rounds_run,
+                "partitions": int(st["partitions"]),
+                "vectors": int(st["vectors"]),
+                "wall_s": dt_scan, "takers": takers})
         if self.record_stats:
             parts, cnts = np.unique(seq_mat[take], return_counts=True)
             lvl0 = self.index.levels[0]
@@ -1122,7 +1195,8 @@ class RoundScheduler:
                 nprobe=int((scanned[i] & within[i]).sum()),
                 recall_estimate=0.0, rounds=pq.rounds,
                 latency_s=now - pq.t_submit,
-                status=STATUS_FAILED, error=err)
+                status=STATUS_FAILED, error=err,
+                t_submit=pq.t_submit, batch=pq.batch)
             self.failures += 1
             self.done.append((pq.qid, res, None, None))
         self.active = []
@@ -1158,7 +1232,8 @@ class RoundScheduler:
                     nprobe=int((scanned[i] & within[i]).sum()),
                     recall_estimate=pq.r_est, rounds=pq.rounds,
                     latency_s=now - pq.t_submit,
-                    status=status)
+                    status=status,
+                    t_submit=pq.t_submit, batch=pq.batch)
                 # PARTIAL results never enter the cache (the caller
                 # checks status): the footprint is still the plan's, so
                 # pass it along for telemetry, not for caching
@@ -1179,6 +1254,35 @@ class RoundScheduler:
     def drain(self) -> None:
         while self.step():
             pass
+
+    def flush_obs(self) -> None:
+        """Drain the deferred round/flush observability (accumulated by
+        the locked step and admit as plain appends) into ONE batched
+        registry update and the tracer's metadata streams.  The runtime
+        calls this on every collect pass — before terminal records are
+        closed, so span synthesis has the metadata its spans reference
+        — and from ``metrics_snapshot`` so snapshots never lag
+        in-flight rounds."""
+        if self.obs is None:
+            return
+        with self._lock:
+            note_guarded(self, "_obs_rounds")
+            walls, self._obs_walls = self._obs_walls, []
+            rounds, self._obs_rounds = self._obs_rounds, []
+            flushes, self._obs_flushes = self._obs_flushes, []
+            parts, vecs = self._obs_parts, self._obs_vecs
+            self._obs_parts = 0
+            self._obs_vecs = 0
+        if walls:
+            self.obs.metrics.update(
+                counters={"scheduler.rounds": len(walls),
+                          "scheduler.partitions_streamed": parts,
+                          "scheduler.vectors_streamed": vecs},
+                observations={"scheduler.round_wall_s": walls})
+        if flushes:
+            self.obs.tracer.note_flushes(flushes)
+        if rounds:
+            self.obs.tracer.note_rounds(rounds)
 
     def has_active(self) -> bool:
         with self._lock:
@@ -1289,6 +1393,16 @@ class ServingRuntime:
                 cost_drift=self.cfg.maint_cost_drift,
                 access_shift=self.cfg.maint_access_shift,
                 max_ops=self.cfg.maint_max_ops))
+        # observability bundle (repro.obs, docs/observability.md): the
+        # registry/tracer/calibration locks rank innermost in
+        # sanitize.LOCK_ORDER, so every hook below is legal under any
+        # runtime lock.  cfg.metrics=False leaves it None — every hook
+        # is then a None check and results are byte-identical
+        self.obs = (Observability(
+            lam=maintainer.lam,
+            trace_capacity=self.cfg.trace_capacity,
+            calibration_window=self.cfg.calibration_window)
+            if self.cfg.metrics else None)
         self.scheduler = RoundScheduler(
             self.executor, self.cfg.k, self.target,
             rounds=self.cfg.rounds, early_exit=self.cfg.early_exit,
@@ -1298,7 +1412,8 @@ class ServingRuntime:
             clock=self._clock, faults=faults,
             scan_retries=self.cfg.scan_retries,
             scan_backoff_s=self.cfg.scan_backoff_s,
-            scan_backoff_max_s=self.cfg.scan_backoff_max_s)
+            scan_backoff_max_s=self.cfg.scan_backoff_max_s,
+            obs=self.obs)
         # durability: WAL + checkpoint store (docs/durability.md).  The
         # attach writes a baseline checkpoint of the index as handed in;
         # fault injection arms only after that (startup is not a
@@ -1452,16 +1567,35 @@ class ServingRuntime:
                         if hit is not None:
                             self.cache_hits += 1
                             self._status_counts[STATUS_OK] += 1
+                            latency = self._clock() - now
                             self.results[qid] = QueryResult(
                                 ids=hit["ids"].copy(),
                                 dists=hit["dists"].copy(),
                                 nprobe=hit["nprobe"],
                                 recall_estimate=hit["recall_estimate"],
                                 from_cache=True,
-                                latency_s=self._clock() - now)
+                                latency_s=latency)
+                            if self.obs is not None:
+                                self.obs.metrics.observe(
+                                    "serving.latency_s", latency)
+                                self.obs.tracer.close_many(({
+                                    "qid": qid, "status": STATUS_OK,
+                                    "events": [
+                                        {"e": "admit", "t": now},
+                                        {"e": "cache_hit",
+                                         "t": now + latency},
+                                        {"e": "done",
+                                         "t": now + latency,
+                                         "status": STATUS_OK,
+                                         "cache": True,
+                                         "latency_s": latency}]},))
                             return qid
                     deadline = (None if deadline_s is None
                                 else now + deadline_s)
+                    # the admit trace event is deferred to flush time
+                    # (the queue entry carries the admit timestamp): a
+                    # per-submit tracer acquisition is measurable on the
+                    # hot path, a batched one at flush is not
                     self._queue.append((qid, q, now, deadline))
                     do_flush = len(self._queue) >= self.cfg.flush_size or (
                         self.cfg.flush_deadline is not None
@@ -1491,6 +1625,13 @@ class ServingRuntime:
             dists=np.full(self.cfg.k, np.inf, dtype=np.float64),
             recall_estimate=0.0, latency_s=now - t_submit,
             status=STATUS_SHED)
+        if self.obs is not None:
+            self.obs.tracer.close_many(({
+                "qid": qid, "status": STATUS_SHED,
+                "events": [
+                    {"e": "admit", "t": t_submit},
+                    {"e": "done", "t": now, "status": STATUS_SHED,
+                     "latency_s": now - t_submit}]},))
 
     def _cache_guarded(self, fn, *args, **kwargs):
         """One cache-backend call; a failure degrades the runtime to
@@ -1624,6 +1765,17 @@ class ServingRuntime:
                 if self.cfg.record_admissions:
                     self._admission_log.append(("q", tuple(qids)))
             self.scheduler.admit(qs, qids, ts, deadlines=dls)
+            if self.obs is not None:
+                # the queue-wait distribution lives in the registry;
+                # the span's admit/flush events are synthesized at read
+                # time from the terminal record's t_submit/batch and
+                # the scheduler's flush metadata — no per-query tracer
+                # work on this path
+                t_adm = self._clock()
+                waits = [t_adm - ft for ft in ts]
+                self.obs.metrics.update(
+                    counters={"serving.flushes": 1},
+                    observations={"serving.queue_wait_s": waits})
             self.maintenance.note_op()
         for _ in range(max(self.cfg.interleave_rounds, 0)):
             if not self.scheduler.step():
@@ -1696,6 +1848,12 @@ class ServingRuntime:
         self._collect()
 
     def _collect(self) -> None:
+        if self.obs is not None:
+            # deferred round events first, so a span that completes in
+            # this pass still reads admit -> flush -> round* -> done
+            self.scheduler.flush_obs()
+        done_lat, done_events = [], []
+        t_done = self._clock() if self.obs is not None else 0.0
         for qid, res, q, footprint in self.scheduler.take_done():
             with self._lock:
                 note_guarded(self, "results")
@@ -1704,6 +1862,15 @@ class ServingRuntime:
                 gen = self._admit_gen.pop(qid, None)
                 cache_on = (self.cache is not None
                             and not self._cache_disabled)
+            if self.obs is not None:
+                done_lat.append(res.latency_s)
+                # one compact DONE_FIELDS tuple per query — the span's
+                # admit/flush/round events are synthesized at read time
+                # from t_submit/batch and the scheduler metadata
+                done_events.append((
+                    qid, t_done, res.status, res.rounds, res.nprobe,
+                    float(res.recall_estimate), res.latency_s,
+                    res.t_submit, res.batch))
             # only OK results enter the cache: PARTIAL top-k is whatever
             # the budget allowed (serving it to a later identical query
             # would silently repeat the degradation), FAILED has no data
@@ -1712,6 +1879,12 @@ class ServingRuntime:
                     self.cache.put, q, self.cfg.k, res.ids, res.dists,
                     footprint, nprobe=res.nprobe,
                     recall_estimate=res.recall_estimate, gen=gen)
+        if self.obs is not None and done_events:
+            # batched post-loop recording: one registry and one tracer
+            # acquisition per collect pass, not per completed query
+            self.obs.metrics.update(
+                observations={"serving.latency_s": done_lat})
+            self.obs.tracer.close_many(done_events)
 
     def result(self, qid: int) -> Optional[QueryResult]:
         """The query's result, or None while it is still in flight."""
@@ -1816,6 +1989,22 @@ class ServingRuntime:
                                    "trigger", e)
                     return None
                 if rep is not None:
+                    if self.obs is not None:
+                        # maintenance-decision audit record: which
+                        # trigger fired and what the pass changed
+                        hist = self.maintenance.snapshot()["history"]
+                        reason = (hist[-1].get("reason", "forced")
+                                  if hist else "forced")
+                        reg = self.obs.metrics
+                        reg.inc(f"maintenance.trigger.{reason}")
+                        reg.inc("maintenance.splits", int(rep.splits))
+                        reg.inc("maintenance.merges", int(rep.merges))
+                        self.obs.tracer.audit("maintenance", {
+                            "t": self._clock(), "reason": reason,
+                            "splits": int(rep.splits),
+                            "merges": int(rep.merges),
+                            "cost_before": float(rep.cost_before),
+                            "cost_after": float(rep.cost_after)})
                     with self._lock:
                         self._invalidate_cache_locked()
                     if self.durability is not None \
@@ -1904,3 +2093,53 @@ class ServingRuntime:
         out["durability"] = (self.durability.stats()
                              if self.durability is not None else None)
         return out
+
+    def metrics_snapshot(self) -> dict:
+        """Unified exposition: one flat dict of every counter the stack
+        exposes, under stable dotted names (docs/observability.md pins
+        them; tests/test_observability.py carries the golden set).
+        Merges the federated ``stats()`` components (``serving.*``,
+        ``serving.status.*``, ``serving.governor.*``, ``maintenance.*``,
+        ``durability.*``), fault-injection arrival/trip counts
+        (``faults.*``), the sanitizer's compile/concurrency bridge
+        (``sanitize.*``), and — when ``cfg.metrics`` is on — the live
+        registry (histograms flattened to ``<name>.p50`` etc.) plus
+        tracer counters (``trace.*``).  Values are numbers only:
+        booleans become 0/1, lists/strings/None are dropped.  Renders
+        to Prometheus text via ``repro.obs.to_prometheus``."""
+        flat: dict = {}
+
+        def put(prefix, mapping):
+            for key, v in mapping.items():
+                name = f"{prefix}.{key}"
+                if isinstance(v, dict):
+                    put(name, v)
+                elif isinstance(v, bool):
+                    flat[name] = int(v)
+                elif isinstance(v, (int, float)):
+                    flat[name] = v
+
+        st = self.stats()
+        durability = st.pop("durability", None)
+        st.pop("maintenance_reasons", None)     # re-counted below
+        put("serving", {k: v for k, v in st.items()
+                        if k not in ("status_counts", "governor",
+                                     "maintenance_runs")})
+        put("serving.status", st.get("status_counts", {}))
+        put("serving.governor", st.get("governor", {}))
+        maint = self.maintenance.snapshot()
+        flat["maintenance.runs"] = maint["runs"]
+        flat["maintenance.ops_since"] = maint["ops_since"]
+        for reason in maint["reasons"]:
+            key = f"maintenance.trigger.{reason}"
+            flat[key] = flat.get(key, 0) + 1
+        if durability:
+            put("durability", durability)
+        if self._faults is not None:
+            put("faults", self._faults.counters())
+        put("sanitize", observability_counters())
+        if self.obs is not None:
+            self.scheduler.flush_obs()  # don't lag in-flight rounds
+            put("trace", self.obs.tracer.counters())
+            flat.update(self.obs.metrics.snapshot())
+        return flat

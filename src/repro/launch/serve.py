@@ -17,6 +17,7 @@ against).
 from __future__ import annotations
 
 import argparse
+import json
 import time
 
 import numpy as np
@@ -26,6 +27,7 @@ from ..core import (LatencyModel, Maintainer, QuakeConfig, QuakeIndex,
 from ..data import wikipedia
 from ..data.workload import IncrementalGroundTruth
 from ..faults import FaultInjector
+from ..obs import summarize, to_prometheus
 
 
 def parse_fault_spec(spec: str, seed: int = 0) -> FaultInjector:
@@ -41,10 +43,24 @@ def parse_fault_spec(spec: str, seed: int = 0) -> FaultInjector:
     return FaultInjector(seed=seed, rates=rates)
 
 
+def _recall_rows(ids_rows, gt: np.ndarray, k: int) -> list:
+    return [len(set(np.asarray(ids).tolist()) & set(gt[i].tolist())) / k
+            for i, ids in enumerate(ids_rows)]
+
+
 def _recall(ids_rows, gt: np.ndarray, k: int) -> float:
-    return float(np.mean([
-        len(set(np.asarray(ids).tolist()) & set(gt[i].tolist())) / k
-        for i, ids in enumerate(ids_rows)]))
+    return float(np.mean(_recall_rows(ids_rows, gt, k)))
+
+
+def dump_metrics(rt: ServingRuntime, path: str) -> None:
+    """Write the unified metrics snapshot as JSON plus a sibling
+    ``<path>.prom`` in Prometheus text exposition format."""
+    flat = rt.metrics_snapshot()
+    with open(path, "w") as f:
+        json.dump(flat, f, indent=2, sort_keys=True)
+        f.write("\n")
+    with open(path + ".prom", "w") as f:
+        f.write(to_prometheus(flat))
 
 
 def _warm_runtime(index, wl, scfg: ServingConfig) -> None:
@@ -73,7 +89,10 @@ def _warm_runtime(index, wl, scfg: ServingConfig) -> None:
 def replay_runtime(wl, cfg: QuakeConfig, scfg: ServingConfig,
                    verbose: bool = True, warm: bool = False,
                    settle: bool = False,
-                   faults: FaultInjector | None = None) -> dict:
+                   faults: FaultInjector | None = None,
+                   metrics_out: str | None = None,
+                   trace_out: str | None = None,
+                   metrics_every: int = 16) -> dict:
     """Replay a workload through the serving runtime; returns the summary
     dict ``bench_serving`` consumes (wall-clock excludes ground truth;
     ``warm=True`` pre-compiles the jitted shapes so the measurement is
@@ -125,26 +144,44 @@ def replay_runtime(wl, cfg: QuakeConfig, scfg: ServingConfig,
             serve_s += dt
             n_queries += len(q)
             res = [rt.result(i) for i in qids]
-            rec = _recall([r.ids for r in res], gt, k)
+            per_q = _recall_rows([r.ids for r in res], gt, k)
+            rec = float(np.mean(per_q))
             recalls.append(rec)
             latencies.extend(r.latency_s for r in res)
+            if rt.obs is not None:
+                # calibration telemetry: the runtime's APS-style recall
+                # estimate vs incremental-ground-truth recall, per query
+                for r, true_rec in zip(res, per_q):
+                    if np.isfinite(r.recall_estimate):
+                        rt.obs.calibration.record_recall(
+                            r.recall_estimate, true_rec)
             if verbose:
                 hits = sum(r.from_cache for r in res)
                 print(f"[{t:3d}] query  {len(q):6d}  "
                       f"{dt/len(q)*1e6:7.0f}us/q  recall={rec:.3f}  "
                       f"cache={hits}/{len(q)}  "
                       f"parts={index.num_partitions}")
+        if metrics_out and (t + 1) % max(metrics_every, 1) == 0:
+            dump_metrics(rt, metrics_out)   # periodic exposition flush
     rt.drain()
     st = rt.stats()
+    if metrics_out:
+        dump_metrics(rt, metrics_out)
+    if trace_out and rt.obs is not None:
+        rt.obs.tracer.dump_jsonl(trace_out)
+    cal = None
+    if rt.obs is not None:
+        cal = {"latency_rel_err": rt.obs.calibration.latency_error(),
+               "recall_abs_err": rt.obs.calibration.recall_error()}
     rt.close()                    # join the deadline ticker, if configured
-    lat = np.asarray(latencies) if latencies else np.zeros(1)
+    lat = summarize(latencies)    # the repo-wide shared percentile path
     out = {"mode": "runtime", "serve_s": round(serve_s, 3),
            "n_queries": n_queries,
            "qps": round(n_queries / max(serve_s, 1e-9), 1),
            "mean_recall": round(float(np.mean(recalls)), 4)
            if recalls else None,
-           "p50_latency_us": round(float(np.percentile(lat, 50)) * 1e6, 1),
-           "p99_latency_us": round(float(np.percentile(lat, 99)) * 1e6, 1),
+           "p50_latency_us": round(lat["p50"] * 1e6, 1),
+           "p99_latency_us": round(lat["p99"] * 1e6, 1),
            "final_partitions": index.num_partitions,
            "maintenance_runs": st["maintenance_runs"],
            "maintenance_reasons": st["maintenance_reasons"],
@@ -153,6 +190,8 @@ def replay_runtime(wl, cfg: QuakeConfig, scfg: ServingConfig,
            "rounds_run": st["rounds_run"],
            "status_counts": dict(st["status_counts"]),
            "queries_shed": st["queries_shed"]}
+    if cal is not None:
+        out["calibration"] = cal
     if faults is not None or st["maintenance_failures"] or \
             st["cache_disabled"] or st["ticker_errors"]:
         out["failure_telemetry"] = {
@@ -172,6 +211,9 @@ def replay_runtime(wl, cfg: QuakeConfig, scfg: ServingConfig,
               f"cache_hits={st['cache_hits']} "
               f"riding_savings={st['riding_savings']} "
               f"statuses={dict(st['status_counts'])}")
+        if cal is not None:
+            print(f"calibration: latency_rel_err={cal['latency_rel_err']} "
+                  f"recall_abs_err={cal['recall_abs_err']}")
         if "failure_telemetry" in out:
             print(f"failure telemetry: {out['failure_telemetry']}")
     return out
@@ -229,14 +271,14 @@ def replay_per_op(wl, cfg: QuakeConfig, k: int, verbose: bool = True,
             t0 = time.perf_counter()
             maintainer.run()
             serve_s += time.perf_counter() - t0
-    lat = np.asarray(latencies) if latencies else np.zeros(1)
+    lat = summarize(latencies)    # the repo-wide shared percentile path
     out = {"mode": "per_op", "serve_s": round(serve_s, 3),
            "n_queries": n_queries,
            "qps": round(n_queries / max(serve_s, 1e-9), 1),
            "mean_recall": round(float(np.mean(recalls)), 4)
            if recalls else None,
-           "p50_latency_us": round(float(np.percentile(lat, 50)) * 1e6, 1),
-           "p99_latency_us": round(float(np.percentile(lat, 99)) * 1e6, 1),
+           "p50_latency_us": round(lat["p50"] * 1e6, 1),
+           "p99_latency_us": round(lat["p99"] * 1e6, 1),
            "final_partitions": index.num_partitions}
     if verbose:
         print(f"done. qps={out['qps']} recall={out['mean_recall']} "
@@ -289,6 +331,19 @@ def main(argv=None) -> None:
                     help="recover the index from --wal-dir (newest valid "
                          "checkpoint + WAL replay), print the recovery "
                          "report, and exit")
+    # observability exposition (docs/observability.md)
+    ap.add_argument("--metrics-out", default=None, metavar="PATH",
+                    help="dump the unified metrics snapshot as JSON to "
+                         "PATH (plus PATH.prom in Prometheus text "
+                         "format), refreshed periodically during the "
+                         "replay and once at the end")
+    ap.add_argument("--metrics-every", type=int, default=16,
+                    help="refresh --metrics-out every N workload ops")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="dump the query-trace ring buffer as JSON-lines")
+    ap.add_argument("--no-metrics", action="store_true",
+                    help="disable the metrics registry / tracer / "
+                         "calibration tracker entirely")
     args = ap.parse_args(argv)
 
     if args.recover:
@@ -328,13 +383,16 @@ def main(argv=None) -> None:
         cache_tol=args.cache_tol,
         deadline_s=args.deadline_s, queue_cap=args.queue_cap,
         queue_policy=args.queue_policy, govern=args.govern,
-        wal_dir=args.wal_dir, fsync=args.fsync)
+        wal_dir=args.wal_dir, fsync=args.fsync,
+        metrics=not args.no_metrics)
     if args.no_maintenance:
         scfg.maint_min_ops = 10 ** 9      # triggers never reach min_ops
         scfg.maint_max_ops = None
     faults = (parse_fault_spec(args.faults, seed=args.fault_seed)
               if args.faults else None)
-    replay_runtime(wl, cfg, scfg, faults=faults)
+    replay_runtime(wl, cfg, scfg, faults=faults,
+                   metrics_out=args.metrics_out, trace_out=args.trace_out,
+                   metrics_every=args.metrics_every)
 
 
 if __name__ == "__main__":

@@ -55,7 +55,7 @@ __all__ = ["compile_count", "compile_events", "sanitized",
            "assert_compile_budget", "BUDGET_PATH",
            "LOCK_ORDER", "TrackedLock", "LockOrderWatchdog",
            "ConcurrencyEvents", "concurrency_counters", "note_guarded",
-           "guarded_by"]
+           "guarded_by", "observability_counters"]
 
 BUDGET_PATH = Path(__file__).resolve().parents[2] / "results" \
     / "compile_budget.json"
@@ -194,6 +194,13 @@ LOCK_ORDER: Tuple[str, ...] = (
     "RoundScheduler._lock",
     "ResultCache._lock",
     "MaintenanceScheduler._lock",
+    # observability locks rank innermost: recording a metric, emitting a
+    # trace event, or folding a calibration sample must be legal while
+    # holding any runtime lock, and never the other way around
+    # (docs/observability.md)
+    "QueryTracer._lock",
+    "CalibrationTracker._lock",
+    "MetricsRegistry._lock",
 )
 _LOCK_RANK = {name: i for i, name in enumerate(LOCK_ORDER)}
 
@@ -236,6 +243,16 @@ def concurrency_violations() -> List[str]:
     """The recorded violation messages (bounded buffer)."""
     with _cc_lock:
         return list(_cc_violations)
+
+
+def observability_counters() -> Dict[str, int]:
+    """Bridge for ``ServingRuntime.metrics_snapshot()``: the sanitizer's
+    compile-event and concurrency counters as one flat dict, so XLA
+    recompiles and lock-order violations surface under the same dotted
+    namespace as the serving metrics (docs/observability.md)."""
+    out: Dict[str, int] = dict(concurrency_counters())
+    out["compile_count"] = compile_count()
+    return out
 
 
 class TrackedLock:

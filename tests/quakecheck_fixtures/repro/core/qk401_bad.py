@@ -1,0 +1,15 @@
+"""Seeded-bad fixture for QK401: wall-clock reads and stdout writes in
+a core runtime path.  Latency measured with ``time.time()`` shears under
+NTP adjustment and is untestable under a fake clock, and ``print()``
+from the serving hot path bypasses the metrics/trace layer."""
+import time
+
+
+def measure(scan):
+    t0 = time.time()                     # QK401: wall clock
+    scan()
+    return time.time() - t0              # QK401: wall clock
+
+
+def report(stats):
+    print("rounds:", stats["rounds"])    # QK401: stdout from runtime path

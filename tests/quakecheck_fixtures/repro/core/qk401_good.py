@@ -1,0 +1,19 @@
+"""Known-good twin of qk401_bad.py: durations come from the injectable
+monotonic clock, reporting goes through the metrics registry, and the
+one legitimate wall-clock read carries an allow-wallclock pragma."""
+import time
+
+
+def measure(scan, clock=time.perf_counter):
+    t0 = clock()
+    scan()
+    return clock() - t0
+
+
+def report(stats, registry):
+    registry.inc("scheduler.rounds", stats["rounds"])
+
+
+def manifest_stamp():
+    # quakecheck: allow-wallclock(checkpoint manifests carry a real date)
+    return time.time()

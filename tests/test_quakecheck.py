@@ -29,6 +29,7 @@ def rules_in(path):
     ("QK204", "qk204_bad.py", "qk204_good.py"),
     ("QK301", "repro/qk301_bad.py", "repro/qk301_good.py"),
     ("QK302", "durability/qk302_bad.py", "durability/qk302_good.py"),
+    ("QK401", "repro/core/qk401_bad.py", "repro/core/qk401_good.py"),
 ])
 def test_rule_flags_bad_passes_good(rule, bad, good):
     assert rules_in(FIXTURES / bad) == [rule]
@@ -50,6 +51,8 @@ def test_bad_fixtures_have_expected_counts():
     # qk302_bad: unsynced append + manifest open that is both unsynced
     # and written in place
     assert len(lint_paths([str(FIXTURES / "durability/qk302_bad.py")])) == 3
+    # qk401_bad: two time.time() reads + one print()
+    assert len(lint_paths([str(FIXTURES / "repro/core/qk401_bad.py")])) == 3
 
 
 def test_qk100_reasonless_allow_sync():
@@ -87,11 +90,25 @@ def test_qk100_reasonless_allow_nosync():
         == ["QK100"]
 
 
+def test_qk100_reasonless_allow_wallclock():
+    # an allow-wallclock with no reason is itself a finding, and it does
+    # not suppress the wall-clock read it sits on (mirrors allow-sync)
+    src = ("import time\n"
+           "def stamp():\n"
+           "    return time.time()  # quakecheck: allow-wallclock()\n")
+    rules = sorted({f.rule for f in
+                    lint_source(src, "src/repro/core/serving.py")})
+    assert rules == ["QK100", "QK401"]
+    # outside a core runtime path the rule stays silent (pragma still bad)
+    assert sorted({f.rule for f in lint_source(src, "bench/t.py")}) \
+        == ["QK100"]
+
+
 def test_fixture_dir_as_a_whole():
     findings = lint_paths([str(FIXTURES)])
     assert {f.rule for f in findings} == \
         {"QK100", "QK101", "QK102", "QK103", "QK104", "QK105",
-         "QK201", "QK202", "QK203", "QK204", "QK301", "QK302"}
+         "QK201", "QK202", "QK203", "QK204", "QK301", "QK302", "QK401"}
     assert all("good" not in f.path for f in findings)
 
 

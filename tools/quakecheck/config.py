@@ -86,6 +86,10 @@ GUARDED_STATE = {
     "RoundScheduler": {"active", "done", "_epoch_key", "_snap",
                        "round_streams", "plan_footprints"},
     "PartitionStats": {"hits", "window"},
+    # observability layer (src/repro/obs, docs/observability.md)
+    "MetricsRegistry": {"_counters", "_gauges", "_histograms"},
+    "QueryTracer": {"_open", "_ring"},
+    "CalibrationTracker": {"_lat_err", "_rec_err"},
 }
 # Attribute names that are guarded under *any* owner (the linter cannot
 # infer types, so a guarded-name mutation through a non-self base is
@@ -141,6 +145,16 @@ GUARDED_BY = {
         "ops_since": "_lock", "history": "_lock", "_last_version": "_lock",
         "_last_cost": "_lock", "_last_freqs": "_lock",
     },
+    "MetricsRegistry": {
+        "_counters": "_lock", "_gauges": "_lock", "_histograms": "_lock",
+    },
+    "QueryTracer": {
+        "_open": "_lock", "_ring": "_lock",
+        "emitted": "_lock", "dropped": "_lock",
+    },
+    "CalibrationTracker": {
+        "_lat_err": "_lock", "_rec_err": "_lock",
+    },
 }
 
 # Declared global lock partial order (qualified names, outermost first).
@@ -153,6 +167,11 @@ LOCK_ORDER = [
     "RoundScheduler._lock",
     "ResultCache._lock",
     "MaintenanceScheduler._lock",
+    # observability locks rank innermost: recording under any runtime
+    # lock is legal, the reverse never is (docs/observability.md)
+    "QueryTracer._lock",
+    "CalibrationTracker._lock",
+    "MetricsRegistry._lock",
 ]
 
 # Locks on the admission fast path: holding one of these across a
@@ -177,6 +196,9 @@ INSTANCE_ATTRS = {
     "scheduler": "RoundScheduler",
     "cache": "ResultCache",
     "maintenance": "MaintenanceScheduler",
+    "metrics": "MetricsRegistry",
+    "tracer": "QueryTracer",
+    "calibration": "CalibrationTracker",
 }
 
 # --------------------------------------------------------------------------
@@ -187,6 +209,21 @@ INSTANCE_ATTRS = {
 # counted, degraded-to, retried, or documented with
 # ``# quakecheck: allow-swallow(<why>)``.
 SWALLOW_DIR_FRAGMENT = "repro"
+
+# --------------------------------------------------------------------------
+# QK401 — wall-clock / stdout discipline in core runtime paths
+# (docs/observability.md).  Scope: paths with both a "repro" and a "core"
+# component (src/repro/core and the fixture twins).  In scope,
+# ``time.time()`` and ``print()`` are forbidden: runtime code reads the
+# injectable monotonic clock (the ``clock`` parameter on ServingRuntime /
+# RoundScheduler / run_round_loop, default ``time.perf_counter``) and
+# reports through the metrics registry / trace emitter, so fake-clock
+# tests stay deterministic and the serving hot path never writes to
+# stdout.  Documented exceptions carry
+# ``# quakecheck: allow-wallclock(<why>)``.
+RUNTIME_CORE_FRAGMENT = "core"
+WALLCLOCK_CALLS = {"time.time"}      # dotted call names (plus bare `time`)
+STDOUT_CALLS = {"print"}             # bare call names
 
 # --------------------------------------------------------------------------
 # QK302 — durability I/O discipline (docs/durability.md)
@@ -211,6 +248,7 @@ MANIFEST_HINTS = ("manifest", "ckpt", "checkpoint")
 # the lock can tear a *snapshot* but can never leak a mutable alias, so
 # QK204 (escaping reference) skips them.
 SCALAR_GUARDED = {
+    "emitted", "dropped",
     "_cache_version", "_maintaining", "_next_qid", "_next_eid",
     "_epoch_key", "hits", "misses", "invalidated", "stale_puts",
     "queries_submitted", "cache_hits", "write_ops", "ops_since",

@@ -40,6 +40,7 @@ RULES = {
     "QK204": "guarded mutable state escapes its lock scope",
     "QK301": "swallowed exception in runtime path",
     "QK302": "durability write without fsync / atomic-rename discipline",
+    "QK401": "wall-clock read or print() in core runtime path",
 }
 
 
@@ -1319,6 +1320,49 @@ def check_qk302(tree: ast.AST, path: str, pragmas: FilePragmas,
 
 
 # ---------------------------------------------------------------------------
+# QK401 — wall-clock / stdout discipline (docs/observability.md).  Scoped
+# to core runtime paths (a "repro" and a "core" path component): latency
+# accounting must come from the injectable monotonic clock so fake-clock
+# tests stay deterministic, and the serving hot path reports through the
+# metrics registry / trace emitter, never stdout.  Documented exceptions
+# carry # quakecheck: allow-wallclock(<why>).
+# ---------------------------------------------------------------------------
+
+def check_qk401(tree: ast.AST, path: str, pragmas: FilePragmas,
+                findings: List[Finding]) -> None:
+    parts = path.replace(os.sep, "/").split("/")
+    if (config.SWALLOW_DIR_FRAGMENT not in parts
+            or config.RUNTIME_CORE_FRAGMENT not in parts):
+        return
+
+    def flag(node, msg):
+        if pragmas.disabled(node.lineno, "QK401"):
+            return
+        if pragmas.allows_wallclock(node.lineno):
+            return
+        findings.append(Finding("QK401", path, node.lineno,
+                                node.col_offset, msg))
+
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        name = dotted(node.func)
+        if name in config.WALLCLOCK_CALLS or (
+                isinstance(node.func, ast.Name) and node.func.id == "time"):
+            flag(node, "wall-clock read in a core runtime path — take the "
+                       "injectable monotonic clock (the `clock` parameter, "
+                       "default time.perf_counter) so fake-clock tests and "
+                       "latency accounting stay deterministic, or document "
+                       "with # quakecheck: allow-wallclock(<why>)")
+        elif (isinstance(node.func, ast.Name)
+                and node.func.id in config.STDOUT_CALLS):
+            flag(node, "print() in a core runtime path — report through "
+                       "the metrics registry / trace emitter "
+                       "(docs/observability.md), or document with "
+                       "# quakecheck: allow-wallclock(<why>)")
+
+
+# ---------------------------------------------------------------------------
 # QK100 — malformed pragmas
 # ---------------------------------------------------------------------------
 
@@ -1342,6 +1386,12 @@ def check_qk100(path: str, pragmas: FilePragmas,
                 "allow-nosync pragma without a reason — intentional "
                 "unsynced writes must be documented: "
                 "# quakecheck: allow-nosync(<why>)"))
+        if p.allow_wallclock and not p.allow_wallclock_reason.strip():
+            findings.append(Finding(
+                "QK100", path, line, 0,
+                "allow-wallclock pragma without a reason — intentional "
+                "wall-clock reads must be documented: "
+                "# quakecheck: allow-wallclock(<why>)"))
         if p.bad_holds:
             findings.append(Finding(
                 "QK100", path, line, 0,
@@ -1370,6 +1420,7 @@ def lint_source(source: str, path: str,
     check_qk2xx(tree, path, pragmas, findings)
     check_qk301(tree, path, pragmas, findings)
     check_qk302(tree, path, pragmas, findings)
+    check_qk401(tree, path, pragmas, findings)
     if select:
         # prefix match: --select QK2 picks the whole QK2xx family
         findings = [f for f in findings

@@ -21,6 +21,12 @@ line a standalone pragma comment precedes):
       crash's half-written state.  The reason is mandatory; a reasonless
       allow-nosync is itself a finding (QK100).
 
+  ``# quakecheck: allow-wallclock(<reason>)``
+      Documents an intentional wall-clock read or stdout write in a core
+      runtime path (QK401 only) — e.g. stamping a checkpoint manifest
+      with a real date.  The reason is mandatory; a reasonless
+      allow-wallclock is itself a finding (QK100).
+
   ``# quakecheck: disable=QK102,QK105(<reason>)``
       Suppresses the listed rules on the line.  Reason optional but
       encouraged.
@@ -51,6 +57,8 @@ _ALLOW_SWALLOW = re.compile(
     r"#\s*quakecheck:\s*allow-swallow\s*(?:\((?P<reason>[^)]*)\))?")
 _ALLOW_NOSYNC = re.compile(
     r"#\s*quakecheck:\s*allow-nosync\s*(?:\((?P<reason>[^)]*)\))?")
+_ALLOW_WALLCLOCK = re.compile(
+    r"#\s*quakecheck:\s*allow-wallclock\s*(?:\((?P<reason>[^)]*)\))?")
 _DISABLE = re.compile(r"#\s*quakecheck:\s*disable\s*=\s*(?P<rules>[A-Z0-9, ]+)"
                       r"\s*(?:\((?P<reason>[^)]*)\))?")
 _DEVICE_PATH = re.compile(r"#\s*quakecheck:\s*device-path\b")
@@ -65,6 +73,8 @@ class LinePragmas:
     allow_swallow_reason: str = ""
     allow_nosync: bool = False
     allow_nosync_reason: str = ""
+    allow_wallclock: bool = False
+    allow_wallclock_reason: str = ""
     disabled: Set[str] = field(default_factory=set)
     device_path: bool = False
     holds: Set[str] = field(default_factory=set)
@@ -101,6 +111,14 @@ class FilePragmas:
     def bad_allow_nosync(self, lineno: int) -> bool:
         p = self._line(lineno)
         return p.allow_nosync and not p.allow_nosync_reason.strip()
+
+    def allows_wallclock(self, lineno: int) -> bool:
+        p = self._line(lineno)
+        return p.allow_wallclock and bool(p.allow_wallclock_reason.strip())
+
+    def bad_allow_wallclock(self, lineno: int) -> bool:
+        p = self._line(lineno)
+        return p.allow_wallclock and not p.allow_wallclock_reason.strip()
 
     def disabled(self, lineno: int, rule: str) -> bool:
         return rule in self._line(lineno).disabled
@@ -159,6 +177,9 @@ def parse_pragmas(source: str) -> FilePragmas:
         if pragma.allow_nosync:
             cur.allow_nosync = True
             cur.allow_nosync_reason = pragma.allow_nosync_reason
+        if pragma.allow_wallclock:
+            cur.allow_wallclock = True
+            cur.allow_wallclock_reason = pragma.allow_wallclock_reason
         cur.disabled |= pragma.disabled
         cur.device_path = cur.device_path or pragma.device_path
         cur.holds |= pragma.holds
@@ -185,6 +206,11 @@ def _parse_comment(text: str) -> LinePragmas | None:
     if m:
         out.allow_nosync = True
         out.allow_nosync_reason = (m.group("reason") or "").strip()
+        hit = True
+    m = _ALLOW_WALLCLOCK.search(text)
+    if m:
+        out.allow_wallclock = True
+        out.allow_wallclock_reason = (m.group("reason") or "").strip()
         hit = True
     m = _DISABLE.search(text)
     if m:
